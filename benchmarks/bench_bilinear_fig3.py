@@ -1,0 +1,45 @@
+"""Paper Fig. 3 reproduction: bilinear tile sweep x scales x 2 GPU models.
+
+The paper measured wall-clock on a GTX260 and a GeForce 8800 GTS for an
+800x800 source upscaled by 2/4/6/8/10 across CUDA block dims. We evaluate
+the same sweep through the cost model calibrated with their Table I
+descriptors, and report the same qualitative results (see
+tests/test_paper_claims.py for the pinned assertions).
+
+CSV: scale,gpu,tile_wxh,cost_ms,is_best
+"""
+import itertools
+
+import repro.kernels.bilinear.ops  # noqa: F401
+from repro.core import Autotuner, GEFORCE_8800GTS, GTX260
+from repro.core.tiling import TileShape
+
+SWEEP = [TileShape((h, w)) for h, w in itertools.product((4, 8, 16, 32),
+                                                         repeat=2)]
+SCALES = (2, 4, 6, 8, 10)
+
+
+def run(print_fn=print):
+    at = Autotuner()
+    print_fn("scale,gpu,tile,cost_ms,is_best")
+    summary = {}
+    for scale in SCALES:
+        prob = dict(src_h=800, src_w=800, scale=scale)
+        for hw in (GTX260, GEFORCE_8800GTS):
+            res = at.sweep("bilinear_cuda", prob, "float32", hw, tiles=SWEEP)
+            best = res.best.tile
+            summary[(scale, hw.name)] = (best, res.best.score,
+                                         res.sensitivity())
+            for e in sorted(res.entries, key=lambda e: e.tile):
+                print_fn(
+                    f"{scale},{hw.name},{e.tile[1]}x{e.tile[0]},"
+                    f"{e.score * 1e3:.3f},{int(e.tile == best)}"
+                )
+    print_fn("# summary: scale gpu best_tile(WxH) best_ms sensitivity")
+    for (scale, gpu), (t, s, sens) in summary.items():
+        print_fn(f"# {scale} {gpu} {t[1]}x{t[0]} {s*1e3:.2f} {sens:.2f}")
+    return summary
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,80 @@
+"""Kernel micro-benchmarks: wall-clock of the jnp reference paths on CPU
+(the Pallas kernels target TPU; interpret-mode timing is not meaningful),
+plus the analytic v5e cost of the autotuned tile for each kernel.
+
+CSV: name,us_per_call,derived
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.kernels.bilinear.ops as bops
+import repro.kernels.flash_attention.ops  # noqa: F401
+import repro.kernels.matmul.ops  # noqa: F401
+import repro.kernels.rglru.ops  # noqa: F401
+import repro.kernels.ssd.ops  # noqa: F401
+from repro.core import Autotuner, TPU_V5E
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.matmul.ref import matmul_ref
+from repro.kernels.rglru.ref import rglru_ref
+from repro.kernels.ssd.ref import ssd_chunked_ref
+
+
+def _time(fn, *args, n=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(print_fn=print):
+    key = jax.random.PRNGKey(0)
+    at = Autotuner()
+    rows = []
+
+    src = jax.random.uniform(key, (256, 256), jnp.float32)
+    us = _time(jax.jit(lambda s: bops.upscale_ref(s, 4)), src)
+    t = at.best_tile("bilinear", dict(src_h=256, src_w=256, scale=4),
+                     "float32", TPU_V5E)
+    rows.append(("bilinear_ref_cpu_256x4", us, f"v5e_tile={t}"))
+
+    a = jax.random.normal(key, (512, 512), jnp.bfloat16)
+    b = jax.random.normal(key, (512, 512), jnp.bfloat16)
+    us = _time(jax.jit(matmul_ref), a, b)
+    t = at.best_tile("matmul", dict(m=512, k=512, n=512), "bfloat16", TPU_V5E)
+    rows.append(("matmul_ref_cpu_512", us, f"v5e_tile={t}"))
+
+    q = jax.random.normal(key, (1, 4, 512, 64), jnp.float32)
+    us = _time(
+        lambda q: flash_attention_ref(q, q, q, causal=True, chunk=128), q)
+    t = at.best_tile("flash_attention",
+                     dict(sq=512, skv=512, d=64, hq=4, hkv=4, window=0),
+                     "bfloat16", TPU_V5E)
+    rows.append(("flash_ref_cpu_512", us, f"v5e_tile={t}"))
+
+    x = jax.random.normal(key, (2, 512, 512), jnp.float32)
+    r = jax.nn.sigmoid(x)
+    ap = jax.random.normal(key, (512,))
+    us = _time(jax.jit(lambda x, r, ap: rglru_ref(x, r, r, ap)[0]), x, r, ap)
+    t = at.best_tile("rglru", dict(s=512, f=512), "bfloat16", TPU_V5E)
+    rows.append(("rglru_ref_cpu_512", us, f"v5e_tile={t}"))
+
+    xs = jax.random.normal(key, (1, 256, 4, 32), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(key, (1, 256, 4)))
+    A = -jnp.exp(jax.random.normal(key, (4,)))
+    Bm = jax.random.normal(key, (1, 256, 16)) * 0.5
+    us = _time(
+        lambda *a: ssd_chunked_ref(*a, chunk=64)[0], xs, dt, A, Bm, Bm)
+    t = at.best_tile("ssd", dict(s=256, h=4, p=32, n=16), "bfloat16", TPU_V5E)
+    rows.append(("ssd_ref_cpu_256", us, f"v5e_tile={t}"))
+
+    print_fn("name,us_per_call,derived")
+    for name, us, extra in rows:
+        print_fn(f"{name},{us:.1f},{extra}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Paper Fig. 4 reproduction: wide vs tall tiles at fixed thread count.
+
+The paper's Fig. 4 compares a 4x8 and an 8x4 arrangement of 32 threads:
+crossing fewer image rows (wider along x) is faster. We sweep width/height
+factorizations of 32, 128 and 512 threads on both GPU models.
+
+CSV: gpu,threads,tile_wxh,cost_ms
+"""
+import repro.kernels.bilinear.ops  # noqa: F401
+from repro.core import GEFORCE_8800GTS, GTX260, estimate
+from repro.core import registry
+from repro.core.tiling import TileShape
+
+
+def run(print_fn=print):
+    spec = registry.get("bilinear_cuda")
+    prob = dict(src_h=800, src_w=800, scale=8)
+    print_fn("gpu,threads,tile,cost_ms")
+    out = {}
+    for hw in (GTX260, GEFORCE_8800GTS):
+        for threads in (32, 128, 512):
+            rows = []
+            w = 4
+            while w <= min(threads, 512):
+                h = threads // w
+                if h >= 1 and w * h == threads:
+                    t = TileShape((h, w))
+                    c = estimate(hw, spec.workload(t, prob, "float32"),
+                                 spec.n_tiles(t, prob), 0.0).total_s
+                    rows.append((w, h, c))
+                    print_fn(f"{hw.name},{threads},{w}x{h},{c*1e3:.3f}")
+                w *= 2
+            out[(hw.name, threads)] = rows
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,93 @@
+"""Regenerate the auto tables in EXPERIMENTS.md from dryrun_results/.
+
+Rewrites the blocks between the AUTO-DRYRUN / AUTO-ROOFLINE markers.
+Usage: PYTHONPATH=src python -m benchmarks.gen_experiments
+"""
+import glob
+import json
+import os
+import re
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+RESULTS = os.path.join(ROOT, "dryrun_results")
+EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+
+
+def load(tag=""):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        has_tag = len(parts) == 3 and "." in parts[2]
+        if tag and not base.endswith("." + tag):
+            continue
+        if not tag and has_tag:
+            continue
+        with open(path) as f:
+            rows.append(json.load(f))
+    key = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], key.get(r["shape"], 9), r["mesh"]))
+    return rows
+
+
+def dryrun_table():
+    lines = [
+        "| arch | shape | mesh | status | mb | compile_s | peak GiB | fits |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load():
+        if r["status"] == "ok":
+            m = r["memory"]
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+                f"| {r.get('microbatches', 1)} | {r['compile_s']} "
+                f"| {m['peak_bytes']/2**30:.2f} | {'Y' if m['fits'] else 'N'} |")
+        elif r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | skipped "
+                f"| — | — | — | — |")
+        else:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR "
+                f"| — | — | — | — |")
+    return "\n".join(lines)
+
+
+def roofline_table():
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant "
+        "| roofline frac | useful ratio |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load():
+        if r["status"] != "ok" or r["mesh"] != "single":
+            continue
+        f = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {f['compute_s']:.4g} "
+            f"| {f['memory_s']:.4g} | {f['collective_s']:.4g} "
+            f"| {f['dominant']} | {f['roofline_fraction']:.3f} "
+            f"| {f['useful_flops_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def replace_block(text, marker, payload):
+    pat = re.compile(
+        rf"(<!-- AUTO-{marker} -->\n).*?(\n<!-- /AUTO-{marker} -->)",
+        re.DOTALL)
+    return pat.sub(lambda m: m.group(1) + payload + m.group(2), text)
+
+
+def main():
+    with open(EXP) as f:
+        text = f.read()
+    text = replace_block(text, "DRYRUN", dryrun_table())
+    text = replace_block(text, "ROOFLINE", roofline_table())
+    with open(EXP, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md tables regenerated "
+          f"({len(load())} cells)")
+
+
+if __name__ == "__main__":
+    main()

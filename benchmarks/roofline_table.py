@@ -1,0 +1,54 @@
+"""Aggregate dryrun_results/*.json into the EXPERIMENTS.md roofline table.
+
+CSV: arch,shape,mesh,status,dominant,compute_s,memory_s,collective_s,
+     roofline_fraction,useful_ratio,peak_GiB,fits
+"""
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "dryrun_results")
+
+
+def rows(tag: str = ""):
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        has_tag = len(parts) == 3 and "." in parts[2]
+        if tag:
+            if not base.endswith("." + tag):
+                continue
+        elif has_tag:
+            continue
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def run(print_fn=print, tag: str = ""):
+    print_fn("arch,shape,mesh,status,dominant,compute_s,memory_s,"
+             "collective_s,frac,useful,peak_GiB,fits")
+    for r in rows(tag):
+        if r["status"] != "ok":
+            print_fn(f"{r['arch']},{r['shape']},{r['mesh']},{r['status']},"
+                     f",,,,,,,{r.get('reason', r.get('error', ''))[:60]}")
+            continue
+        if r["mesh"] != "single":
+            # Roofline terms are exact-probe-derived for single-pod only;
+            # multi-pod cells are compile/memory proofs (see §Dry-run).
+            continue
+        rf = r["roofline"]
+        m = r["memory"]
+        print_fn(
+            f"{r['arch']},{r['shape']},{r['mesh']},ok,{rf['dominant']},"
+            f"{rf['compute_s']:.4f},{rf['memory_s']:.4f},"
+            f"{rf['collective_s']:.4f},{rf['roofline_fraction']:.3f},"
+            f"{rf['useful_flops_ratio']:.3f},"
+            f"{m['peak_bytes']/2**30:.2f},{int(m['fits'])}"
+        )
+
+
+if __name__ == "__main__":
+    import sys
+    run(tag=sys.argv[1] if len(sys.argv) > 1 else "")

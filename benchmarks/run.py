@@ -1,0 +1,35 @@
+"""Benchmark aggregator — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` style CSV blocks:
+  fig3        — tile sweep x scales x 2 GPU models (paper Fig. 3)
+  fig4        — wide-vs-tall geometry (paper Fig. 4)
+  sensitivity — tile sensitivity vs core count (paper §IV.C)
+  kernels     — kernel reference timings + autotuned v5e tiles
+  roofline    — the 40-cell dry-run roofline table (if results exist)
+"""
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_bilinear_fig3, bench_kernels, bench_sensitivity,
+        bench_tile_geometry, roofline_table,
+    )
+
+    print("== fig3: tile sweep x scale x GPU model (paper Fig. 3) ==")
+    bench_bilinear_fig3.run()
+    print()
+    print("== fig4: wide-vs-tall tile geometry (paper Fig. 4) ==")
+    bench_tile_geometry.run()
+    print()
+    print("== sensitivity vs core count (paper §IV.C) ==")
+    bench_sensitivity.run()
+    print()
+    print("== kernel micro-benchmarks ==")
+    bench_kernels.run()
+    print()
+    print("== roofline table (from dry-run results) ==")
+    roofline_table.run()
+
+
+if __name__ == "__main__":
+    main()

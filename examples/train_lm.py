@@ -1,0 +1,68 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+A mid-size config (not the tiny smoke config): 8 layers, d_model 512,
+GQA 8/2, vocab 32768 — about 100M params when counted with embeddings.
+Synthetic Zipf data, AdamW + warmup-cosine, async checkpoints, straggler
+monitor. Loss should drop from ~10.4 to well under 8 within 200 steps.
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import dataclasses
+import logging
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import DataConfig
+from repro.optim import adamw
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def make_100m_config() -> ArchConfig:
+    return ArchConfig(
+        name="demo-100m", family="dense",
+        n_layers=12, d_model=640, n_heads=10, n_kv_heads=2, head_dim=64,
+        d_ff=2560, vocab_size=50304, tie_embeddings=True,
+    ).validate()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_100m")
+    ap.add_argument("--fail-at", type=int, default=None)
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
+    cfg = make_100m_config()
+    import jax
+    from repro.models import api as _api
+    shapes = jax.eval_shape(
+        lambda: _api.init_params(cfg, jax.random.PRNGKey(0)))
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+    print(f"config {cfg.name}: {n_params/1e6:.0f}M params")
+
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                          global_batch=args.global_batch)
+    tcfg = TrainerConfig(
+        steps=args.steps, checkpoint_every=100,
+        checkpoint_dir=args.checkpoint_dir,
+        peak_lr=3e-4, warmup_steps=20, log_every=10,
+    )
+    trainer = Trainer(cfg, data_cfg, tcfg,
+                      opt_cfg=adamw.AdamWConfig(weight_decay=0.01))
+    out = trainer.run(fail_at=args.fail_at)
+    first, last = out["losses"][0], out["losses"][-1]
+    print(f"loss {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"(restarts={out['restarts']})")
+    if args.steps >= 100:
+        assert last < first - 1.0, "training did not make progress"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Autotune every registered kernel for a hardware fleet and dump the cache.
+
+This is the paper's methodology as an operational tool: run once per
+hardware model, ship the cache with the binary.
+
+Run:  PYTHONPATH=src python examples/tune_tiles.py --cache /tmp/tiles.json
+"""
+import argparse
+import json
+
+import repro.kernels.bilinear.ops  # noqa: F401
+import repro.kernels.flash_attention.ops  # noqa: F401
+import repro.kernels.matmul.ops  # noqa: F401
+import repro.kernels.rglru.ops  # noqa: F401
+import repro.kernels.ssd.ops  # noqa: F401
+from repro.core import Autotuner, HARDWARE_REGISTRY
+
+PROBLEMS = {
+    "matmul": [dict(m=4096, k=4096, n=4096), dict(m=65536, k=4096, n=1536)],
+    "flash_attention": [
+        dict(sq=4096, skv=4096, d=128, hq=16, hkv=8, window=0),
+        dict(sq=32768, skv=32768, d=128, hq=16, hkv=8, window=4096),
+    ],
+    "rglru": [dict(s=4096, f=4096)],
+    "ssd": [dict(s=4096, h=80, p=64, n=128)],
+    "bilinear": [dict(src_h=800, src_w=800, scale=s) for s in (2, 6, 10)],
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cache", default="/tmp/repro_tiles.json")
+    ap.add_argument("--hardware", nargs="*",
+                    default=["tpu_v4", "tpu_v5e", "tpu_v5p", "tpu_v6e"])
+    args = ap.parse_args()
+
+    at = Autotuner(cache_path=args.cache)
+    for hw_name in args.hardware:
+        hw = HARDWARE_REGISTRY[hw_name]
+        for kernel, problems in PROBLEMS.items():
+            for prob in problems:
+                tile = at.best_tile(kernel, prob, "bfloat16", hw)
+                print(f"{hw_name:10s} {kernel:16s} "
+                      f"{str(dict(prob))[:48]:50s} -> {tile}")
+    print(f"\ncache written to {args.cache}")
+    with open(args.cache) as f:
+        print(f"{len(json.load(f))} entries")
+
+
+if __name__ == "__main__":
+    main()

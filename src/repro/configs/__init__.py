@@ -1,0 +1,43 @@
+"""Architecture registry: the ten assigned configs + the paper's workload."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable, get_shape
+
+_MODULES: Dict[str, str] = {
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "command-r-35b": "repro.configs.command_r_35b",
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1_8b",
+    "qwen2-1.5b": "repro.configs.qwen2_1_5b",
+    "gemma2-9b": "repro.configs.gemma2_9b",
+    "internvl2-1b": "repro.configs.internvl2_1b",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "mamba2-2.7b": "repro.configs.mamba2_2_7b",
+}
+
+
+def list_archs() -> List[str]:
+    return sorted(_MODULES)
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {list_archs()}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def get_smoke(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {list_archs()}")
+    return importlib.import_module(_MODULES[name]).smoke_config()
+
+
+__all__ = [
+    "ArchConfig", "SHAPES", "ShapeSpec", "applicable", "get_shape",
+    "list_archs", "get_arch", "get_smoke",
+]

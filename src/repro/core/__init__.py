@@ -1,0 +1,33 @@
+"""Core: hardware-model-aware tiling — the paper's contribution, generalized.
+
+Public surface:
+    HardwareModel descriptors  (core.hardware)
+    TileShape / constraints    (core.tiling)
+    analytic cost model        (core.cost_model)
+    Autotuner                  (core.autotuner)
+    TilingPolicy               (core.policy)
+    kernel registry            (core.registry)
+"""
+from repro.core.autotuner import Autotuner, SweepResult
+from repro.core.cost_model import CostBreakdown, TileWorkload, estimate
+from repro.core.hardware import (
+    GEFORCE_8800GTS,
+    GTX260,
+    PRODUCTION_TARGET,
+    REGISTRY as HARDWARE_REGISTRY,
+    TPU_V4,
+    TPU_V5E,
+    TPU_V5P,
+    TPU_V6E,
+    HardwareModel,
+)
+from repro.core.policy import TilingPolicy, default_policy, set_default_policy
+from repro.core.tiling import TileConstraints, TileShape, cdiv, round_up
+
+__all__ = [
+    "Autotuner", "SweepResult", "CostBreakdown", "TileWorkload", "estimate",
+    "HardwareModel", "HARDWARE_REGISTRY", "PRODUCTION_TARGET",
+    "TPU_V4", "TPU_V5E", "TPU_V5P", "TPU_V6E", "GTX260", "GEFORCE_8800GTS",
+    "TilingPolicy", "default_policy", "set_default_policy",
+    "TileConstraints", "TileShape", "cdiv", "round_up",
+]

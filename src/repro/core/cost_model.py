@@ -1,0 +1,202 @@
+"""Analytic tile cost model — formalizing the paper's §IV reasoning.
+
+The paper explains Fig. 3/4 with three effects, all of which are encoded here:
+
+1. **Row-crossing cost** (their Fig. 4): a tile of height ``h`` issues ``h``
+   strided row segments; crossing a row costs time that *grows with the image
+   width* (their observation that scale 6/8/10 makes 32x4 dominant). We charge
+   ``row_penalty = dma_row_latency * stride_bytes / DRAM_PAGE`` per crossing,
+   consuming real bandwidth time (DRAM page switches), so wide tiles win at
+   large widths.
+2. **Occupancy** (their §III.B 32x16 example): blocks-per-SM is bounded by
+   the hardware's active-thread ceiling; a tile of 512 threads fits twice on
+   GTX260 (1024 active) but once on the 8800GTS (768) => utilization 2/3.
+3. **Sensitivity vs core count** (their §IV.C): with more parallel units, a
+   tile inefficiency divides over more hardware; the cost model reproduces
+   this because waves = ceil(tiles / (num_sm * blocks_per_sm)) flattens as
+   num_sm grows.
+
+The TPU estimator replaces occupancy with VMEM-fit + DMA double-buffering and
+warp padding with lane/sublane/MXU padding — see DESIGN.md §2 for the mapping.
+Both estimators return a :class:`CostBreakdown` whose fields are the same
+three roofline terms reported in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Tuple
+
+from repro.core.hardware import HardwareModel
+from repro.core.tiling import TileShape, cdiv, dtype_bytes
+
+DRAM_PAGE_BYTES = 4096
+GPU_MAX_BLOCKS_PER_SM = 8
+GPU_WARP = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class TileWorkload:
+    """What one grid-step (one tile) of a kernel does.
+
+    Kernels construct this from (problem, tile, dtype); the estimators below
+    turn it into time. ``row_segments`` is the number of distinct strided
+    segments the tile reads/writes (the paper's row crossings);
+    ``row_stride_bytes`` is the stride between segments (image width * bpp).
+    """
+
+    flops: float                 # useful FLOPs in the tile
+    hbm_bytes: float             # HBM bytes moved (reads + writes)
+    row_segments: int            # strided segment count (paper Fig. 4)
+    row_stride_bytes: float      # stride between segments
+    threads: int = 0             # GPU: threads per block (= tile pixels)
+    pad_waste: float = 1.0       # >=1: padded work / useful work (lane/MXU pad)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostBreakdown:
+    compute_s: float
+    memory_s: float
+    overhead_s: float
+    utilization: float           # 0..1 parallel-unit utilization
+    total_s: float
+
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "overhead": self.overhead_s,
+        }
+        return max(terms, key=terms.get)
+
+
+def row_penalty_s(hw: HardwareModel, stride_bytes: float) -> float:
+    """Bandwidth-consuming cost of one strided row crossing.
+
+    Scales with stride so wider final images amplify the penalty — this is
+    the mechanism behind the paper's scale-6/8/10 observations.
+    """
+    pages = max(1.0, stride_bytes / DRAM_PAGE_BYTES)
+    return hw.dma_row_latency * pages
+
+
+def estimate_gpu(
+    hw: HardwareModel,
+    work: TileWorkload,
+    n_tiles: int,
+) -> CostBreakdown:
+    """Throughput model for the paper's CUDA GPUs (reproduction only)."""
+    if work.threads <= 0:
+        raise ValueError("GPU estimate requires threads per block")
+    if work.threads > hw.max_threads_per_block:
+        return CostBreakdown(math.inf, math.inf, math.inf, 0.0, math.inf)
+
+    # Occupancy: the paper's §III.B active-thread ceiling.
+    blocks_per_sm = min(
+        hw.max_active_threads // work.threads, GPU_MAX_BLOCKS_PER_SM
+    )
+    if blocks_per_sm == 0:
+        return CostBreakdown(math.inf, math.inf, math.inf, 0.0, math.inf)
+    active_threads = blocks_per_sm * work.threads
+    utilization = active_threads / hw.max_active_threads
+
+    # Little's law: DRAM bandwidth saturates only with enough resident
+    # threads. This is the mechanism behind the paper's §III.B example —
+    # a 32x16 tile (512 threads) fits twice on GTX260 (1024 active) but
+    # once on the 8800GTS (768 ceiling), leaving bandwidth on the table.
+    bw_frac = 1.0
+    if hw.saturation_threads:
+        bw_frac = min(1.0, active_threads / hw.saturation_threads)
+
+    # Warp granularity: a 16-thread block still occupies whole warps.
+    warp_pad = cdiv(work.threads, GPU_WARP) * GPU_WARP / work.threads
+
+    # DRAM bank thrash: a tile touching more strided rows than there are
+    # open banks re-opens pages superlinearly (tall tiles at large image
+    # widths — the paper's Fig. 4 / scale 6-10 effect).
+    segs = work.row_segments
+    seg_eff = segs * max(1.0, segs / hw.dram_banks)
+
+    sm_flops = hw.peak_flops_bf16 / hw.num_sm
+    sm_bw = hw.hbm_bw / hw.num_sm
+
+    per_block_compute = work.flops * warp_pad * work.pad_waste / sm_flops
+    per_block_memory = (
+        work.hbm_bytes / (sm_bw * bw_frac)
+        + seg_eff * row_penalty_s(hw, work.row_stride_bytes)
+    )
+
+    # One resident set = blocks_per_sm blocks co-scheduled on an SM: compute
+    # serializes on the cores, memory serializes on the SM's bandwidth share;
+    # whichever is larger bounds the set (latency of the other is hidden).
+    # Block dispatch (GigaThread) adds a small fixed cost per block, which is
+    # why very small blocks lose even at full occupancy.
+    set_compute = blocks_per_sm * per_block_compute
+    set_memory = blocks_per_sm * per_block_memory
+    set_time = max(set_compute, set_memory) + blocks_per_sm * hw.sched_overhead
+
+    waves = cdiv(n_tiles, hw.num_sm * blocks_per_sm)
+    total = waves * set_time + hw.launch_overhead
+    frac = set_time if set_time > 0 else 1.0
+    return CostBreakdown(
+        compute_s=waves * set_compute,
+        memory_s=waves * set_memory,
+        overhead_s=hw.launch_overhead,
+        utilization=utilization,
+        total_s=total,
+    )
+
+
+def estimate_tpu(
+    hw: HardwareModel,
+    work: TileWorkload,
+    n_tiles: int,
+    vmem_bytes: float,
+) -> CostBreakdown:
+    """Pallas grid-step model: double-buffered DMA overlapping MXU compute.
+
+    The analogue of GPU occupancy is whether the working set leaves room to
+    double-buffer in VMEM; the analogue of warp padding is lane/sublane/MXU
+    padding (``pad_waste``); the row-crossing term survives unchanged — a
+    tile whose minor dim is narrower than the full row still issues one DMA
+    descriptor per sublane row.
+    """
+    if vmem_bytes > hw.vmem_bytes:
+        return CostBreakdown(math.inf, math.inf, math.inf, 0.0, math.inf)
+    double_buffered = vmem_bytes <= hw.vmem_bytes * 0.5
+
+    core_flops = hw.peak_flops_bf16 / hw.num_cores
+    per_tile_compute = work.flops * work.pad_waste / core_flops
+    per_tile_memory = (
+        work.hbm_bytes / hw.hbm_bw
+        + work.row_segments * row_penalty_s(hw, work.row_stride_bytes)
+    )
+    if double_buffered:
+        per_tile = max(per_tile_compute, per_tile_memory)
+        utilization = min(
+            1.0,
+            per_tile_compute / per_tile if per_tile > 0 else 1.0,
+        )
+    else:
+        # No room to overlap: DMA and compute serialize.
+        per_tile = per_tile_compute + per_tile_memory
+        utilization = 0.5
+    total = n_tiles * per_tile + hw.launch_overhead
+    return CostBreakdown(
+        compute_s=n_tiles * per_tile_compute,
+        memory_s=n_tiles * per_tile_memory,
+        overhead_s=hw.launch_overhead,
+        utilization=utilization,
+        total_s=total,
+    )
+
+
+def estimate(
+    hw: HardwareModel,
+    work: TileWorkload,
+    n_tiles: int,
+    vmem_bytes: float = 0.0,
+) -> CostBreakdown:
+    if hw.family == "gpu":
+        return estimate_gpu(hw, work, n_tiles)
+    return estimate_tpu(hw, work, n_tiles, vmem_bytes)

@@ -1,0 +1,90 @@
+"""TilingPolicy — how the framework picks tiles at model-build time.
+
+Three modes, all grounded in the paper:
+
+* ``heuristic``  — the "32x4 principle" as a default: maximize the minor
+  (lane-contiguous) tile dimension first, then grow the second-minor until
+  the VMEM budget binds. Zero-cost, no sweep.
+* ``tuned``      — per-hardware-model autotune (the paper's per-GPU sweep),
+  cached persistently.
+* ``robust``     — the paper's §V recommendation: pick the tile minimizing
+  the *worst-case* cost across a fleet of hardware models ("consider more
+  about the performance on the worst-case GPU").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence
+
+from repro.core import registry
+from repro.core.autotuner import Autotuner
+from repro.core.cost_model import estimate
+from repro.core.hardware import PRODUCTION_TARGET, HardwareModel
+from repro.core.tiling import TileShape, enumerate_tiles
+
+
+@dataclasses.dataclass
+class TilingPolicy:
+    mode: str = "heuristic"                  # heuristic | tuned | robust
+    hardware: HardwareModel = PRODUCTION_TARGET
+    fleet: Sequence[HardwareModel] = ()      # for robust mode
+    autotuner: Optional[Autotuner] = None
+
+    def __post_init__(self):
+        if self.mode not in ("heuristic", "tuned", "robust"):
+            raise ValueError(f"unknown policy mode {self.mode!r}")
+        if self.mode == "tuned" and self.autotuner is None:
+            self.autotuner = Autotuner()
+        if self.mode == "robust" and not self.fleet:
+            raise ValueError("robust mode requires a hardware fleet")
+
+    def tile_for(
+        self, kernel: str, problem: Mapping[str, int], dtype: str = "bfloat16"
+    ) -> TileShape:
+        spec = registry.get(kernel)
+        if self.mode == "heuristic":
+            return spec.default_tile(problem, dtype)
+        if self.mode == "tuned":
+            return self.autotuner.best_tile(kernel, problem, dtype, self.hardware)
+        return self._robust_tile(spec, problem, dtype)
+
+    def _robust_tile(self, spec, problem, dtype) -> TileShape:
+        # Candidate set: union of legal tiles on every fleet member (a tile
+        # must be legal everywhere to be a fleet-wide default).
+        per_hw = []
+        for hw in self.fleet:
+            constraints = spec.constraints(problem)
+            tiles = enumerate_tiles(
+                constraints, hw, dtype,
+                vmem_bytes_fn=lambda t: spec.vmem_bytes(t, problem, dtype),
+            )
+            per_hw.append(set(tiles))
+        common = set.intersection(*per_hw) if per_hw else set()
+        if not common:
+            raise ValueError("no tile legal on every fleet member")
+        best_tile, best_worst = None, float("inf")
+        for t in sorted(common):
+            worst = 0.0
+            for hw in self.fleet:
+                work = spec.workload(t, problem, dtype)
+                cost = estimate(
+                    hw, work, spec.n_tiles(t, problem),
+                    vmem_bytes=spec.vmem_bytes(t, problem, dtype),
+                )
+                worst = max(worst, cost.total_s)
+            if worst < best_worst:
+                best_worst, best_tile = worst, t
+        return best_tile
+
+
+# Module-level default policy used by model code; tests/benchmarks may swap it.
+_DEFAULT = TilingPolicy()
+
+
+def default_policy() -> TilingPolicy:
+    return _DEFAULT
+
+
+def set_default_policy(policy: TilingPolicy) -> None:
+    global _DEFAULT
+    _DEFAULT = policy

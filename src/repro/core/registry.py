@@ -1,0 +1,59 @@
+"""Kernel registry: each Pallas kernel declares its tunable tile space here.
+
+This is the integration point that turns the paper's manual experiment into
+framework infrastructure — a kernel registers (a) how to build its legal tile
+constraints for a problem, (b) the VMEM working set of a candidate tile, and
+(c) the per-tile workload for the cost model. The autotuner and TilingPolicy
+are generic over this interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Mapping, Sequence, Tuple
+
+from repro.core.cost_model import TileWorkload
+from repro.core.tiling import TileConstraints, TileShape
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Declaration of one kernel's tunable space.
+
+    problem: a kernel-defined mapping of dim names -> int (e.g. {"m":..,
+    "k":.., "n":..} for matmul, {"out_h":.., "out_w":.., "scale":..} for
+    bilinear). All callables are pure.
+    """
+
+    name: str
+    constraints: Callable[[Mapping[str, int]], TileConstraints]
+    vmem_bytes: Callable[[TileShape, Mapping[str, int], str], float]
+    workload: Callable[[TileShape, Mapping[str, int], str], TileWorkload]
+    n_tiles: Callable[[TileShape, Mapping[str, int]], int]
+    default_tile: Callable[[Mapping[str, int], str], TileShape]
+
+
+_REGISTRY: Dict[str, KernelSpec] = {}
+
+
+def register(spec: KernelSpec) -> KernelSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"kernel {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> KernelSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"kernel {name!r} not registered; known: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def names() -> Sequence[str]:
+    return sorted(_REGISTRY)
+
+
+def problem_key(problem: Mapping[str, int]) -> Tuple[Tuple[str, int], ...]:
+    return tuple(sorted(problem.items()))

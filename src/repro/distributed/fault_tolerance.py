@@ -1,0 +1,59 @@
+"""Fault tolerance: step-time health monitoring and straggler detection.
+
+On a real multi-host deployment each host runs a HealthMonitor; a host whose
+step time exceeds ``straggler_factor`` x the EWMA is flagged (logged +
+counted). The Trainer consumes flags to decide checkpoint-now / abort, and
+its run loop survives worker exceptions by restoring the latest checkpoint
+(see train/trainer.py and the simulated-failure test).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class HealthMonitor:
+    ewma_alpha: float = 0.1
+    straggler_factor: float = 2.5
+    warmup_steps: int = 5
+
+    _ewma: Optional[float] = None
+    _steps: int = 0
+    straggler_events: int = 0
+    history: List[float] = dataclasses.field(default_factory=list)
+
+    def record_step(self, seconds: float) -> bool:
+        """Record one step's wall time; True if this step was a straggler."""
+        self._steps += 1
+        self.history.append(seconds)
+        is_straggler = False
+        if self._ewma is None:
+            self._ewma = seconds
+        else:
+            if (self._steps > self.warmup_steps
+                    and seconds > self.straggler_factor * self._ewma):
+                self.straggler_events += 1
+                is_straggler = True
+                # Do not fold outliers into the EWMA — keeps the baseline honest.
+            else:
+                self._ewma = (
+                    self.ewma_alpha * seconds
+                    + (1 - self.ewma_alpha) * self._ewma
+                )
+        return is_straggler
+
+    @property
+    def baseline_s(self) -> Optional[float]:
+        return self._ewma
+
+
+class StepTimer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0
+        return False

@@ -1,0 +1,170 @@
+"""GPipe-style pipeline parallelism over the ``pod`` mesh axis.
+
+The multi-pod mesh's pod axis defaults to data parallelism; this module
+provides the PP alternative for models whose per-chip state does not fit at
+DP (the qwen3-235B case in EXPERIMENTS §Perf): layers split into one stage
+per pod, microbatches stream through the stages, and activations hop pods
+via ``collective_permute`` (differentiable — its transpose is the reverse
+permute, so jax.grad drives the backward pipeline automatically).
+
+Implementation: ``shard_map`` manual over the pod axis only
+(``axis_names={"pod"}``); the data/model axes stay auto, so each stage's
+layer compute composes with the existing DP/TP sharding. Stage-stacked
+layer parameters are sharded P("pod") on their leading axis, giving each
+pod exactly its stage's weights.
+
+Scope: homogeneous decoder stacks (one LayerSpec repeated). Embedding and
+head weights are replicated; layer weights — the bulk — are stage-local.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.models.layers import init_tree
+
+
+def stage_param_defs(cfg: ArchConfig, n_stages: int):
+    """Layer params stacked [n_stages, layers_per_stage, ...]."""
+    assert cfg.n_layers % n_stages == 0, (cfg.n_layers, n_stages)
+    per = cfg.n_layers // n_stages
+    spec = cfg.layers()[0]
+    layer = T.layer_defs(cfg, spec)
+    return {
+        "embed": T.model_defs(cfg)["embed"],
+        "final_norm_w": T.model_defs(cfg)["final_norm_w"],
+        "stages": T._stack_defs(T._stack_defs(layer, per), n_stages),
+    }
+
+
+def init_pipeline_params(cfg: ArchConfig, key, n_stages: int,
+                         dtype=jnp.float32):
+    return init_tree(stage_param_defs(cfg, n_stages), key, dtype)
+
+
+def pipeline_shardings(params, mesh):
+    """Stage axis -> pod; embed/head replicated (demo scale)."""
+    def spec(path, leaf):
+        name = path[0].key if hasattr(path[0], "key") else None
+        if name == "stages":
+            return NamedSharding(mesh, P("pod"))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def make_pipeline_loss(cfg: ArchConfig, mesh, n_stages: int,
+                       n_microbatches: int):
+    """Returns loss_fn(params, tokens, targets) running the GPipe schedule.
+
+    tokens/targets: [B, S] with B divisible by n_microbatches.
+    """
+    spec = cfg.layers()[0]
+    per = cfg.n_layers // n_stages
+
+    def stage_body(stage_p, cfg_, x, positions, first, last, tokens_mb,
+                   embed, norm_w):
+        # First stage: swap in the embedded tokens (x arrives as zeros).
+        emb = embed[tokens_mb]
+        if cfg_.scale_embeddings:
+            emb = emb * jnp.asarray(cfg_.d_model ** 0.5, emb.dtype)
+        x = jnp.where(first, emb, x)
+
+        def body(carry, lp):
+            xc, _ = carry
+            xo, _, aux = T.layer_forward(lp, cfg_, spec, xc, positions,
+                                         None, None)
+            return (xo, aux), None
+
+        (x, _), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                 stage_p)
+        return x
+
+    def loss_fn(params, tokens, targets):
+        b, s = tokens.shape
+        assert b % n_microbatches == 0
+        mb = b // n_microbatches
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (mb, s))
+        tok_mbs = tokens.reshape(n_microbatches, mb, s)
+        tgt_mbs = targets.reshape(n_microbatches, mb, s)
+
+        def pod_program(stages_local, embed, norm_w, tok_mbs, tgt_mbs):
+            stage = jax.lax.axis_index("pod")
+            stage_p = jax.tree.map(lambda a: a[0], stages_local)
+            first = stage == 0
+            last = stage == n_stages - 1
+            n_ticks = n_microbatches + n_stages - 1
+
+            x = jnp.zeros((mb, s, cfg.d_model), embed.dtype)
+            total = jnp.zeros((), jnp.float32)
+            count = jnp.zeros((), jnp.float32)
+
+            def tick(carry, t):
+                x_in, total, count = carry
+                mb_idx = jnp.clip(t - stage, 0, n_microbatches - 1)
+                active = (t - stage >= 0) & (t - stage < n_microbatches)
+                tokens_mb = tok_mbs[mb_idx]
+                out = stage_body(stage_p, cfg, x_in, positions, first, last,
+                                 tokens_mb, embed, norm_w)
+                # Last stage: loss for its active microbatch.
+                h = T._apply_norm({"final_norm_w": norm_w}, cfg, out,
+                                  "final_norm")
+                ce = T.fused_lm_loss(embed.T, h, tgt_mbs[mb_idx], cfg,
+                                     chunk=s)
+                use = active & last
+                total = total + jnp.where(use, ce, 0.0)
+                count = count + jnp.where(use, 1.0, 0.0)
+                # Ship activations to the next stage.
+                perm = [(i, i + 1) for i in range(n_stages - 1)]
+                x_next = jax.lax.ppermute(out, "pod", perm)
+                return (x_next, total, count), None
+
+            (x, total, count), _ = jax.lax.scan(
+                tick, (x, total, count), jnp.arange(n_ticks))
+            # Broadcast the last stage's mean loss to every pod.
+            loss_sum = jax.lax.psum(total, "pod")
+            n = jax.lax.psum(count, "pod")
+            return loss_sum / jnp.maximum(n, 1.0)
+
+        return shard_map(
+            pod_program, mesh=mesh,
+            in_specs=(P("pod"), P(), P(), P(), P()),
+            out_specs=P(),
+            axis_names=frozenset({"pod"}),
+            check_vma=False,
+        )(params["stages"], params["embed"], params["final_norm_w"],
+          tok_mbs, tgt_mbs)
+
+    return loss_fn
+
+
+def sequential_reference_loss(cfg: ArchConfig, params, tokens, targets):
+    """Same math without the pipeline (for correctness tests)."""
+    n_stages = params["stages"]["norm1_w"].shape[0]
+    per = params["stages"]["norm1_w"].shape[1]
+    flat = jax.tree.map(
+        lambda a: a.reshape((n_stages * per,) + a.shape[2:]),
+        params["stages"])
+    spec = cfg.layers()[0]
+    x = params["embed"][tokens]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(carry, lp):
+        xc, _ = carry
+        xo, _, aux = T.layer_forward(lp, cfg, spec, xc, positions, None,
+                                     None)
+        return (xo, aux), None
+
+    (x, _), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), flat)
+    h = T._apply_norm({"final_norm_w": params["final_norm_w"]}, cfg, x,
+                      "final_norm")
+    return T.fused_lm_loss(params["embed"].T, h, targets, cfg, chunk=s)

@@ -1,0 +1,168 @@
+"""Logical-axis -> mesh-axis mapping and sharding tree construction.
+
+Parameters carry logical axes (models/layers.py ParamDef); this module turns
+them into NamedShardings for a given mesh. Strategy knobs:
+
+* ``fsdp``  — additionally shard the largest remaining parameter axis over
+  the data axis (ZeRO-3 style), on top of TP. Default on: at 256+ chips
+  replicated 235B optimizer state cannot fit otherwise.
+* batch axes: ("pod", "data") when the mesh has a pod axis, else ("data",).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.context import DistContext
+
+# logical axis -> model-parallel mesh axis
+_MODEL_AXES = {
+    "heads": "model", "kv_heads": "model", "ff": "model", "vocab": "model",
+    "experts": "model", "lru": "model", "ssm_heads": "model",
+}
+
+
+def batch_axes_for(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def make_context(mesh: Optional[Mesh]) -> DistContext:
+    if mesh is None:
+        return DistContext(mesh=None)
+    return DistContext(mesh=mesh, batch_axes=batch_axes_for(mesh))
+
+
+def param_spec(
+    logical_axes: Tuple[Optional[str], ...],
+    shape: Tuple[int, ...],
+    mesh: Mesh,
+    fsdp: bool = True,
+) -> P:
+    """PartitionSpec for one parameter from its logical axes.
+
+    TP axes map via _MODEL_AXES; with ``fsdp``, the largest axis not already
+    sharded (and divisible) is additionally sharded over 'data'.
+    """
+    assign: list = [None] * len(shape)
+    for i, ax in enumerate(logical_axes):
+        mapped = _MODEL_AXES.get(ax) if ax else None
+        if mapped and shape[i] % mesh.shape[mapped] == 0 and shape[i] >= mesh.shape[mapped]:
+            assign[i] = mapped
+    if fsdp and "data" in mesh.axis_names:
+        dsize = mesh.shape["data"]
+        order = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in order:
+            if assign[i] is None and shape[i] % dsize == 0 and shape[i] >= dsize:
+                assign[i] = "data"
+                break
+    return P(*assign)
+
+
+def param_shardings(
+    axes_tree: Any, shape_tree: Any, mesh: Mesh, fsdp: bool = True,
+) -> Any:
+    """Pytree of NamedShardings matching the params pytree."""
+    return jax.tree.map(
+        lambda ax, sds: NamedSharding(
+            mesh, param_spec(ax, sds.shape, mesh, fsdp)
+        ),
+        axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+
+
+def batch_sharding(mesh: Mesh, ndim: int, batch_dim: int = 0) -> NamedSharding:
+    spec: list = [None] * ndim
+    baxes = batch_axes_for(mesh)
+    spec[batch_dim] = baxes if len(baxes) > 1 else baxes[0]
+    return NamedSharding(mesh, P(*spec))
+
+
+def opt_state_shardings(param_shard_tree: Any, mesh: Mesh) -> Any:
+    """AdamW moments shard like their parameters; step is replicated."""
+    return {
+        "m": param_shard_tree,
+        "v": param_shard_tree,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Serve-state (KV cache / recurrent state) sharding
+# ---------------------------------------------------------------------------
+
+def _batch_entry(mesh: Mesh, b: int):
+    """Shard batch over as many batch axes as divide it (pods first)."""
+    baxes = batch_axes_for(mesh)
+    use = []
+    rem = b
+    for ax in baxes:
+        if rem % mesh.shape[ax] == 0 and rem >= mesh.shape[ax]:
+            use.append(ax)
+            rem //= mesh.shape[ax]
+    if not use:
+        return None
+    return tuple(use) if len(use) > 1 else use[0]
+
+
+def serve_state_shardings(state_shapes: Any, mesh: Mesh) -> Any:
+    """Shardings for an api.make_serve_state pytree (by leaf name + rank).
+
+    KV caches [*, B, H, S, hd]: batch over batch axes; heads over 'model'
+    when divisible, else the cache SEQUENCE shards over 'model' (keeps 32k+
+    caches within HBM; XLA partitions the attention reduction). Recurrent
+    states shard features/heads over 'model'.
+    """
+    msize = mesh.shape["model"]
+
+    def div(n: int) -> bool:
+        return n % msize == 0 and n >= msize
+
+    def spec(path, leaf) -> NamedSharding:
+        name = None
+        for entry in reversed(path):
+            if hasattr(entry, "key"):
+                name = entry.key
+                break
+        nd, sh = leaf.ndim, leaf.shape
+        out: list = [None] * nd
+        if name in ("pos", "slot_pos") or nd <= 1:
+            return NamedSharding(mesh, P())
+        if name in ("k", "v", "self_k", "self_v", "cross"):
+            # [*lead, B, H, S, hd] — heads over model if divisible, else seq.
+            off = nd - 4
+            out[off] = _batch_entry(mesh, sh[off])
+            if div(sh[off + 1]):
+                out[off + 1] = "model"
+            elif div(sh[off + 2]):
+                out[off + 2] = "model"
+        elif name == "h" and nd >= 4:
+            # SSD state [*lead, B, H, N, P] — heads over model.
+            off = nd - 4
+            out[off] = _batch_entry(mesh, sh[off])
+            if div(sh[off + 1]):
+                out[off + 1] = "model"
+        elif name and name.startswith("conv"):
+            # [*lead, B, W, F] — features over model.
+            off = nd - 3
+            out[off] = _batch_entry(mesh, sh[off])
+            if div(sh[-1]):
+                out[-1] = "model"
+        else:
+            # [*lead, B, F] recurrent vector state.
+            off = nd - 2
+            out[off] = _batch_entry(mesh, sh[off])
+            if div(sh[-1]):
+                out[-1] = "model"
+        return NamedSharding(mesh, P(*out))
+
+    return jax.tree_util.tree_map_with_path(spec, state_shapes)

@@ -1,0 +1,157 @@
+"""Jit'd public op + registry declarations for the bilinear kernel.
+
+Two KernelSpec registrations share the tile space but differ in workload:
+
+* ``bilinear``      — the TPU Pallas implementation (separable matmul).
+* ``bilinear_cuda`` — the paper's gather implementation as executed on their
+  GPUs (4 reads + ~10 flops per pixel, one thread per pixel). Used only by
+  the Fig. 3 / Fig. 4 reproduction benchmarks, evaluated with the GTX260 /
+  8800GTS hardware descriptors.
+
+Problem dims: {"src_h", "src_w", "scale"}; tile rank 2 = output (bh, bw).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import registry
+from repro.core.cost_model import TileWorkload
+from repro.core.tiling import TileConstraints, TileShape, cdiv, dtype_bytes
+from repro.kernels.bilinear.bilinear import bilinear_upscale
+from repro.kernels.bilinear.ref import bilinear_upscale_ref
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "tile", "interpret"))
+def upscale(src, scale: int, tile=(256, 256), interpret: bool = False):
+    return bilinear_upscale(src, scale, tile=tile, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def upscale_ref(src, scale: int):
+    return bilinear_upscale_ref(src, scale)
+
+
+# --------------------------------------------------------------------------
+# Registry: TPU implementation.
+# --------------------------------------------------------------------------
+
+def _out_dims(problem: Mapping[str, int]):
+    return problem["src_h"] * problem["scale"], problem["src_w"] * problem["scale"]
+
+
+def _constraints(problem: Mapping[str, int]) -> TileConstraints:
+    oh, ow = _out_dims(problem)
+    return TileConstraints(
+        rank=2, max_dims=(oh, ow), lane_dim=1, sublane_dim=0,
+    )
+
+
+def _vmem_bytes(tile: TileShape, problem: Mapping[str, int], dtype: str) -> float:
+    bh, bw = tile
+    b = dtype_bytes(dtype)
+    src = problem["src_h"] * problem["src_w"] * b       # resident source
+    tmp = bh * problem["src_w"] * 4                      # f32 row-interp scratch
+    out = bh * bw * b
+    return src + tmp + out
+
+
+def _workload(tile: TileShape, problem: Mapping[str, int], dtype: str) -> TileWorkload:
+    bh, bw = tile
+    oh, ow = _out_dims(problem)
+    b = dtype_bytes(dtype)
+    h_s, w_s = problem["src_h"], problem["src_w"]
+    n_j = cdiv(ow, bw)
+    # Two MXU contractions; the row-interp matmul amortizes over the j tiles.
+    flops = (2.0 * bh * h_s * w_s) / n_j + 2.0 * bh * w_s * bw
+    # Source is DMA'd once for the whole grid; charge it amortized per tile.
+    n_tiles = cdiv(oh, bh) * n_j
+    hbm = bh * bw * b + (h_s * w_s * b) / n_tiles
+    return TileWorkload(
+        flops=flops,
+        hbm_bytes=hbm,
+        row_segments=bh,                     # output store: bh strided rows
+        row_stride_bytes=float(ow * b),      # stride = final image width
+        pad_waste=1.0,
+    )
+
+
+def _n_tiles(tile: TileShape, problem: Mapping[str, int]) -> int:
+    oh, ow = _out_dims(problem)
+    return cdiv(oh, tile[0]) * cdiv(ow, tile[1])
+
+
+def _default_tile(problem: Mapping[str, int], dtype: str) -> TileShape:
+    # The "32x4 principle": maximize the lane-contiguous minor dim first.
+    oh, ow = _out_dims(problem)
+    return TileShape((min(256, oh), min(512, ow)))
+
+
+registry.register(registry.KernelSpec(
+    name="bilinear",
+    constraints=_constraints,
+    vmem_bytes=_vmem_bytes,
+    workload=_workload,
+    n_tiles=_n_tiles,
+    default_tile=_default_tile,
+))
+
+
+# --------------------------------------------------------------------------
+# Registry: the paper's CUDA gather implementation (reproduction only).
+# One thread per output pixel; 4 source reads + 1 write; ~10 flops.
+# --------------------------------------------------------------------------
+
+def _cuda_constraints(problem: Mapping[str, int]) -> TileConstraints:
+    oh, ow = _out_dims(problem)
+    # CUDA blocks: <=512 threads enforced by the cost model; dims bounded by
+    # the paper's sweep range.
+    return TileConstraints(
+        rank=2, max_dims=(min(oh, 512), min(ow, 512)),
+        lane_dim=None, sublane_dim=None,
+    )
+
+
+def _cuda_vmem(tile: TileShape, problem: Mapping[str, int], dtype: str) -> float:
+    return 0.0  # the paper's kernel uses no shared memory
+
+
+GPU_TRANSACTION_BYTES = 128  # G80/GT200 coalesced global transaction size
+
+
+def _cuda_workload(tile: TileShape, problem: Mapping[str, int], dtype: str) -> TileWorkload:
+    bh, bw = tile  # (height, width) = CUDA (blockDim.y, blockDim.x)
+    oh, ow = _out_dims(problem)
+    b = dtype_bytes(dtype)
+    pixels = bh * bw
+    s = problem["scale"]
+    # Coalescing: each (warp, row) segment moves whole 128B transactions, so
+    # narrow tiles (bw < 32) waste bandwidth — this is why every winner in
+    # the paper's Fig. 3 is 32 wide. Output: bh segments of bw pixels.
+    # Source: each output row reads its two neighbor rows (no cache on G80),
+    # segments of ~bw/s + 1 pixels.
+    seg = lambda width_px: max(width_px * b, GPU_TRANSACTION_BYTES)
+    out_bytes = bh * seg(bw)
+    src_bytes = 2 * bh * seg(bw // s + 1)
+    # DRAM page switches: distinct rows touched, stride = final image width.
+    segments = bh + (bh // s + 2)
+    return TileWorkload(
+        flops=10.0 * pixels,
+        hbm_bytes=float(out_bytes + src_bytes),
+        row_segments=segments,
+        row_stride_bytes=float(ow * b),
+        threads=pixels,
+    )
+
+
+registry.register(registry.KernelSpec(
+    name="bilinear_cuda",
+    constraints=_cuda_constraints,
+    vmem_bytes=_cuda_vmem,
+    workload=_cuda_workload,
+    n_tiles=_n_tiles,
+    default_tile=lambda p, d: TileShape((4, 32)),
+))

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for bilinear image upscaling (the paper's Eq. 1-5).
+
+Coordinate map follows the paper exactly: for terminal pixel (xf, yf) the
+logical source point is (xf/scale, yf/scale); neighbors x1=int(xp), x2=x1+1
+(clamped to the image border, replicate-edge), weights from the fractional
+offsets. Note the paper's Eq. (5) has a typo — the last term's ``(1-offsetY)``
+should be ``(1-offsetX)`` for the weights to sum to 1; we implement standard
+bilinear, which is what their CUDA code computes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bilinear_upscale_ref(src: jnp.ndarray, scale: int) -> jnp.ndarray:
+    """Upscale ``src`` [H, W] by integer ``scale`` -> [H*scale, W*scale]."""
+    h, w = src.shape
+    oh, ow = h * scale, w * scale
+
+    yf = jnp.arange(oh, dtype=src.dtype)
+    xf = jnp.arange(ow, dtype=src.dtype)
+    yp = jnp.minimum(yf / scale, h - 1)
+    xp = jnp.minimum(xf / scale, w - 1)
+
+    y1 = jnp.floor(yp).astype(jnp.int32)
+    x1 = jnp.floor(xp).astype(jnp.int32)
+    y2 = jnp.minimum(y1 + 1, h - 1)
+    x2 = jnp.minimum(x1 + 1, w - 1)
+    oy = (yp - y1.astype(src.dtype))[:, None]          # [OH, 1]
+    ox = (xp - x1.astype(src.dtype))[None, :]          # [1, OW]
+
+    f11 = src[y1][:, x1]
+    f12 = src[y1][:, x2]
+    f21 = src[y2][:, x1]
+    f22 = src[y2][:, x2]
+
+    top = (1 - ox) * f11 + ox * f12
+    bot = (1 - ox) * f21 + ox * f22
+    return (1 - oy) * top + oy * bot

@@ -1,0 +1,94 @@
+"""Jit'd wrapper + registry declaration for flash attention.
+
+Problem dims: {"sq", "skv", "d", "hq", "hkv", "window"(0=none)}.
+Tile rank 2 = (bq, bkv). VMEM per step: q + k + v + out tiles + f32 scratch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Mapping
+
+import jax
+
+from repro.core import registry
+from repro.core.cost_model import TileWorkload
+from repro.core.tiling import TileConstraints, TileShape, cdiv, dtype_bytes
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_dense_ref, flash_attention_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "q_offset",
+                     "tile", "interpret"),
+)
+def attend(q, k, v, *, causal=True, window=None, softcap=None, scale=None,
+           q_offset=0, tile=(512, 512), interpret=False):
+    return flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        q_offset=q_offset, tile=tile, interpret=interpret,
+    )
+
+
+def _constraints(problem: Mapping[str, int]) -> TileConstraints:
+    return TileConstraints(
+        rank=2, max_dims=(problem["sq"], problem["skv"]),
+        mxu_dims=(0, 1), lane_dim=1, sublane_dim=0,
+    )
+
+
+def _vmem_bytes(tile: TileShape, problem: Mapping[str, int], dtype: str) -> float:
+    bq, bkv = tile
+    d = problem["d"]
+    b = dtype_bytes(dtype)
+    io_tiles = bq * d * b + 2 * bkv * d * b + bq * d * b
+    scratch = bq * 128 * 4 * 2 + bq * d * 4
+    logits = bq * bkv * 4  # in-register/VMEM intermediate
+    return io_tiles + scratch + logits
+
+
+def _workload(tile: TileShape, problem: Mapping[str, int], dtype: str) -> TileWorkload:
+    bq, bkv = tile
+    d = problem["d"]
+    b = dtype_bytes(dtype)
+    window = problem.get("window", 0)
+    # Causal/window skipping halves (or more) the average visited kv blocks;
+    # approximate the visited fraction analytically.
+    if window:
+        visit = min(1.0, (window + bkv) / problem["skv"])
+    else:
+        visit = 0.5 + 0.5 * bq / problem["sq"]  # causal triangle
+    flops = 2.0 * bq * bkv * d * 2 * visit       # qk^T and pv
+    # K/V stream dominates HBM traffic; q/out amortize over the kv loop.
+    n_kv = cdiv(problem["skv"], bkv)
+    hbm = (2 * bkv * d * b) * visit + (2 * bq * d * b) / n_kv
+    return TileWorkload(
+        flops=flops,
+        hbm_bytes=hbm,
+        row_segments=bkv // 8,                  # sublane segments of K stream
+        row_stride_bytes=float(d * b),
+        pad_waste=max(1.0, 128 / d),            # head_dim < lane pad waste
+    )
+
+
+def _n_tiles(tile: TileShape, problem: Mapping[str, int]) -> int:
+    bq, bkv = tile
+    return (
+        problem["hq"] * cdiv(problem["sq"], bq) * cdiv(problem["skv"], bkv)
+    )
+
+
+def _default_tile(problem: Mapping[str, int], dtype: str) -> TileShape:
+    bq = min(512, problem["sq"])
+    bkv = min(1024, problem["skv"])
+    return TileShape((bq, bkv))
+
+
+registry.register(registry.KernelSpec(
+    name="flash_attention",
+    constraints=_constraints,
+    vmem_bytes=_vmem_bytes,
+    workload=_workload,
+    n_tiles=_n_tiles,
+    default_tile=_default_tile,
+))

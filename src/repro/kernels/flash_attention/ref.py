@@ -1,0 +1,147 @@
+"""Reference attention implementations.
+
+``attention_dense_ref`` — O(S^2) materialized oracle, small shapes only;
+    the ground truth for kernel and chunked-reference tests.
+``flash_attention_ref`` — chunked online-softmax in pure lax.scan. Same
+    math as the Pallas kernel, differentiable, memory O(S * chunk). This is
+    also the path the distributed model lowers on non-TPU backends (Pallas
+    TPU kernels cannot lower to host HLO), so the dry-run's HLO reflects a
+    flash-style memory footprint rather than a naive S^2 one.
+
+Shared semantics: q [B, Hq, Sq, D], k/v [B, Hkv, Skv, D] with Hq % Hkv == 0
+(GQA broadcast), optional causal mask with ``q_offset`` (decode: queries
+start at position ``q_offset``), optional sliding ``window`` (attend to
+keys with q_pos - window < k_pos <= q_pos), optional logit ``softcap``
+(gemma2: s = cap * tanh(s / cap)).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags
+
+NEG_INF = -2.0e30
+
+
+def _logits_mask(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """[Sq, Skv] boolean mask of *visible* positions."""
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    return mask
+
+
+def _expand_gqa(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, h, s, d = k.shape
+    return jnp.broadcast_to(k[:, :, None], (b, h, n_rep, s, d)).reshape(
+        b, h * n_rep, s, d
+    )
+
+
+def attention_dense_ref(
+    q, k, v, *, causal: bool = True, window: Optional[int] = None,
+    softcap: Optional[float] = None, scale: Optional[float] = None,
+    q_offset: int = 0,
+):
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0
+    k = _expand_gqa(k, hq // hkv)
+    v = _expand_gqa(v, hq // hkv)
+    scale = scale if scale is not None else d ** -0.5
+
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(skv)
+    mask = _logits_mask(q_pos, k_pos, causal, window)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum(
+        "bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    ).astype(q.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "q_offset", "chunk"),
+)
+def flash_attention_ref(
+    q, k, v, *, causal: bool = True, window: Optional[int] = None,
+    softcap: Optional[float] = None, scale: Optional[float] = None,
+    q_offset: int = 0, chunk: int = 512,
+):
+    """Online-softmax attention, scanned over kv chunks."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    n_rep = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    chunk = min(chunk, skv)
+    if skv % chunk:
+        # Largest divisor of skv <= requested chunk (e.g. whisper's 1500
+        # encoder frames with a 512 request -> 375).
+        chunk = next(c for c in range(chunk, 0, -1) if skv % c == 0)
+    n_chunks = skv // chunk
+
+    # GQA: repeat kv up to the q-head count. jnp.repeat partitions cleanly
+    # when heads are sharded (it is a gather along the head axis), unlike a
+    # [b, hkv, rep, ...] grouping reshape which splits the sharded axis.
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=1)
+        v = jnp.repeat(v, n_rep, axis=1)
+
+    compute_dtype = (q.dtype if flags.ATTN_COMPUTE_BF16 else jnp.float32)
+    qf = q.astype(compute_dtype) * jnp.asarray(scale, compute_dtype)
+    q_pos = q_offset + jnp.arange(sq)
+
+    # [n_chunks, ...] leading-axis chunking for scan.
+    kc = k.reshape(b, hq, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hq, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        idx, k_blk, v_blk = xs
+        k_pos = idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum(
+            "bhqd,bhkd->bhqk", qf, k_blk.astype(qf.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = _logits_mask(q_pos, k_pos, causal, window)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(compute_dtype),
+            v_blk.astype(compute_dtype),
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hq, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hq, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (jnp.arange(n_chunks), kc, vc),
+        unroll=flags.scan_unroll(),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the tiled matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray, out_dtype=None) -> jnp.ndarray:
+    """a [M, K] @ b [K, N] with f32 accumulation, cast to ``out_dtype``."""
+    out_dtype = out_dtype or a.dtype
+    acc = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    return acc.astype(out_dtype)

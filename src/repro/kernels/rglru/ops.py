@@ -1,0 +1,75 @@
+"""Jit'd wrapper + registry declaration for the RG-LRU scan kernel.
+
+Problem dims: {"s", "f"} (per batch element). Tile rank 2 = (bt, bf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import registry
+from repro.core.cost_model import TileWorkload
+from repro.core.tiling import TileConstraints, TileShape, cdiv, dtype_bytes
+from repro.kernels.rglru.ref import rglru_ref
+from repro.kernels.rglru.rglru import rglru_scan
+
+
+@functools.partial(jax.jit, static_argnames=("c", "tile", "interpret"))
+def rglru(x, r, i, a_param, h0=None, c: float = 8.0,
+          tile=(128, 512), interpret: bool = False):
+    """Full RG-LRU: gate math in jnp (fused by XLA), scan in Pallas."""
+    b, s, f = x.shape
+    log_a = -c * jax.nn.softplus(a_param)[None, None, :] * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    inp = beta * (i * x)
+    h0 = jnp.zeros((b, f), x.dtype) if h0 is None else h0
+    return rglru_scan(a.astype(x.dtype), inp.astype(x.dtype), h0,
+                      tile=tile, interpret=interpret)
+
+
+def _constraints(problem: Mapping[str, int]) -> TileConstraints:
+    return TileConstraints(
+        rank=2, max_dims=(problem["s"], problem["f"]),
+        lane_dim=1, sublane_dim=0,
+    )
+
+
+def _vmem_bytes(tile: TileShape, problem: Mapping[str, int], dtype: str) -> float:
+    bt, bf = tile
+    b = dtype_bytes(dtype)
+    return 2 * bt * bf * b + bt * bf * b + 2 * bf * 4  # a,x in + y out + state
+
+
+def _workload(tile: TileShape, problem: Mapping[str, int], dtype: str) -> TileWorkload:
+    bt, bf = tile
+    b = dtype_bytes(dtype)
+    return TileWorkload(
+        flops=2.0 * bt * bf,                  # fma per element
+        hbm_bytes=3.0 * bt * bf * b,          # read a, x; write y
+        row_segments=bt,                      # one DMA row per time step
+        row_stride_bytes=float(problem["f"] * b),
+        pad_waste=1.0,
+    )
+
+
+def _n_tiles(tile: TileShape, problem: Mapping[str, int]) -> int:
+    bt, bf = tile
+    return cdiv(problem["s"], bt) * cdiv(problem["f"], bf)
+
+
+def _default_tile(problem: Mapping[str, int], dtype: str) -> TileShape:
+    return TileShape((min(128, problem["s"]), min(1024, problem["f"])))
+
+
+registry.register(registry.KernelSpec(
+    name="rglru",
+    constraints=_constraints,
+    vmem_bytes=_vmem_bytes,
+    workload=_workload,
+    n_tiles=_n_tiles,
+    default_tile=_default_tile,
+))

@@ -1,0 +1,68 @@
+"""Pure-jnp oracle for the RG-LRU (Real-Gated Linear Recurrent Unit).
+
+Griffin / RecurrentGemma recurrence (arXiv:2402.19427 eq. 3-4):
+
+    r_t = sigmoid(x_t @ W_r + b_r)            (recurrence gate, computed outside)
+    i_t = sigmoid(x_t @ W_i + b_i)            (input gate, computed outside)
+    log_a_t = -c * softplus(Lambda) * r_t     (c = 8)
+    a_t = exp(log_a_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The kernel consumes precomputed gates (the matmuls belong to the matmul
+kernel); its job is the sequential scan, which is the memory-bound hot loop
+the Griffin authors hand-wrote a Pallas kernel for.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags
+
+
+def rglru_ref(x, r, i, a_param, h0=None, c: float = 8.0):
+    """x, r, i: [B, S, F]; a_param (Lambda): [F]; h0: [B, F] or None.
+
+    Returns (y [B, S, F], h_final [B, F]). In analysis mode the linear
+    recurrence runs as an associative scan (no while loop, so XLA cost
+    analysis counts its work; ~2x the flops of the sequential scan, which is
+    the honest TPU lowering trade-off anyway).
+    """
+    b, s, f = x.shape
+    log_a = -c * jax.nn.softplus(a_param)[None, None, :] * r  # [B, S, F]
+    a = jnp.exp(log_a)
+    # Multiply by sqrt(1 - a^2) for variance preservation (Griffin eq. 4).
+    gated_x = i * x
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    inp = beta * gated_x
+
+    h0 = jnp.zeros((b, f), x.dtype) if h0 is None else h0
+    af = a.astype(jnp.float32)
+    xf = inp.astype(jnp.float32)
+
+    if flags.ANALYSIS_UNROLL:
+        # Fold h0 into the first input: x_1' = x_1 + a_1 * h_0, then run an
+        # associative scan: (a2, x2) o (a1, x1) = (a1*a2, a2*x1 + x2).
+        x1 = xf[:, :1] + af[:, :1] * h0.astype(jnp.float32)[:, None]
+        xh = jnp.concatenate([x1, xf[:, 1:]], axis=1)
+
+        def combine(left, right):
+            al, xl = left
+            ar, xr = right
+            return al * ar, ar * xl + xr
+
+        _, y = jax.lax.associative_scan(combine, (af, xh), axis=1)
+        h_last = y[:, -1]
+        return y.astype(x.dtype), h_last.astype(x.dtype)
+
+    def step(h, xs):
+        a_t, in_t = xs
+        h_new = a_t * h + in_t
+        return h_new, h_new
+
+    h_last, ys = jax.lax.scan(
+        step,
+        h0.astype(jnp.float32),
+        (af.transpose(1, 0, 2), xf.transpose(1, 0, 2)),
+    )
+    return ys.transpose(1, 0, 2).astype(x.dtype), h_last.astype(x.dtype)

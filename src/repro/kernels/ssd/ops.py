@@ -1,0 +1,86 @@
+"""Jit'd wrapper + registry declaration for the SSD kernel.
+
+Problem dims: {"s", "h", "p", "n"}. Tile rank 1 = (chunk,).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import registry
+from repro.core.cost_model import TileWorkload
+from repro.core.tiling import TileConstraints, TileShape, cdiv, dtype_bytes
+from repro.kernels.ssd.ref import ssd_chunked_ref, ssd_ref
+from repro.kernels.ssd.ssd import ssd_scan
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, Bm, C, D=None, h0=None, chunk: int = 128,
+        interpret: bool = False):
+    """Full SSD op: discretization in jnp, chunk scan in Pallas."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    dtf = dt.astype(jnp.float32)
+    log_a = (dtf * A[None, None, :]).transpose(0, 2, 1)   # [B, H, S]
+    dtx = dtf[..., None] * x.astype(jnp.float32)
+    h0 = jnp.zeros((b, h, n, p), x.dtype) if h0 is None else h0
+    y, h_last = ssd_scan(
+        log_a.astype(x.dtype), dtx.astype(x.dtype), Bm, C, h0,
+        chunk=chunk, interpret=interpret,
+    )
+    if D is not None:
+        y = y + (D[None, None, :, None] * x.astype(jnp.float32)).astype(y.dtype)
+    return y, h_last
+
+
+def _constraints(problem: Mapping[str, int]) -> TileConstraints:
+    return TileConstraints(
+        rank=1, max_dims=(problem["s"],), mxu_dims=(0,),
+        lane_dim=0, sublane_dim=None,
+    )
+
+
+def _vmem_bytes(tile: TileShape, problem: Mapping[str, int], dtype: str) -> float:
+    (q,) = tile
+    p, n = problem["p"], problem["n"]
+    b = dtype_bytes(dtype)
+    io = q * b + q * p * b + 2 * q * n * b + q * p * b   # la, x, Bm, C, y
+    state = 2 * n * p * 4
+    logits = 2 * q * q * 4                                # cb + decay
+    return io + state + logits
+
+
+def _workload(tile: TileShape, problem: Mapping[str, int], dtype: str) -> TileWorkload:
+    (q,) = tile
+    p, n = problem["p"], problem["n"]
+    b = dtype_bytes(dtype)
+    flops = 2.0 * q * q * n + 2.0 * q * q * p + 2.0 * q * n * p * 2
+    hbm = (q + q * p + 2 * q * n + q * p) * b
+    return TileWorkload(
+        flops=flops,
+        hbm_bytes=float(hbm),
+        row_segments=q // 8,
+        row_stride_bytes=float(problem["h"] * p * b),
+        pad_waste=max(1.0, 128 / p) if p < 128 else 1.0,
+    )
+
+
+def _n_tiles(tile: TileShape, problem: Mapping[str, int]) -> int:
+    return problem["h"] * cdiv(problem["s"], tile[0])
+
+
+def _default_tile(problem: Mapping[str, int], dtype: str) -> TileShape:
+    return TileShape((min(256, problem["s"]),))
+
+
+registry.register(registry.KernelSpec(
+    name="ssd",
+    constraints=_constraints,
+    vmem_bytes=_vmem_bytes,
+    workload=_workload,
+    n_tiles=_n_tiles,
+    default_tile=_default_tile,
+))

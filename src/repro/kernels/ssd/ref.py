@@ -1,0 +1,118 @@
+"""Pure-jnp oracle for the Mamba-2 SSD (state-space dual) layer.
+
+Selective state-space recurrence (arXiv:2405.21060), per head:
+
+    a_t = exp(dt_t * A)                       A < 0 scalar per head
+    h_t = a_t * h_{t-1} + B_t (x) (dt_t x_t)  outer product [N] x [P]
+    y_t = C_t @ h_t  (+ D * x_t skip)
+
+``ssd_ref`` runs the literal recurrence with lax.scan (the correctness
+oracle). ``ssd_chunked_ref`` implements the chunked dual form (intra-chunk
+attention-like matmuls + inter-chunk state carry) in pure jnp — the same
+algorithm the Pallas kernel implements, and the path the distributed model
+lowers on non-TPU backends.
+
+Shapes: x [B, S, H, P]; dt [B, S, H]; A [H]; Bm, C [B, S, N] (single group,
+broadcast over heads); D [H] optional. State: [B, H, N, P].
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags
+
+
+def ssd_ref(x, dt, A, Bm, C, D=None, h0=None):
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    a = jnp.exp(dtf * A[None, None, :])                 # [B, S, H]
+    dtx = dtf[..., None] * xf                            # [B, S, H, P]
+
+    def step(hstate, xs):
+        a_t, dtx_t, b_t, c_t = xs
+        # hstate [B, H, N, P]
+        outer = b_t[:, None, :, None] * dtx_t[:, :, None, :]   # [B, H, N, P]
+        h_new = a_t[..., None, None] * hstate + outer
+        y_t = jnp.einsum("bn,bhnp->bhp", c_t, h_new)
+        return h_new, y_t
+
+    h0 = jnp.zeros((b, h, n, p), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    h_last, ys = jax.lax.scan(
+        step, h0,
+        (a.transpose(1, 0, 2), dtx.transpose(1, 0, 2, 3),
+         Bm.astype(jnp.float32).transpose(1, 0, 2),
+         C.astype(jnp.float32).transpose(1, 0, 2)),
+    )
+    y = ys.transpose(1, 0, 2, 3)                         # [B, S, H, P]
+    if D is not None:
+        y = y + D[None, None, :, None] * xf
+    return y.astype(x.dtype), h_last.astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_chunked_ref(x, dt, A, Bm, C, D=None, h0=None, chunk: int = 128):
+    """Chunked dual form; identical math, O(S*Q) intra + state carry."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    if s % chunk:
+        raise ValueError(f"seq {s} not divisible by chunk {chunk}")
+    nc = s // chunk
+
+    cdt = jnp.bfloat16 if flags.SSD_COMPUTE_BF16 else jnp.float32
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    log_a = dtf * A[None, None, :]                       # [B, S, H] (<= 0)
+    dtx = (dtf[..., None] * xf).astype(cdt)              # [B, S, H, P]
+
+    # Chunked views, scan over chunk index. Decay statistics (log_a, cumsum,
+    # exp) stay f32; the heavy [Q,Q]/[Q,P]/[N,P] einsums run in cdt with f32
+    # accumulation (preferred_element_type below).
+    la = log_a.reshape(b, nc, chunk, h).transpose(1, 0, 3, 2)     # [nc,B,H,Q]
+    xc = dtx.reshape(b, nc, chunk, h, p).transpose(1, 0, 3, 2, 4)  # [nc,B,H,Q,P]
+    bc = Bm.astype(cdt).reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+    cc = C.astype(cdt).reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    idx = jnp.arange(chunk)
+    tri = idx[:, None] >= idx[None, :]                   # causal within chunk
+
+    def body(hstate, xs):
+        la_c, x_c, b_c, c_c = xs
+        cum = jnp.cumsum(la_c, axis=-1)                  # [B,H,Q] inclusive
+        # Intra-chunk: scores[i,j] = (C_i . B_j) exp(cum_i - cum_j), i >= j.
+        cb = jnp.einsum("bin,bjn->bij", c_c, b_c,
+                        preferred_element_type=jnp.float32)  # [B,Q,Q]
+        L = jnp.where(
+            tri[None], jnp.exp(cum[:, :, :, None] - cum[:, :, None, :]), 0.0
+        )                                                # [B,H,Q,Q]
+        y_intra = jnp.einsum("bhij,bhjp->bhip",
+                             (cb[:, None] * L).astype(cdt), x_c,
+                             preferred_element_type=jnp.float32)
+        # Inter-chunk: y_i += exp(cum_i) * C_i @ h_prev.
+        y_inter = jnp.einsum("bin,bhnp->bhip", c_c, hstate.astype(cdt),
+                             preferred_element_type=jnp.float32) * jnp.exp(
+            cum
+        )[..., None]
+        # State update: h = exp(cum_last) h_prev + sum_j exp(cum_last-cum_j) B_j (x) x_j.
+        total = cum[:, :, -1]                            # [B,H]
+        w = jnp.exp(total[:, :, None] - cum)             # [B,H,Q]
+        h_new = (
+            jnp.exp(total)[:, :, None, None] * hstate
+            + jnp.einsum("bjn,bhjp->bhnp", b_c,
+                         (w[..., None] * x_c.astype(jnp.float32)).astype(cdt),
+                         preferred_element_type=jnp.float32)
+        )
+        return h_new, (y_intra + y_inter).transpose(0, 2, 1, 3)  # [B,Q,H,P]
+
+    h0 = jnp.zeros((b, h, n, p), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    h_last, ys = jax.lax.scan(body, h0, (la, xc, bc, cc),
+                              unroll=flags.scan_unroll())
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    if D is not None:
+        y = y + D[None, None, :, None] * xf
+    return y.astype(x.dtype), h_last.astype(x.dtype)

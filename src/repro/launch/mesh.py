@@ -1,0 +1,25 @@
+"""Production mesh construction. Importing this module never touches jax
+device state — ``make_production_mesh`` is a function, called only by the
+launchers after XLA flags are in place.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests, CPU demos)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,47 @@
+"""Serving launcher: batched request demo on the reduced config.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --requests 6
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import api
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b",
+                    choices=configs.list_archs())
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, max_len=args.max_len, slots=args.slots)
+
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        prompt = rng.integers(2, cfg.vocab_size, size=rng.integers(4, 12))
+        engine.add_request(prompt, max_new_tokens=args.new_tokens)
+    done = engine.run_until_done()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    for r in done:
+        print(f"req {r.rid}: {r.out_tokens}")
+    print(f"{len(done)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""ShapeDtypeStruct stand-ins for every model input — no device allocation.
+
+``input_specs(cfg, shape)`` returns the abstract batch for a (arch x shape)
+cell; ``state_specs`` builds the abstract params / optimizer / serve-state
+trees via jax.eval_shape. The dry-run lowers against these.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSpec
+from repro.models import api
+from repro.optim import adamw
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Abstract train/prefill batch for one cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if api.is_encdec(cfg):
+        return {
+            "frames": SDS((b, cfg.encoder.seq_len, cfg.d_model), jnp.bfloat16),
+            "tokens": SDS((b, s), jnp.int32),
+            "targets": SDS((b, s), jnp.int32),
+        }
+    if api.is_vlm(cfg):
+        p = cfg.encoder.seq_len
+        # Total sequence = p patch positions + text tail; loss on text only.
+        return {
+            "patch_embeds": SDS((b, p, 1024), jnp.bfloat16),
+            "tokens": SDS((b, s - p), jnp.int32),
+            "targets": SDS((b, s - p), jnp.int32),
+        }
+    return {
+        "tokens": SDS((b, s), jnp.int32),
+        "targets": SDS((b, s), jnp.int32),
+    }
+
+
+def decode_token_spec(cfg: ArchConfig, shape: ShapeSpec) -> SDS:
+    return SDS((shape.global_batch, 1), jnp.int32)
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: api.init_params(cfg, jax.random.PRNGKey(0), dtype=dtype)
+    )
+
+
+def abstract_opt_state(params, opt_cfg: adamw.AdamWConfig):
+    return jax.eval_shape(lambda p: adamw.init_state(p, opt_cfg), params)
+
+
+def abstract_serve_state(cfg: ArchConfig, shape: ShapeSpec,
+                         dtype=jnp.bfloat16, params=None):
+    """Abstract KV/recurrent state for a decode cell (cache len = seq_len)."""
+    b, s = shape.global_batch, shape.seq_len
+    if api.is_encdec(cfg):
+        enc = SDS((b, cfg.encoder.seq_len, cfg.d_model), dtype)
+        return jax.eval_shape(
+            lambda p, e: api.make_serve_state(
+                cfg, b, s, dtype, enc_out=e, params=p),
+            params, enc,
+        )
+    from repro.models import transformer as T
+    return jax.eval_shape(
+        lambda: T.make_caches(cfg, b, s, dtype,
+                              ring_local=bool(cfg.attn_window))
+    )

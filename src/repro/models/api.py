@@ -1,0 +1,120 @@
+"""Unified model API across families (decoder-only, vlm, enc-dec).
+
+Batch conventions:
+    LM:    {"tokens": [B,S] int32, "targets": [B,S] int32}
+    VLM:   + {"patch_embeds": [B, P, 1024]} (frontend stub); tokens are the
+             text tail, total sequence = P + S_text
+    audio: {"frames": [B, S_enc, D]} + tokens/targets for the decoder
+
+Serve state is an opaque pytree from ``make_serve_state`` consumed by
+``prefill`` / ``decode_step``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec as E
+from repro.models import transformer as T
+from repro.models.context import DistContext
+
+
+def is_encdec(cfg: ArchConfig) -> bool:
+    return cfg.encoder is not None and cfg.encoder.kind == "audio"
+
+
+def is_vlm(cfg: ArchConfig) -> bool:
+    return cfg.encoder is not None and cfg.encoder.kind == "vision"
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.float32):
+    if is_encdec(cfg):
+        return E.init_params(cfg, key, dtype)
+    return T.init_params(cfg, key, dtype)
+
+
+def param_logical_axes(cfg: ArchConfig):
+    if is_encdec(cfg):
+        return E.param_logical_axes(cfg)
+    return T.param_logical_axes(cfg)
+
+
+def train_loss(
+    params, cfg: ArchConfig, batch: Dict[str, Any],
+    ctx: Optional[DistContext] = None, remat: bool = True,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Scalar loss + metrics. Differentiable."""
+    targets = batch["targets"]
+    if is_encdec(cfg):
+        enc = E.encode(params, cfg, batch["frames"], ctx)
+        hidden = E.decode_train(params, cfg, batch["tokens"], enc, ctx,
+                                return_hidden=True)
+        head = params["embed"].T
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        out = T.forward(
+            params, cfg, batch["tokens"], ctx=ctx,
+            patch_embeds=batch.get("patch_embeds"), remat=remat,
+            logits_mode="hidden",
+        )
+        hidden, aux = out.hidden, out.aux_loss
+        if is_vlm(cfg):
+            # Loss only on text positions (after the patch prefix).
+            p = batch["patch_embeds"].shape[1]
+            hidden = hidden[:, p:]
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+    ce = T.fused_lm_loss(head, hidden, targets, cfg)
+    loss = ce + aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def make_serve_state(
+    cfg: ArchConfig, batch: int, max_len: int, dtype,
+    enc_out: Optional[jnp.ndarray] = None,
+    params=None, ring_local: bool = False,
+):
+    if is_encdec(cfg):
+        assert enc_out is not None and params is not None
+        return E.make_decode_caches(params, cfg, enc_out, batch, max_len, dtype)
+    return T.make_caches(cfg, batch, max_len, dtype, ring_local=ring_local)
+
+
+def prefill(
+    params, cfg: ArchConfig, batch: Dict[str, Any], max_len: int,
+    dtype=jnp.float32, ctx: Optional[DistContext] = None,
+    ring_local: bool = False,
+):
+    """Returns (last-token logits [B, Vpad], serve_state)."""
+    if is_encdec(cfg):
+        enc = E.encode(params, cfg, batch["frames"], ctx)
+        logits, caches = E.prefill(
+            params, cfg, batch["tokens"], enc, max_len, dtype, ctx)
+        return logits[:, -1], caches
+    caches = T.make_caches(
+        cfg, batch["tokens"].shape[0], max_len, dtype, ring_local=ring_local)
+    out = T.forward(
+        params, cfg, batch["tokens"], ctx=ctx, caches=caches,
+        patch_embeds=batch.get("patch_embeds"), remat=False,
+    )
+    return out.logits[:, -1], out.caches
+
+
+def decode_step(
+    params, cfg: ArchConfig, token: jnp.ndarray, state,
+    ctx: Optional[DistContext] = None,
+):
+    """token [B,1] -> (logits [B, Vpad], new state)."""
+    if is_encdec(cfg):
+        logits, new = E.decode_step(params, cfg, token, state, ctx)
+        return logits[:, 0], new
+    out = T.forward(params, cfg, token, ctx=ctx, caches=state, decode=True,
+                    remat=False)
+    return out.logits[:, 0], out.caches

@@ -1,0 +1,278 @@
+"""Attention block: GQA with RoPE, optional SWA window / softcap / QKV bias /
+q-k norms, head padding for TP, and KV caches (full and ring-buffer).
+
+The full-sequence path lowers through the chunked flash reference (same math
+as the Pallas kernel; see kernels/flash_attention). Decode attends densely
+over the cache (O(S) memory for a single query). On real TPU deployments the
+prefill path swaps in the Pallas kernel via ``impl="pallas"``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import flags
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.models.layers import ParamDef, apply_rope, rms_norm
+
+NEG_INF = -2.0e30
+
+
+def attn_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d, hd = cfg.d_model, cfg.head_dim_
+    h, hkv = cfg.padded_heads, cfg.padded_kv_heads
+    defs = {
+        "wq": ParamDef((d, h, hd), ("d_model", "heads", None)),
+        "wk": ParamDef((d, hkv, hd), ("d_model", "kv_heads", None)),
+        "wv": ParamDef((d, hkv, hd), ("d_model", "kv_heads", None)),
+        "wo": ParamDef((h, hd, d), ("heads", None, "d_model"), scale=1.0),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((h, hd), ("heads", None), init="zeros")
+        defs["bk"] = ParamDef((hkv, hd), ("kv_heads", None), init="zeros")
+        defs["bv"] = ParamDef((hkv, hd), ("kv_heads", None), init="zeros")
+    if cfg.use_qk_norm:
+        defs["q_norm"] = ParamDef((hd,), (None,), init="zeros")
+        defs["k_norm"] = ParamDef((hd,), (None,), init="zeros")
+    return defs
+
+
+def make_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype,
+                  ring: bool = False) -> Dict[str, Any]:
+    hkv, hd = cfg.padded_kv_heads, cfg.head_dim_
+    cache = {
+        "k": jnp.zeros((batch, hkv, max_len, hd), dtype),
+        "v": jnp.zeros((batch, hkv, max_len, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if ring:
+        cache["slot_pos"] = jnp.full((max_len,), -1, jnp.int32)
+    return cache
+
+
+def _project_qkv(p, cfg: ArchConfig, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.use_qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # [B, H, S, hd]
+    return (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+
+
+def _out_proj(p, cfg: ArchConfig, attn_out, x_dtype):
+    # Mask padded heads so they are numerically inert (grads included).
+    h = cfg.padded_heads
+    if h != cfg.n_heads:
+        mask = (jnp.arange(h) < cfg.n_heads).astype(attn_out.dtype)
+        attn_out = attn_out * mask[None, :, None, None]
+    return jnp.einsum(
+        "bhsk,hkd->bsd", attn_out, p["wo"].astype(x_dtype)
+    )
+
+
+def attn_forward(
+    p, cfg: ArchConfig, x, positions, *,
+    window: Optional[int] = None,
+    cache: Optional[Dict[str, Any]] = None,
+    impl: str = "reference",
+) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]]]:
+    """Full-sequence attention (train/prefill). Fills ``cache`` if given."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    scale = cfg.query_scale or cfg.head_dim_ ** -0.5
+    kwargs = dict(
+        causal=True, window=window,
+        softcap=cfg.attn_softcap or None, scale=scale,
+    )
+    if impl == "pallas":
+        out = flash_attention(q, k, v, **kwargs)
+    else:
+        chunk = 2048 if flags.ANALYSIS_UNROLL else 512
+        out = flash_attention_ref(q, k, v, chunk=min(chunk, s), **kwargs)
+    y = _out_proj(p, cfg, out, x.dtype)
+    new_cache = None
+    if cache is not None:
+        max_len = cache["k"].shape[2]
+        if "slot_pos" in cache:
+            # Ring prefill: keep the last ``max_len`` positions.
+            keep = min(s, max_len)
+            kk = k[:, :, -keep:]
+            vv = v[:, :, -keep:]
+            pos_tail = positions[0, -keep:]
+            slots = pos_tail % max_len
+            ck = cache["k"].at[:, :, slots].set(kk.astype(cache["k"].dtype))
+            cv = cache["v"].at[:, :, slots].set(vv.astype(cache["v"].dtype))
+            sp = cache["slot_pos"].at[slots].set(pos_tail)
+            new_cache = {"k": ck, "v": cv, "pos": jnp.asarray(s, jnp.int32),
+                         "slot_pos": sp}
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)
+            )
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)
+            )
+            new_cache = {"k": ck, "v": cv, "pos": jnp.asarray(s, jnp.int32)}
+    return y, new_cache
+
+
+def _decode_attn_sharded(cfg: ArchConfig, ctx, qd, k_new, v_new, cache,
+                         window: Optional[int], scale: float):
+    """Flash-decoding: LSE-combined attention over the seq-sharded KV cache.
+
+    Each model shard attends over its local sequence chunk with the GQA
+    grouped contraction (no kv repeat!), then partial softmax statistics
+    combine with pmax/psum of [B, H]-sized tensors — collective bytes drop
+    from cache-sized copies to KBs. The single-position cache update runs
+    inside the shard_map on the owner shard only.
+    """
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = ctx.mesh
+    ax = ctx.model_axis
+    n_shards = mesh.shape[ax]
+    b, hq, hd = qd.shape
+    hkv, s_total = cache["k"].shape[1], cache["k"].shape[2]
+    s_loc = s_total // n_shards
+    n_rep = hq // hkv
+    pos = cache["pos"]
+
+    def batch_entry(n):
+        use, rem = [], n
+        for a in ctx.batch_axes:
+            if rem % mesh.shape[a] == 0 and rem >= mesh.shape[a]:
+                use.append(a)
+                rem //= mesh.shape[a]
+        return tuple(use) if len(use) > 1 else (use[0] if use else None)
+
+    bent = batch_entry(b)
+    q_spec = P(bent, None, None)
+    new_spec = P(bent, None, None, None)
+    cache_spec = P(bent, None, ax, None)
+
+    def body(q_loc, kn, vn, k_loc, v_loc, pos_):
+        i = jax.lax.axis_index(ax)
+        # Owner shard writes the new K/V at the local offset.
+        owner = pos_ // s_loc
+        local = pos_ % s_loc
+        k_upd = jax.lax.dynamic_update_slice(
+            k_loc, kn.astype(k_loc.dtype), (0, 0, local, 0))
+        v_upd = jax.lax.dynamic_update_slice(
+            v_loc, vn.astype(v_loc.dtype), (0, 0, local, 0))
+        k_loc = jnp.where(i == owner, k_upd, k_loc)
+        v_loc = jnp.where(i == owner, v_upd, v_loc)
+
+        k_pos = i * s_loc + jnp.arange(s_loc)
+        valid = k_pos <= pos_
+        if window is not None:
+            valid &= k_pos > pos_ - window
+        bl = q_loc.shape[0]
+        qg = q_loc.reshape(bl, hkv, n_rep, hd).astype(k_loc.dtype)
+        s = jnp.einsum(
+            "bgrk,bgsk->bgrs", qg, k_loc,
+            preferred_element_type=jnp.float32,
+        ) * scale
+        if cfg.attn_softcap:
+            s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m = jnp.max(s, axis=-1)
+        m_g = jax.lax.pmax(m, ax)                        # [B,Hkv,rep]
+        prob = jnp.exp(s - m_g[..., None])
+        l_g = jax.lax.psum(jnp.sum(prob, axis=-1), ax)
+        pv = jnp.einsum(
+            "bgrs,bgsk->bgrk", prob.astype(v_loc.dtype), v_loc,
+            preferred_element_type=jnp.float32,
+        )
+        pv_g = jax.lax.psum(pv, ax)
+        out = pv_g / jnp.maximum(l_g, 1e-30)[..., None]
+        return out.reshape(bl, hq, hd), k_loc, v_loc
+
+    out, ck, cv = shard_map(
+        body, mesh=mesh,
+        in_specs=(q_spec, new_spec, new_spec, cache_spec, cache_spec, P()),
+        out_specs=(q_spec, cache_spec, cache_spec),
+        check_vma=False,
+    )(qd, k_new, v_new, cache["k"], cache["v"], pos)
+    out = out.astype(qd.dtype)
+    return out[:, :, None], {"k": ck, "v": cv, "pos": pos + 1}
+
+
+def attn_decode(
+    p, cfg: ArchConfig, x, *, cache: Dict[str, Any],
+    window: Optional[int] = None, ctx=None,
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Single-token decode: x [B, 1, D]; dense masked attend over the cache."""
+    b = x.shape[0]
+    pos = cache["pos"]                                   # scalar int32
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)  # [B, H(kv), 1, hd]
+    scale = cfg.query_scale or cfg.head_dim_ ** -0.5
+
+    max_len = cache["k"].shape[2]
+    if (flags.DECODE_ATTN_SHARDED and ctx is not None and ctx.mesh is not None
+            and "slot_pos" not in cache
+            and cfg.padded_kv_heads < ctx.mesh.shape[ctx.model_axis]
+            and max_len % ctx.mesh.shape[ctx.model_axis] == 0):
+        out, new_cache = _decode_attn_sharded(
+            cfg, ctx, q[:, :, 0], k_new, v_new, cache, window, scale)
+        y = _out_proj(p, cfg, out, x.dtype)
+        return y, new_cache
+    if "slot_pos" in cache:
+        slot = pos % max_len
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, 0, slot, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, 0, slot, 0))
+        slot_pos = cache["slot_pos"].at[slot].set(pos)
+        k_pos = slot_pos                                  # [W] absolute
+        valid = k_pos >= 0
+    else:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, 0, pos, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, 0, pos, 0))
+        slot_pos = None
+        k_pos = jnp.arange(max_len)
+        valid = k_pos <= pos
+
+    mask = valid & (k_pos <= pos)
+    if window is not None:
+        mask &= k_pos > pos - window
+
+    hq, hkv = cfg.padded_heads, cfg.padded_kv_heads
+    n_rep = hq // hkv
+    # GQA via kv repeat (gather) — partitions cleanly under head sharding.
+    # Keep K/V in cache dtype: upcasting a 32k-seq cache to f32 would
+    # materialize gigabytes per layer; the MXU accumulates in f32 anyway
+    # (preferred_element_type).
+    ke = jnp.repeat(ck, n_rep, axis=1) if n_rep > 1 else ck
+    ve = jnp.repeat(cv, n_rep, axis=1) if n_rep > 1 else cv
+    qd = q[:, :, 0].astype(ke.dtype)                      # [B, Hq, hd]
+    s = jnp.einsum(
+        "bhk,bhsk->bhs", qd, ke, preferred_element_type=jnp.float32,
+    ) * scale                                             # [B, Hq, S] f32
+    if cfg.attn_softcap:
+        s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1).astype(ve.dtype)
+    out = jnp.einsum(
+        "bhs,bhsk->bhk", pattn, ve, preferred_element_type=jnp.float32,
+    )[:, :, None].astype(x.dtype)                          # [B, Hq, 1, hd]
+    y = _out_proj(p, cfg, out, x.dtype)
+    new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+    if slot_pos is not None:
+        new_cache["slot_pos"] = slot_pos
+    return y, new_cache

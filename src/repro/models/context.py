@@ -1,0 +1,57 @@
+"""DistContext: how model code sees the mesh without naming mesh axes.
+
+``None`` context = single-device (tests, smoke). With a context, model code
+applies logical sharding constraints and MoE uses shard_map EP. The logical
+-> mesh axis mapping lives in distributed/sharding_rules.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    mesh: Optional[jax.sharding.Mesh] = None
+    batch_axes: Tuple[str, ...] = ("data",)   # axes sharding the batch dim
+    model_axis: str = "model"                 # TP / EP axis
+    # Logical axis name -> mesh axis (None = replicated).
+    rules: Tuple[Tuple[str, Optional[object]], ...] = (
+        ("batch", None),        # filled by with_batch_axes below
+        ("seq", None),
+        ("d_model", None),
+        ("heads", "model"),
+        ("kv_heads", "model"),
+        ("ff", "model"),
+        ("vocab", "model"),
+        ("experts", "model"),
+        ("lru", "model"),
+        ("ssm_heads", "model"),
+    )
+
+    def spec_for(self, logical_axes: Tuple[Optional[str], ...]) -> PartitionSpec:
+        table = dict(self.rules)
+        out = []
+        for ax in logical_axes:
+            if ax == "batch":
+                out.append(self.batch_axes if len(self.batch_axes) > 1
+                           else self.batch_axes[0])
+            elif ax is None:
+                out.append(None)
+            else:
+                out.append(table.get(ax))
+        return PartitionSpec(*out)
+
+    def constrain(self, x, *logical_axes):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, self.spec_for(logical_axes))
+        )
+
+
+def null_context() -> DistContext:
+    return DistContext(mesh=None)

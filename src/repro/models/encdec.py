@@ -1,0 +1,293 @@
+"""Encoder-decoder stack (whisper-large-v3 backbone).
+
+The audio conv frontend is a STUB per the task spec: the encoder consumes
+precomputed frame embeddings [B, S_enc, D] (what the two conv layers would
+produce). Architecture follows whisper: pre-LN transformer, sinusoidal
+positions, plain GELU MLP, MHA (no GQA), decoder with causal self-attention
++ cross-attention, tied decoder embedding head.
+
+Param layout mirrors models/transformer.py (stacked layers, scanned), so
+sharding rules apply uniformly.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.models import flags
+from repro.models.context import DistContext
+from repro.models.layers import ParamDef, axes_tree, init_tree, layer_norm
+
+NEG_INF = -2.0e30
+
+
+def _sinusoid(seq: int, d: int):
+    pos = jnp.arange(seq)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / (10000.0 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _mha_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d, hd, h = cfg.d_model, cfg.head_dim_, cfg.padded_heads
+    return {
+        "wq": ParamDef((d, h, hd), ("d_model", "heads", None)),
+        "wk": ParamDef((d, h, hd), ("d_model", "heads", None)),
+        "wv": ParamDef((d, h, hd), ("d_model", "heads", None)),
+        "wo": ParamDef((h, hd, d), ("heads", None, "d_model")),
+    }
+
+
+def _ln_defs(cfg: ArchConfig, name: str) -> Dict[str, ParamDef]:
+    return {
+        f"{name}_w": ParamDef((cfg.d_model,), (None,), init="ones"),
+        f"{name}_b": ParamDef((cfg.d_model,), (None,), init="zeros"),
+    }
+
+
+def _ff_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w1": ParamDef((d, f), ("d_model", "ff")),
+        "b1": ParamDef((f,), ("ff",), init="zeros"),
+        "w2": ParamDef((f, d), ("ff", "d_model")),
+        "b2": ParamDef((d,), (None,), init="zeros"),
+    }
+
+
+def _enc_layer_defs(cfg):
+    return {**_ln_defs(cfg, "ln1"), "attn": _mha_defs(cfg),
+            **_ln_defs(cfg, "ln2"), "ff": _ff_defs(cfg)}
+
+
+def _dec_layer_defs(cfg):
+    return {**_ln_defs(cfg, "ln1"), "self_attn": _mha_defs(cfg),
+            **_ln_defs(cfg, "lnx"), "cross_attn": _mha_defs(cfg),
+            **_ln_defs(cfg, "ln2"), "ff": _ff_defs(cfg)}
+
+
+def _stack(defs, count):
+    return jax.tree.map(
+        lambda pd: ParamDef((count,) + pd.shape, (None,) + pd.axes,
+                            init=pd.init, scale=pd.scale),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def model_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    enc_l = cfg.encoder.n_layers
+    return {
+        "embed": ParamDef((cfg.padded_vocab, cfg.d_model),
+                          ("vocab", "d_model"), init="normal", scale=0.02),
+        "enc_layers": _stack(_enc_layer_defs(cfg), enc_l),
+        "dec_layers": _stack(_dec_layer_defs(cfg), cfg.n_layers),
+        **_ln_defs(cfg, "enc_final"),
+        **_ln_defs(cfg, "dec_final"),
+    }
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32):
+    return init_tree(model_defs(cfg), key, dtype)
+
+
+def param_logical_axes(cfg: ArchConfig):
+    return axes_tree(model_defs(cfg))
+
+
+def _ln(p, name, x, eps):
+    return layer_norm(x, p[f"{name}_w"], p[f"{name}_b"], eps)
+
+
+def _heads(cfg, p, x, w):  # [B,S,D] x [D,H,hd] -> [B,H,S,hd]
+    return jnp.einsum("bsd,dhk->bhsk", x, p[w].astype(x.dtype))
+
+
+def _mha(p, cfg: ArchConfig, xq, xkv, causal: bool,
+         cached_kv=None, q_offset: int = 0):
+    """Returns (out [B,Sq,D], (k, v)). cached_kv short-circuits projection."""
+    q = _heads(cfg, p, xq, "wq")
+    if cached_kv is None:
+        k = _heads(cfg, p, xkv, "wk")
+        v = _heads(cfg, p, xkv, "wv")
+    else:
+        k, v = cached_kv
+    out = flash_attention_ref(
+        q, k, v, causal=causal, q_offset=q_offset,
+        chunk=min(2048 if flags.ANALYSIS_UNROLL else 512, k.shape[2]),
+    )
+    h = cfg.padded_heads
+    if h != cfg.n_heads:
+        mask = (jnp.arange(h) < cfg.n_heads).astype(out.dtype)
+        out = out * mask[None, :, None, None]
+    return jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(xq.dtype)), (k, v)
+
+
+def _ff(p, x):
+    h = jax.nn.gelu(x @ p["w1"].astype(x.dtype) + p["b1"].astype(x.dtype))
+    return h @ p["w2"].astype(x.dtype) + p["b2"].astype(x.dtype)
+
+
+def encode(params, cfg: ArchConfig, frames: jnp.ndarray,
+           ctx: Optional[DistContext] = None) -> jnp.ndarray:
+    """frames [B, S_enc, D] (precomputed conv-frontend embeddings)."""
+    x = frames + _sinusoid(frames.shape[1], cfg.d_model)[None].astype(frames.dtype)
+
+    def body(xc, lp):
+        h, _ = _mha(lp["attn"], cfg, _ln(lp, "ln1", xc, cfg.norm_eps),
+                    _ln(lp, "ln1", xc, cfg.norm_eps), causal=False)
+        xc = xc + h
+        xc = xc + _ff(lp["ff"], _ln(lp, "ln2", xc, cfg.norm_eps))
+        if ctx is not None:
+            xc = ctx.constrain(xc, "batch", None, None)
+        return xc, None
+
+    x, _ = jax.lax.scan(
+        jax.checkpoint(body, policy=flags.remat_policy()),
+        x, params["enc_layers"], unroll=flags.scan_unroll())
+    return _ln(params, "enc_final", x, cfg.norm_eps)
+
+
+def decode_train(params, cfg: ArchConfig, tokens: jnp.ndarray,
+                 enc_out: jnp.ndarray,
+                 ctx: Optional[DistContext] = None,
+                 return_hidden: bool = False) -> jnp.ndarray:
+    """Teacher-forced decoder pass -> logits [B, S, Vpad] (or hidden)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    x = x + _sinusoid(s, cfg.d_model)[None].astype(x.dtype)
+
+    def body(xc, lp):
+        h, _ = _mha(lp["self_attn"], cfg, _ln(lp, "ln1", xc, cfg.norm_eps),
+                    _ln(lp, "ln1", xc, cfg.norm_eps), causal=True)
+        xc = xc + h
+        h, _ = _mha(lp["cross_attn"], cfg, _ln(lp, "lnx", xc, cfg.norm_eps),
+                    enc_out, causal=False)
+        xc = xc + h
+        xc = xc + _ff(lp["ff"], _ln(lp, "ln2", xc, cfg.norm_eps))
+        if ctx is not None:
+            xc = ctx.constrain(xc, "batch", None, None)
+        return xc, None
+
+    x, _ = jax.lax.scan(
+        jax.checkpoint(body, policy=flags.remat_policy()),
+        x, params["dec_layers"], unroll=flags.scan_unroll(),
+    )
+    x = _ln(params, "dec_final", x, cfg.norm_eps)
+    if return_hidden:
+        return x
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    return logits
+
+
+def prefill(params, cfg: ArchConfig, tokens: jnp.ndarray, enc_out,
+            max_len: int, dtype,
+            ctx: Optional[DistContext] = None):
+    """Teacher-forced pass that also fills the self-attn KV caches.
+
+    Returns (logits [B, S, Vpad], caches ready for decode_step at pos=S).
+    """
+    b, s = tokens.shape
+    caches = make_decode_caches(params, cfg, enc_out, b, max_len, dtype)
+    x = params["embed"][tokens]
+    x = x + _sinusoid(s, cfg.d_model)[None].astype(x.dtype)
+
+    def body(xc, xs):
+        lp, sk, sv, (ck, cv) = xs
+        h = _ln(lp, "ln1", xc, cfg.norm_eps)
+        q = _heads(cfg, lp["self_attn"], h, "wq")
+        k1 = _heads(cfg, lp["self_attn"], h, "wk")
+        v1 = _heads(cfg, lp["self_attn"], h, "wv")
+        sk = jax.lax.dynamic_update_slice(sk, k1.astype(sk.dtype), (0, 0, 0, 0))
+        sv = jax.lax.dynamic_update_slice(sv, v1.astype(sv.dtype), (0, 0, 0, 0))
+        o = flash_attention_ref(q, k1, v1, causal=True,
+                                chunk=min(2048 if flags.ANALYSIS_UNROLL else 512, s))
+        hm = (jnp.arange(cfg.padded_heads) < cfg.n_heads).astype(o.dtype)
+        o = o * hm[None, :, None, None]
+        xc = xc + jnp.einsum("bhsk,hkd->bsd", o,
+                             lp["self_attn"]["wo"].astype(xc.dtype))
+        hx, _ = _mha(lp["cross_attn"], cfg, _ln(lp, "lnx", xc, cfg.norm_eps),
+                     None, causal=False, cached_kv=(ck, cv))
+        xc = xc + hx
+        xc = xc + _ff(lp["ff"], _ln(lp, "ln2", xc, cfg.norm_eps))
+        if ctx is not None:
+            xc = ctx.constrain(xc, "batch", None, None)
+        return xc, (sk, sv)
+
+    x, (nsk, nsv) = jax.lax.scan(
+        body, x,
+        (params["dec_layers"], caches["self_k"], caches["self_v"],
+         caches["cross"]),
+        unroll=flags.scan_unroll(),
+    )
+    x = _ln(params, "dec_final", x[:, -1:], cfg.norm_eps)  # head on last pos
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    caches = dict(caches, self_k=nsk, self_v=nsv,
+                  pos=jnp.asarray(s, jnp.int32))
+    return logits, caches
+
+
+def make_decode_caches(params, cfg: ArchConfig, enc_out, batch: int,
+                       max_len: int, dtype) -> Dict[str, Any]:
+    """Self-attn KV cache + precomputed cross-attn K/V per decoder layer."""
+    h, hd = cfg.padded_heads, cfg.head_dim_
+
+    def cross_kv(lp):
+        k = _heads(cfg, lp["cross_attn"], enc_out, "wk")
+        v = _heads(cfg, lp["cross_attn"], enc_out, "wv")
+        return k.astype(dtype), v.astype(dtype)
+
+    cross = jax.lax.map(cross_kv, params["dec_layers"])
+    return {
+        "self_k": jnp.zeros((cfg.n_layers, batch, h, max_len, hd), dtype),
+        "self_v": jnp.zeros((cfg.n_layers, batch, h, max_len, hd), dtype),
+        "cross": cross,
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cfg: ArchConfig, token: jnp.ndarray, caches,
+                ctx: Optional[DistContext] = None):
+    """token [B, 1] -> (logits [B, 1, Vpad], new caches)."""
+    b = token.shape[0]
+    pos = caches["pos"]
+    x = params["embed"][token]
+    d = cfg.d_model
+    posemb = _sinusoid(caches["self_k"].shape[3], d)
+    x = x + jax.lax.dynamic_slice(posemb, (pos, 0), (1, d))[None].astype(x.dtype)
+
+    def body(xc, xs):
+        lp, sk, sv, (ck, cv) = xs
+        h = _ln(lp, "ln1", xc, cfg.norm_eps)
+        q = _heads(cfg, lp["self_attn"], h, "wq")
+        k1 = _heads(cfg, lp["self_attn"], h, "wk")
+        v1 = _heads(cfg, lp["self_attn"], h, "wv")
+        sk = jax.lax.dynamic_update_slice(sk, k1.astype(sk.dtype), (0, 0, pos, 0))
+        sv = jax.lax.dynamic_update_slice(sv, v1.astype(sv.dtype), (0, 0, pos, 0))
+        mask = jnp.arange(sk.shape[2]) <= pos
+        s = jnp.einsum("bhqk,bhsk->bhqs", q.astype(jnp.float32),
+                       sk.astype(jnp.float32)) * cfg.head_dim_ ** -0.5
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqs,bhsk->bhqk", a, sv.astype(jnp.float32)).astype(xc.dtype)
+        hmask = (jnp.arange(cfg.padded_heads) < cfg.n_heads).astype(o.dtype)
+        o = o * hmask[None, :, None, None]
+        xc = xc + jnp.einsum("bhqk,hkd->bqd", o, lp["self_attn"]["wo"].astype(xc.dtype))
+        h, _ = _mha(lp["cross_attn"], cfg, _ln(lp, "lnx", xc, cfg.norm_eps),
+                    None, causal=False, cached_kv=(ck, cv))
+        xc = xc + h
+        xc = xc + _ff(lp["ff"], _ln(lp, "ln2", xc, cfg.norm_eps))
+        return xc, (sk, sv)
+
+    x, (nsk, nsv) = jax.lax.scan(
+        body, x,
+        (params["dec_layers"], caches["self_k"], caches["self_v"],
+         caches["cross"]),
+        unroll=flags.scan_unroll(),
+    )
+    x = _ln(params, "dec_final", x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    new = dict(caches, self_k=nsk, self_v=nsv, pos=pos + 1)
+    return logits, new

@@ -1,0 +1,211 @@
+"""Mixture-of-Experts block with capacity-based gather dispatch and EP.
+
+Distribution design ("masked local EP", DESIGN.md §6): experts are sharded
+over the ``model`` mesh axis. Activations arrive replicated across that axis
+(the natural state between TP blocks), every model shard computes only the
+tokens routed to ITS experts via per-expert gathered batches (static
+capacity), and partial outputs combine with the same psum a dense TP
+feed-forward would need anyway — no all-to-all in the baseline path.
+
+Dispatch is differentiable end-to-end: argsort builds contiguous expert
+groups, per-expert token indices are gathered (static [E_local, C] shape),
+expert FFs run as one batched einsum (no ragged shapes), and results
+scatter-add back weighted by gates. Over-capacity tokens drop (token-drop
+MoE, capacity_factor configurable).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import ParamDef, act_fn
+
+
+def moe_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    m = cfg.moe
+    d = cfg.d_model
+    defs = {
+        "router": ParamDef((d, m.n_experts), ("d_model", None), scale=0.1),
+        "w1": ParamDef((m.n_experts, d, m.d_expert), ("experts", "d_model", None)),
+        "w3": ParamDef((m.n_experts, d, m.d_expert), ("experts", "d_model", None)),
+        "w2": ParamDef((m.n_experts, m.d_expert, d), ("experts", None, "d_model")),
+    }
+    if m.n_shared_experts:
+        ds = m.d_shared or m.n_shared_experts * m.d_expert
+        defs["shared_w1"] = ParamDef((d, ds), ("d_model", "ff"))
+        defs["shared_w3"] = ParamDef((d, ds), ("d_model", "ff"))
+        defs["shared_w2"] = ParamDef((ds, d), ("ff", "d_model"))
+    return defs
+
+
+def _capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    m = cfg.moe
+    c = int(n_tokens * m.top_k * m.capacity_factor / m.n_experts) + 1
+    return max(8, c)
+
+
+def moe_apply_local(
+    p: Dict[str, Any], cfg: ArchConfig, x2d: jnp.ndarray,
+    n_local: int, local_offset,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Compute local experts' contribution for replicated tokens x2d [T, D].
+
+    Returns (partial_out [T, D], aux_loss scalar). ``local_offset`` may be a
+    traced scalar (derived from the mesh axis index under shard_map).
+    """
+    m = cfg.moe
+    t, d = x2d.shape
+    k = m.top_k
+    cap = _capacity(t, cfg)
+
+    logits = jnp.einsum(
+        "td,de->te", x2d.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)                     # [T, E]
+    gates, eidx = jax.lax.top_k(probs, k)                       # [T, k]
+    if m.renorm_gates:
+        gates = gates / jnp.maximum(
+            jnp.sum(gates, axis=-1, keepdims=True), 1e-9
+        )
+
+    # Load-balance aux (Switch): E * sum_e f_e * P_e over the full expert set.
+    ids_1h = jax.nn.one_hot(eidx[:, 0], m.n_experts, dtype=jnp.float32)
+    f = jnp.mean(ids_1h, axis=0)
+    pbar = jnp.mean(probs, axis=0)
+    aux = m.n_experts * jnp.sum(f * pbar) * m.router_aux_weight
+
+    flat_e = eidx.reshape(-1)                                   # [T*k]
+    local_id = flat_e - local_offset
+    is_local = (local_id >= 0) & (local_id < n_local)
+    key = jnp.where(is_local, local_id, n_local)
+    order = jnp.argsort(key)                                    # stable
+    sizes = jnp.bincount(
+        jnp.where(is_local, local_id, n_local), length=n_local + 1
+    )[:n_local]
+    starts = jnp.concatenate([jnp.zeros((1,), sizes.dtype), jnp.cumsum(sizes)[:-1]])
+    slot = starts[:, None] + jnp.arange(cap)[None, :]           # [E_loc, C]
+    valid = jnp.arange(cap)[None, :] < sizes[:, None]
+    pair = order[jnp.clip(slot, 0, t * k - 1)]                  # [E_loc, C]
+    tok = pair // k
+
+    xg = x2d[tok] * valid[..., None].astype(x2d.dtype)          # [E_loc, C, D]
+    act = act_fn(cfg.act)
+    h = act(jnp.einsum("ecd,edf->ecf", xg, p["w1"].astype(x2d.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", xg, p["w3"].astype(x2d.dtype))
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(x2d.dtype))
+
+    g = gates.reshape(-1)[pair] * valid                         # [E_loc, C]
+    contrib = out_e * g[..., None].astype(out_e.dtype)
+    y = jnp.zeros_like(x2d).at[tok.reshape(-1)].add(
+        contrib.reshape(-1, d), mode="drop",
+    )
+    return y, aux.astype(jnp.float32)
+
+
+def _shared_ff(p, cfg: ArchConfig, x2d):
+    act = act_fn(cfg.act)
+    h = act(x2d @ p["shared_w1"].astype(x2d.dtype))
+    h = h * (x2d @ p["shared_w3"].astype(x2d.dtype))
+    return h @ p["shared_w2"].astype(x2d.dtype)
+
+
+def moe_forward(
+    p: Dict[str, Any], cfg: ArchConfig, x: jnp.ndarray,
+    ctx: Optional["DistContext"] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B, S, D] -> (y [B, S, D], aux scalar)."""
+    b, s, d = x.shape
+    m = cfg.moe
+
+    if ctx is None or ctx.mesh is None:
+        x2d = x.reshape(-1, d)
+        y, aux = moe_apply_local(p, cfg, x2d, m.n_experts, 0)
+        if m.n_shared_experts:
+            y = y + _shared_ff(p, cfg, x2d)
+        return y.reshape(b, s, d), aux
+
+    return _moe_forward_sharded(p, cfg, x, ctx)
+
+
+def _moe_forward_sharded(p, cfg: ArchConfig, x, ctx):
+    """shard_map EP: experts over the model axis, tokens over batch axes.
+
+    FSDP-aware boundary: expert weights enter the shard_map STILL sharded
+    over the data axis and are all-gathered INSIDE the body. That keeps the
+    gather (and its transposed reduce-scatter in the backward) within the
+    remat'd layer body, so weight cotangents cross the boundary sharded —
+    without this, SPMD materializes data-replicated per-layer cotangents
+    across the whole backward scan (~0.14 GiB/layer on qwen3-235B).
+    """
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding_rules import param_spec
+
+    m = cfg.moe
+    b, s, d = x.shape
+    mesh = ctx.mesh
+    model_axis = ctx.model_axis
+    batch_axes = ctx.batch_axes
+    n_shards = mesh.shape[model_axis]
+    if m.n_experts % n_shards:
+        raise ValueError(
+            f"{cfg.name}: {m.n_experts} experts not divisible by "
+            f"model axis {n_shards}"
+        )
+    n_local = m.n_experts // n_shards
+    has_data = "data" in mesh.axis_names
+
+    from repro.models.layers import axes_tree as _axes  # noqa: F401
+    expert_axes = {
+        "w1": ("experts", "d_model", None),
+        "w3": ("experts", "d_model", None),
+        "w2": ("experts", None, "d_model"),
+    }
+    wspec = {"router": P()}
+    gather_dims = {}
+    for name, axes in expert_axes.items():
+        spec = param_spec(axes, p[name].shape, mesh, fsdp=has_data)
+        wspec[name] = spec
+        gather_dims[name] = next(
+            (i for i, ax in enumerate(spec) if ax == "data"), None)
+    if m.n_shared_experts:
+        wspec.update({
+            "shared_w1": P(None, model_axis),
+            "shared_w3": P(None, model_axis),
+            "shared_w2": P(model_axis, None),
+        })
+        for k in ("shared_w1", "shared_w3", "shared_w2"):
+            gather_dims[k] = None
+
+    x_spec = P(batch_axes, None, None)
+
+    def body(p_loc, x_loc):
+        # Un-FSDP the expert weights locally (bwd: reduce-scatter, inside
+        # the remat boundary).
+        p_full = dict(p_loc)
+        for name, dim in gather_dims.items():
+            if dim is not None:
+                p_full[name] = jax.lax.all_gather(
+                    p_loc[name], "data", axis=dim, tiled=True)
+        t_loc = x_loc.shape[0] * x_loc.shape[1]
+        x2d = x_loc.reshape(t_loc, d)
+        my_shard = jax.lax.axis_index(model_axis)
+        y, aux = moe_apply_local(p_full, cfg, x2d, n_local,
+                                 my_shard * n_local)
+        if m.n_shared_experts:
+            y = y + _shared_ff(p_full, cfg, x2d)
+        y = jax.lax.psum(y, model_axis)
+        aux = jax.lax.pmean(aux, model_axis)
+        return y.reshape(x_loc.shape), aux
+
+    y, aux = shard_map(
+        body, mesh=mesh,
+        in_specs=(wspec, x_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(p, x)
+    return y, aux

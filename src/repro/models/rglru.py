@@ -1,0 +1,93 @@
+"""Griffin/RecurrentGemma recurrent block (RG-LRU + temporal conv branch).
+
+Block structure (arXiv:2402.19427 Fig. 2): two parallel branches from the
+input — (a) linear -> causal depthwise conv(width 4) -> RG-LRU, (b) linear
+-> GeLU — merged multiplicatively, then a linear output projection.
+
+Decode state: conv tail [B, conv_width-1, F] + recurrent h [B, F].
+The sequential scan is the RG-LRU Pallas kernel's job on TPU; the lax.scan
+reference path lowers everywhere (same math, see kernels/rglru).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels.rglru.ref import rglru_ref
+from repro.models.layers import ParamDef
+
+
+def rglru_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    f = cfg.recurrent.lru_width or d
+    w = cfg.recurrent.conv_width
+    return {
+        "wx": ParamDef((d, f), ("d_model", "lru")),
+        "wy": ParamDef((d, f), ("d_model", "lru")),
+        "conv_w": ParamDef((w, f), (None, "lru"), scale=0.5),
+        "conv_b": ParamDef((f,), ("lru",), init="zeros"),
+        "wr": ParamDef((f, f), ("lru", None), scale=0.5),
+        "br": ParamDef((f,), ("lru",), init="zeros"),
+        "wi": ParamDef((f, f), ("lru", None), scale=0.5),
+        "bi": ParamDef((f,), ("lru",), init="zeros"),
+        "a_param": ParamDef((f,), ("lru",), init="normal", scale=0.5),
+        "wo": ParamDef((f, d), ("lru", "d_model")),
+    }
+
+
+def _causal_conv(x, w, b, tail=None):
+    """Depthwise causal conv along time. x [B,S,F], w [W,F]; tail [B,W-1,F]."""
+    width = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)                  # [B, S+W-1, F]
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+        for i in range(width)
+    )
+    new_tail = xp[:, -(width - 1):, :]
+    return out + b[None, None, :], new_tail
+
+
+def make_rglru_state(cfg: ArchConfig, batch: int, dtype) -> Dict[str, Any]:
+    f = cfg.recurrent.lru_width or cfg.d_model
+    w = cfg.recurrent.conv_width
+    return {
+        "conv": jnp.zeros((batch, w - 1, f), dtype),
+        "h": jnp.zeros((batch, f), dtype),
+    }
+
+
+def rglru_forward(
+    p: Dict[str, Any], cfg: ArchConfig, x: jnp.ndarray,
+    state: Optional[Dict[str, Any]] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]]]:
+    """x [B, S, D] -> (y [B, S, D], new_state). Works for S==1 (decode)."""
+    c = cfg.recurrent.c
+    xa = jnp.einsum("bsd,df->bsf", x, p["wx"].astype(x.dtype))
+    xb = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["wy"].astype(x.dtype)))
+
+    tail = state["conv"] if state is not None else None
+    xa, new_tail = _causal_conv(xa, p["conv_w"].astype(x.dtype),
+                                p["conv_b"].astype(x.dtype), tail)
+
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsf,fg->bsg", xa, p["wr"].astype(x.dtype))
+        + p["br"].astype(x.dtype)
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsf,fg->bsg", xa, p["wi"].astype(x.dtype))
+        + p["bi"].astype(x.dtype)
+    )
+    h0 = state["h"] if state is not None else None
+    y, h_last = rglru_ref(xa, r, i, p["a_param"].astype(jnp.float32), h0=h0, c=c)
+
+    y = y * xb                                               # gated merge
+    out = jnp.einsum("bsf,fd->bsd", y, p["wo"].astype(x.dtype))
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_tail, "h": h_last}
+    return out, new_state

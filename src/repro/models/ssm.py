@@ -1,0 +1,124 @@
+"""Mamba-2 block (SSD mixer) — attention-free sequence mixing.
+
+Block: per-component projections -> causal depthwise conv over (x,B,C) ->
+SSD chunk scan -> gated RMSNorm(z) -> out_proj. Single group (G=1) for B/C,
+broadcast over heads; A parameterized as -exp(A_log).
+
+Sharding note: the projections are SEPARATE einsums (z, x, B, C, dt), not
+one fused in_proj. A fused [d, 2*di+2n+h] projection splits at offsets that
+do not align with model-axis shard boundaries, so XLA replicates the whole
+activation — measured ~10x HBM traffic on the mamba2 train cell. Component
+projections keep z/x/dt cleanly head-sharded and B/C (d_state wide)
+replicated-small.
+
+Decode state: conv tails per conv'd component + SSD state [B, H, N, P].
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import flags
+from repro.kernels.ssd.ref import ssd_chunked_ref, ssd_ref
+from repro.models.layers import ParamDef, rms_norm
+from repro.models.rglru import _causal_conv
+
+
+def ssm_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    h = s.n_heads(d)
+    n = s.d_state
+    w = s.conv_width
+    return {
+        "in_z": ParamDef((d, di), ("d_model", "ssm_heads")),
+        "in_x": ParamDef((d, di), ("d_model", "ssm_heads")),
+        "in_B": ParamDef((d, n), ("d_model", None)),
+        "in_C": ParamDef((d, n), ("d_model", None)),
+        "in_dt": ParamDef((d, h), ("d_model", "ssm_heads")),
+        "conv_x_w": ParamDef((w, di), (None, "ssm_heads"), scale=0.5),
+        "conv_x_b": ParamDef((di,), ("ssm_heads",), init="zeros"),
+        "conv_B_w": ParamDef((w, n), (None, None), scale=0.5),
+        "conv_B_b": ParamDef((n,), (None,), init="zeros"),
+        "conv_C_w": ParamDef((w, n), (None, None), scale=0.5),
+        "conv_C_b": ParamDef((n,), (None,), init="zeros"),
+        "A_log": ParamDef((h,), ("ssm_heads",), init="normal", scale=0.1),
+        "D": ParamDef((h,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamDef((h,), ("ssm_heads",), init="zeros"),
+        "norm_w": ParamDef((di,), ("ssm_heads",), init="zeros"),
+        "out_proj": ParamDef((di, d), ("ssm_heads", "d_model")),
+    }
+
+
+def make_ssm_state(cfg: ArchConfig, batch: int, dtype) -> Dict[str, Any]:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    h = s.n_heads(d)
+    w = s.conv_width
+    return {
+        "conv_x": jnp.zeros((batch, w - 1, di), dtype),
+        "conv_B": jnp.zeros((batch, w - 1, s.d_state), dtype),
+        "conv_C": jnp.zeros((batch, w - 1, s.d_state), dtype),
+        "h": jnp.zeros((batch, h, s.d_state, s.head_dim), dtype),
+    }
+
+
+def ssm_forward(
+    p: Dict[str, Any], cfg: ArchConfig, x: jnp.ndarray,
+    state: Optional[Dict[str, Any]] = None,
+    chunk: int = 0,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]]]:
+    s = cfg.ssm
+    b, slen, d = x.shape
+    di = s.d_inner(d)
+    h = s.n_heads(d)
+    n, pd = s.d_state, s.head_dim
+
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"].astype(x.dtype))
+    xs = jnp.einsum("bsd,de->bse", x, p["in_x"].astype(x.dtype))
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["in_B"].astype(x.dtype))
+    C = jnp.einsum("bsd,dn->bsn", x, p["in_C"].astype(x.dtype))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["in_dt"].astype(x.dtype))
+
+    t_x = state["conv_x"] if state is not None else None
+    t_b = state["conv_B"] if state is not None else None
+    t_c = state["conv_C"] if state is not None else None
+    xs, nt_x = _causal_conv(xs, p["conv_x_w"].astype(x.dtype),
+                            p["conv_x_b"].astype(x.dtype), t_x)
+    Bm, nt_b = _causal_conv(Bm, p["conv_B_w"].astype(x.dtype),
+                            p["conv_B_b"].astype(x.dtype), t_b)
+    C, nt_c = _causal_conv(C, p["conv_C_w"].astype(x.dtype),
+                           p["conv_C_b"].astype(x.dtype), t_c)
+    xs = jax.nn.silu(xs)
+    Bm = jax.nn.silu(Bm)
+    C = jax.nn.silu(C)
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )                                                        # [B, S, H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # [H]
+    xh = xs.reshape(b, slen, h, pd)
+
+    h0 = state["h"] if state is not None else None
+    if slen == 1:
+        y, h_last = ssd_ref(xh, dt, A, Bm, C, p["D"].astype(jnp.float32), h0=h0)
+    else:
+        if not chunk:
+            chunk = flags.SSD_CHUNK or (512 if flags.ANALYSIS_UNROLL else 128)
+        y, h_last = ssd_chunked_ref(
+            xh, dt, A, Bm, C, p["D"].astype(jnp.float32), h0=h0,
+            chunk=min(chunk, slen),
+        )
+    y = y.reshape(b, slen, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(y.dtype)), p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    new_state = None
+    if state is not None:
+        new_state = {"conv_x": nt_x, "conv_B": nt_b, "conv_C": nt_c,
+                     "h": h_last}
+    return out, new_state

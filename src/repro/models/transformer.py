@@ -1,0 +1,446 @@
+"""Generic decoder stack builder — one builder for all ten architectures.
+
+An ArchConfig's layer pattern is grouped into runs of identical LayerSpecs;
+each run's parameters are stacked on a leading layer axis and the run is
+executed with ``jax.lax.scan`` (+ remat), so a 94-layer model compiles as one
+scanned superblock. Hybrid patterns (recurrentgemma's rglru/rglru/attn,
+gemma2's local/global alternation) scan their repeat unit.
+
+Decode/prefill use the same grouped structure with per-layer caches stacked
+along the scan axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models import flags
+from repro.models.context import DistContext
+from repro.models.layers import (
+    ParamDef, act_fn, axes_tree, init_tree, layer_norm, rms_norm, softcap,
+)
+
+
+# ---------------------------------------------------------------------------
+# Param definitions
+# ---------------------------------------------------------------------------
+
+def dense_ff_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w1": ParamDef((d, f), ("d_model", "ff")),
+        "w3": ParamDef((d, f), ("d_model", "ff")),
+        "w2": ParamDef((f, d), ("ff", "d_model")),
+    }
+
+
+def _norm_defs(cfg: ArchConfig, name: str) -> Dict[str, ParamDef]:
+    if cfg.norm_kind == "layernorm":
+        return {
+            f"{name}_w": ParamDef((cfg.d_model,), (None,), init="ones"),
+            f"{name}_b": ParamDef((cfg.d_model,), (None,), init="zeros"),
+        }
+    return {f"{name}_w": ParamDef((cfg.d_model,), (None,), init="zeros")}
+
+
+def _apply_norm(p, cfg: ArchConfig, x, name: str):
+    if cfg.norm_kind == "layernorm":
+        return layer_norm(x, p[f"{name}_w"], p[f"{name}_b"], cfg.norm_eps)
+    return rms_norm(x, p[f"{name}_w"], cfg.norm_eps)
+
+
+def layer_defs(cfg: ArchConfig, spec: LayerSpec) -> Dict[str, Any]:
+    defs: Dict[str, Any] = {}
+    defs.update(_norm_defs(cfg, "norm1"))
+    if spec.mixer in ("attn", "local_attn"):
+        defs["attn"] = attn_mod.attn_defs(cfg)
+    elif spec.mixer == "rglru":
+        defs["rglru"] = rglru_mod.rglru_defs(cfg)
+    elif spec.mixer == "ssd":
+        defs["ssm"] = ssm_mod.ssm_defs(cfg)
+    else:
+        raise ValueError(f"unknown mixer {spec.mixer}")
+    if cfg.post_norms:
+        defs.update(_norm_defs(cfg, "post1"))
+    if spec.ff is not None:
+        if not cfg.parallel_block:
+            defs.update(_norm_defs(cfg, "norm2"))
+        if spec.ff == "dense":
+            defs["ff"] = dense_ff_defs(cfg)
+        elif spec.ff == "moe":
+            defs["moe"] = moe_mod.moe_defs(cfg)
+        else:
+            raise ValueError(f"unknown ff {spec.ff}")
+        if cfg.post_norms:
+            defs.update(_norm_defs(cfg, "post2"))
+    return defs
+
+
+def decompose(cfg: ArchConfig) -> List[Tuple]:
+    """Split the layer pattern into scan-able segments.
+
+    Returns a list of ("seq", (specs...)) and ("scan", unit_specs, reps)
+    segments. A periodic pattern (gemma2's local/global alternation,
+    recurrentgemma's rglru/rglru/attn unit) scans its repeat UNIT — one
+    heterogeneous body over ``reps`` iterations — so alternating-layer
+    models compile as one scanned superblock instead of unrolling (which
+    costs compile time AND saved-residual memory: ~1.6 GiB/layer measured
+    on gemma2 before this decomposition existed).
+    """
+    pattern = cfg.layers()
+    n = len(pattern)
+    best = None  # (scanned_layers, -unit_len, start, p, reps)
+    for start in range(0, min(4, n)):
+        for p in range(1, 9):
+            if start + 2 * p > n:
+                break
+            reps = (n - start) // p
+            if reps < 2:
+                continue
+            if all(pattern[start + i] == pattern[start + (i % p)]
+                   for i in range(reps * p)):
+                cand = (reps * p, -p, start, p, reps)
+                if best is None or cand > best:
+                    best = cand
+    if best is None:
+        return [("seq", tuple(pattern))] if pattern else []
+    _, _, start, p, reps = best
+    segments: List[Tuple] = []
+    if start:
+        segments.append(("seq", tuple(pattern[:start])))
+    segments.append(("scan", tuple(pattern[start:start + p]), reps))
+    rest = pattern[start + reps * p:]
+    if rest:
+        segments.append(("seq", tuple(rest)))
+    return segments
+
+
+def group_layers(cfg: ArchConfig) -> List[Tuple[LayerSpec, int]]:
+    """Consecutive-run view (kept for tests/back-compat)."""
+    groups: List[Tuple[LayerSpec, int]] = []
+    for spec in cfg.layers():
+        if groups and groups[-1][0] == spec:
+            groups[-1] = (spec, groups[-1][1] + 1)
+        else:
+            groups.append((spec, 1))
+    return groups
+
+
+def model_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.padded_vocab
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((v, d), ("vocab", "d_model"), init="normal", scale=0.02),
+    }
+    defs.update(_norm_defs(cfg, "final_norm"))
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, v), ("d_model", "vocab"), init="normal",
+                                   scale=0.02)
+    segs = []
+    for seg in decompose(cfg):
+        if seg[0] == "seq":
+            segs.append([layer_defs(cfg, spec) for spec in seg[1]])
+        else:
+            _, unit, reps = seg
+            segs.append([_stack_defs(layer_defs(cfg, spec), reps)
+                         for spec in unit])
+    defs["segments"] = segs
+    if cfg.encoder is not None and cfg.encoder.kind == "vision":
+        defs["vit_proj"] = {
+            "w": ParamDef((1024, d), (None, "d_model")),
+            "b": ParamDef((d,), (None,), init="zeros"),
+        }
+    return defs
+
+
+def _stack_defs(defs: Dict[str, Any], count: int) -> Dict[str, Any]:
+    return jax.tree.map(
+        lambda pd: ParamDef((count,) + pd.shape, (None,) + pd.axes,
+                            init=pd.init, scale=pd.scale),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.float32):
+    return init_tree(model_defs(cfg), key, dtype)
+
+
+def param_logical_axes(cfg: ArchConfig):
+    return axes_tree(model_defs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Layer forward
+# ---------------------------------------------------------------------------
+
+def _mixer(p, cfg: ArchConfig, spec: LayerSpec, x, positions, cache,
+           decode: bool, ctx=None):
+    if spec.mixer in ("attn", "local_attn"):
+        window = cfg.attn_window if spec.mixer == "local_attn" else None
+        if decode:
+            return attn_mod.attn_decode(p["attn"], cfg, x, cache=cache,
+                                        window=window, ctx=ctx)
+        return attn_mod.attn_forward(p["attn"], cfg, x, positions,
+                                     window=window, cache=cache)
+    if spec.mixer == "rglru":
+        return rglru_mod.rglru_forward(p["rglru"], cfg, x, state=cache)
+    if spec.mixer == "ssd":
+        return ssm_mod.ssm_forward(p["ssm"], cfg, x, state=cache)
+    raise ValueError(spec.mixer)
+
+
+def _dense_ff(p, cfg: ArchConfig, x):
+    act = act_fn(cfg.act)
+    h = act(jnp.einsum("bsd,df->bsf", x, p["w1"].astype(x.dtype)))
+    h = h * jnp.einsum("bsd,df->bsf", x, p["w3"].astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(x.dtype))
+
+
+def layer_forward(
+    p, cfg: ArchConfig, spec: LayerSpec, x, positions, cache,
+    ctx: Optional[DistContext], decode: bool = False,
+):
+    """Returns (x_out, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = _apply_norm(p, cfg, x, "norm1")
+    mix, new_cache = _mixer(p, cfg, spec, h, positions, cache, decode, ctx)
+    if cfg.post_norms:
+        mix = _apply_norm(p, cfg, mix, "post1")
+
+    if cfg.parallel_block and spec.ff is not None:
+        ff = _dense_ff(p["ff"], cfg, h)
+        x = x + mix + ff
+    else:
+        x = x + mix
+        if spec.ff is not None:
+            h2 = _apply_norm(p, cfg, x, "norm2")
+            if spec.ff == "dense":
+                ff = _dense_ff(p["ff"], cfg, h2)
+            else:
+                ff, aux = moe_mod.moe_forward(p["moe"], cfg, h2, ctx)
+            if cfg.post_norms:
+                ff = _apply_norm(p, cfg, ff, "post2")
+            x = x + ff
+    if ctx is not None:
+        x = ctx.constrain(x, "batch", None, None)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stack forward
+# ---------------------------------------------------------------------------
+
+def _scan_unit(
+    unit_params, cfg: ArchConfig, unit: Tuple[LayerSpec, ...], x, positions,
+    unit_caches, ctx, decode: bool, remat: bool,
+):
+    """Scan a repeat unit (tuple of per-position stacked params) ``reps``
+    times. unit_caches: matching list of stacked caches (or None)."""
+
+    def body(carry, xs):
+        xc, aux_sum = carry
+        lps, lcs = xs
+        ncs = []
+        for spec, lp, lc in zip(unit, lps, lcs):
+            xc, nc, aux = layer_forward(lp, cfg, spec, xc, positions, lc,
+                                        ctx, decode)
+            aux_sum = aux_sum + aux
+            ncs.append(nc)
+        return (xc, aux_sum), ncs
+
+    fn = body
+    if remat:
+        fn = jax.checkpoint(body, policy=flags.remat_policy())
+    if unit_caches is None:
+        unit_caches = [None] * len(unit)
+    (x, aux), new_caches = jax.lax.scan(
+        fn, (x, jnp.zeros((), jnp.float32)),
+        (tuple(unit_params), tuple(unit_caches)),
+        unroll=flags.scan_unroll(),
+    )
+    return x, list(new_caches), aux
+
+
+@dataclasses.dataclass(frozen=True)
+class StackOutputs:
+    logits: Optional[jnp.ndarray]
+    aux_loss: jnp.ndarray
+    caches: Optional[List[Any]] = None
+    hidden: Optional[jnp.ndarray] = None
+
+
+def _cache_for(cfg, spec, batch, max_len, dtype, ring_local):
+    if spec.mixer in ("attn", "local_attn"):
+        ring = ring_local and spec.mixer == "local_attn"
+        length = min(max_len, cfg.attn_window) if ring else max_len
+        return attn_mod.make_kv_cache(cfg, batch, length, dtype, ring=ring)
+    if spec.mixer == "rglru":
+        return rglru_mod.make_rglru_state(cfg, batch, dtype)
+    if spec.mixer == "ssd":
+        return ssm_mod.make_ssm_state(cfg, batch, dtype)
+    raise ValueError(spec.mixer)
+
+
+def make_caches(
+    cfg: ArchConfig, batch: int, max_len: int, dtype,
+    ring_local: bool = False,
+) -> List[Any]:
+    """Caches mirroring the segment decomposition: seq segments get a list
+    of per-layer caches; scan segments get per-position stacked caches."""
+    caches = []
+    for seg in decompose(cfg):
+        if seg[0] == "seq":
+            caches.append([
+                _cache_for(cfg, spec, batch, max_len, dtype, ring_local)
+                for spec in seg[1]
+            ])
+        else:
+            _, unit, reps = seg
+            caches.append([
+                jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (reps,) + a.shape),
+                    _cache_for(cfg, spec, batch, max_len, dtype, ring_local))
+                for spec in unit
+            ])
+    return caches
+
+
+def forward(
+    params, cfg: ArchConfig, tokens: jnp.ndarray,
+    ctx: Optional[DistContext] = None,
+    caches: Optional[List[Any]] = None,
+    patch_embeds: Optional[jnp.ndarray] = None,
+    decode: bool = False,
+    start_pos: int = 0,
+    remat: bool = True,
+    logits_mode: str = "full",   # full | last | hidden
+) -> StackOutputs:
+    """tokens [B, S] -> logits [B, S(+P), Vpad].
+
+    ``decode=True``: S must be 1 and ``caches`` supplied (positions come from
+    cache state). ``patch_embeds`` [B, P, 1024] (vlm stub) are projected and
+    prepended to the token embeddings. ``logits_mode``: "last" applies the
+    LM head to the final position only (prefill); "hidden" skips the head
+    and returns normed hidden states (pair with fused_lm_loss to avoid
+    materializing [B, S, V] logits).
+    """
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if patch_embeds is not None:
+        pe = (
+            patch_embeds @ params["vit_proj"]["w"].astype(patch_embeds.dtype)
+            + params["vit_proj"]["b"].astype(patch_embeds.dtype)
+        )
+        x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
+        s = x.shape[1]
+    if ctx is not None:
+        x = ctx.constrain(x, "batch", None, None)
+
+    positions = start_pos + jnp.arange(s)[None, :].astype(jnp.int32)
+    positions = jnp.broadcast_to(positions, (b, s))
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: Optional[List[Any]] = [] if caches is not None else None
+    for gi, seg in enumerate(decompose(cfg)):
+        gp = params["segments"][gi]
+        gc = caches[gi] if caches is not None else None
+        if seg[0] == "seq":
+            ncs = []
+            for li, spec in enumerate(seg[1]):
+                lc = gc[li] if gc is not None else None
+                x, nc, aux = layer_forward(gp[li], cfg, spec, x, positions,
+                                           lc, ctx, decode)
+                aux_total = aux_total + aux
+                ncs.append(nc)
+        else:
+            _, unit, reps = seg
+            x, ncs, aux = _scan_unit(
+                gp, cfg, unit, x, positions, gc, ctx, decode,
+                remat=remat and not decode,
+            )
+            aux_total = aux_total + aux
+        if new_caches is not None:
+            new_caches.append(ncs)
+
+    x = _apply_norm(params, cfg, x, "final_norm")
+    if logits_mode == "hidden":
+        return StackOutputs(logits=None, aux_loss=aux_total,
+                            caches=new_caches, hidden=x)
+    if logits_mode == "last":
+        x = x[:, -1:]
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    )
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    if cfg.final_softcap:
+        logits = softcap(logits, cfg.final_softcap)
+    if ctx is not None:
+        logits = ctx.constrain(logits, "batch", None, "vocab")
+    return StackOutputs(logits=logits, aux_loss=aux_total, caches=new_caches,
+                        hidden=x)
+
+
+def lm_loss(logits: jnp.ndarray, targets: jnp.ndarray, cfg: ArchConfig,
+            mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Cross-entropy over the real (unpadded) vocab."""
+    v = cfg.padded_vocab
+    vocab_ok = jnp.arange(v) < cfg.vocab_size
+    logits = jnp.where(vocab_ok[None, None], logits.astype(jnp.float32),
+                       -1e30)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def fused_lm_loss(
+    head: jnp.ndarray, hidden: jnp.ndarray, targets: jnp.ndarray,
+    cfg: ArchConfig, chunk: int = 1024,
+) -> jnp.ndarray:
+    """Head-projection + cross-entropy scanned over sequence chunks.
+
+    Never materializes [B, S, Vpad] logits: each chunk's logits live only
+    inside a checkpointed scan body (recomputed in backward). This is what
+    lets 150k-vocab models train at seq 4096 within HBM.
+    """
+    b, s, d = hidden.shape
+    if flags.ANALYSIS_UNROLL:
+        chunk = 4096
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s  # fall back to unchunked for odd lengths
+    n = s // chunk
+    hc = hidden.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(b, n, chunk).transpose(1, 0, 2)
+    vocab_ok = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+
+    def body(total, xs):
+        h, t = xs
+        logits = jnp.einsum(
+            "bsd,dv->bsv", h.astype(jnp.float32),
+            head.astype(jnp.float32),
+        )
+        if cfg.final_softcap:
+            logits = softcap(logits, cfg.final_softcap)
+        logits = jnp.where(vocab_ok[None, None], logits, -1e30)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, t[..., None], axis=-1)[..., 0]
+        return total + jnp.sum(nll), None
+
+    total, _ = jax.lax.scan(
+        jax.checkpoint(body, policy=flags.remat_policy()),
+        jnp.zeros((), jnp.float32), (hc, tc),
+        unroll=flags.scan_unroll(),
+    )
+    return total / (b * s)

@@ -1,0 +1,195 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), per the task spec:
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / (links x link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (the per-chip SPMD
+module). Collective bytes are parsed from the HLO text: every all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute contributes
+its shape bytes x an op-specific wire multiplier (ring algorithms):
+all-reduce 2x (reduce-scatter + all-gather phase), others 1x.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.hardware import HardwareModel
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "ragged-all-to-all": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of a possibly-tuple HLO shape string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    bytes_by: Dict[str, float] = {}
+    count_by: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # e.g.:  [ROOT] %all-reduce.5 = bf16[8,4096]{1,0} all-reduce(...)
+        m = re.match(
+            r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^)=]*?\)?)\s+([\w-]+)\(",
+            line,
+        )
+        if not m:
+            continue
+        op = m.group(2)
+        # Strip "-start"/"-done" async suffixes; count only starts.
+        base = op
+        for suffix in ("-start",):
+            if base.endswith(suffix):
+                base = base[: -len(suffix)]
+        if base not in _COLLECTIVES or op.endswith("-done"):
+            continue
+        size = _shape_bytes(m.group(1)) * _COLLECTIVES[base]
+        bytes_by[base] = bytes_by.get(base, 0.0) + size
+        count_by[base] = count_by.get(base, 0) + 1
+    return CollectiveStats(bytes_by, count_by)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    peak_bytes_per_device: Optional[float] = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def total_s(self) -> float:
+        # Optimistic (fully-overlapped) step time: max of the three.
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def roofline_fraction(self) -> float:
+        """compute_s / total_s — 1.0 means MXU-bound (at the roofline)."""
+        return self.compute_s / self.total_s if self.total_s else 0.0
+
+
+def analyze(compiled, hw: HardwareModel, hlo_text: Optional[str] = None,
+            ici_links: Optional[int] = None) -> RooflineTerms:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = parse_collectives(text)
+    links = ici_links if ici_links is not None else hw.ici_links
+    mem_stats = None
+    try:
+        mem_stats = compiled.memory_analysis()
+    except Exception:
+        pass
+    peak = None
+    if mem_stats is not None:
+        try:
+            peak = float(
+                mem_stats.temp_size_in_bytes
+                + mem_stats.argument_size_in_bytes
+                + mem_stats.output_size_in_bytes
+            )
+        except Exception:
+            peak = None
+    return RooflineTerms(
+        flops=flops,
+        hbm_bytes=hbm,
+        collective_bytes=coll.total_bytes,
+        compute_s=flops / hw.peak_flops_bf16,
+        memory_s=hbm / hw.hbm_bw,
+        collective_s=coll.total_bytes / (links * hw.ici_bw_per_link),
+        peak_bytes_per_device=peak,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE), per step, global."""
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def active_param_count(cfg) -> float:
+    """Parameters touched per token (MoE counts top_k + shared experts)."""
+    from repro.models import api as _api
+    d, v = cfg.d_model, cfg.padded_vocab
+    total = v * d * (1 if cfg.tie_embeddings else 2)
+    for spec in cfg.layers():
+        if spec.mixer in ("attn", "local_attn"):
+            hd = cfg.head_dim_
+            total += d * hd * (cfg.padded_heads * 2 + cfg.padded_kv_heads * 2)
+        elif spec.mixer == "rglru":
+            f = cfg.recurrent.lru_width or d
+            total += 2 * d * f + 2 * f * f + f * d
+        elif spec.mixer == "ssd":
+            s = cfg.ssm
+            di = s.d_inner(d)
+            total += d * (2 * di + 2 * s.d_state + s.n_heads(d)) + di * d
+        if spec.ff == "dense":
+            total += 3 * d * cfg.d_ff
+        elif spec.ff == "moe":
+            m = cfg.moe
+            total += 3 * d * m.d_expert * m.top_k + d * m.n_experts
+            if m.n_shared_experts:
+                total += 3 * d * (m.d_shared or m.n_shared_experts * m.d_expert)
+    if cfg.encoder is not None and cfg.encoder.kind == "audio":
+        hd = cfg.head_dim_
+        enc_layer = d * hd * cfg.padded_heads * 4 + 2 * d * cfg.d_ff
+        total += cfg.encoder.n_layers * enc_layer
+        total += cfg.n_layers * d * hd * cfg.padded_heads * 4  # cross-attn
+    return float(total)

@@ -1,0 +1,100 @@
+"""Batched serving engine: slot-based continuous batching (lite).
+
+Fixed decode batch of ``slots``; requests occupy free slots, prefill runs
+per request (left-padded into the shared cache), decode advances all active
+slots in one jitted step. Greedy sampling. This is the serving analogue of
+the train loop — the decode step is the unit the decode_* dry-run shapes
+lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import api
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # [S] int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, max_len: int = 512,
+                 slots: int = 4, dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.slots = slots
+        self.dtype = dtype
+        self._active: List[Optional[Request]] = [None] * slots
+        self._queue: List[Request] = []
+        self._finished: List[Request] = []
+        self._next_rid = 0
+
+        # Per-slot independent caches (batch=1) batched by stacking.
+        self._states = [None] * slots
+
+        self._decode = jax.jit(
+            lambda p, tok, st: api.decode_step(p, cfg, tok, st)
+        )
+        self._prefill = jax.jit(
+            lambda p, batch: api.prefill(
+                p, cfg, batch, max_len=max_len, dtype=dtype,
+                ring_local=bool(cfg.attn_window))
+        )
+
+    def add_request(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                   max_new_tokens))
+        return rid
+
+    def _admit(self):
+        for i in range(self.slots):
+            if self._active[i] is None and self._queue:
+                req = self._queue.pop(0)
+                batch = {"tokens": jnp.asarray(req.prompt[None])}
+                logits, state = self._prefill(self.params, batch)
+                tok = int(jnp.argmax(logits[0, :self.cfg.vocab_size]))
+                req.out_tokens.append(tok)
+                self._active[i] = req
+                self._states[i] = state
+
+    def step(self) -> int:
+        """Admit + one decode step for all active slots. Returns #active."""
+        self._admit()
+        n = 0
+        for i, req in enumerate(self._active):
+            if req is None:
+                continue
+            n += 1
+            last = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
+            logits, self._states[i] = self._decode(
+                self.params, last, self._states[i])
+            tok = int(jnp.argmax(logits[0, :self.cfg.vocab_size]))
+            req.out_tokens.append(tok)
+            if len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                self._active[i] = None
+                self._states[i] = None
+                self._finished.append(req)
+        return n
+
+    def run_until_done(self, max_steps: int = 1000) -> List[Request]:
+        self._finished = []
+        for _ in range(max_steps):
+            if not any(self._active) and not self._queue:
+                break
+            self.step()
+        return self._finished

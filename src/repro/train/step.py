@@ -1,0 +1,99 @@
+"""Train step factory: value_and_grad + AdamW, mesh-aware, donation-ready.
+
+The returned step is a pure function suitable for jax.jit with explicit
+in/out shardings (launch/dryrun.py, launch/train.py). Microbatch gradient
+accumulation is handled with lax.scan over microbatches (compute/comm
+overlap comes from XLA pipelining the accumulation loop).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import api
+from repro.models.context import DistContext
+from repro.optim import adamw
+from repro.optim.schedule import warmup_cosine
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    ctx: Optional[DistContext],
+    opt_cfg: adamw.AdamWConfig,
+    lr_fn: Optional[Callable] = None,
+    microbatches: int = 1,
+    remat: bool = True,
+    accum_dtype=jnp.float32,
+):
+    lr_fn = lr_fn or (lambda step: jnp.asarray(3e-4, jnp.float32))
+
+    def loss_fn(params, batch):
+        return api.train_loss(params, cfg, batch, ctx, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                # Strided split: microbatch m takes rows {m, m+mb, ...} so a
+                # data-sharded batch dim stays data-sharded per microbatch
+                # (a plain reshape would put the split dim on the devices).
+                return x.reshape(
+                    b // microbatches, microbatches, *x.shape[1:]
+                ).swapaxes(0, 1)
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, mbatch):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mbatch)
+                return (
+                    jax.tree.map(
+                        lambda a, b: a + b.astype(a.dtype), g_acc, g),
+                    l_acc + l,
+                ), None
+
+            # Derive the accumulator from params so SPMD propagates the
+            # parameter sharding onto it (a fresh zeros() would be
+            # ambiguously sharded and can end up replicated).
+            zeros = jax.tree.map(
+                lambda p: (p * 0).astype(accum_dtype), params)
+            (g_sum, l_sum), _ = jax.lax.scan(
+                acc_body, (zeros, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, g_sum)
+            loss = l_sum / microbatches
+            metrics = {"loss": loss}
+
+        lr = lr_fn(opt_state["step"])
+        params, opt_state, om = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg, lr)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["lr"] = lr
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_steps(cfg: ArchConfig, ctx: Optional[DistContext],
+                     max_len: int, dtype=jnp.float32):
+    """(prefill_fn, decode_fn) pair for serving / dry-run lowering."""
+
+    def prefill_step(params, batch):
+        # Window (local) attention layers always use ring caches: their
+        # effective KV is the window, independent of total context length.
+        return api.prefill(params, cfg, batch, max_len=max_len, dtype=dtype,
+                           ctx=ctx, ring_local=bool(cfg.attn_window))
+
+    def decode_step(params, token, state):
+        return api.decode_step(params, cfg, token, state, ctx=ctx)
+
+    return prefill_step, decode_step

@@ -1,0 +1,140 @@
+"""Trainer: the fault-tolerant training loop.
+
+Responsibilities: jit the train step with explicit shardings, drive the data
+pipeline, checkpoint every N steps (async, atomic), restore-and-continue
+after a failure (simulated or real), track health/straggler stats, and log.
+
+The loop is deliberately restart-oriented: all state lives in
+(params, opt_state, data_step), all of which round-trips through the
+CheckpointManager — a process can die at any step and resume.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import DataConfig, make_batch
+from repro.distributed import sharding_rules as rules
+from repro.distributed.fault_tolerance import HealthMonitor, StepTimer
+from repro.models import api
+from repro.optim import adamw
+from repro.optim.schedule import warmup_cosine
+from repro.train.step import make_train_step
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    peak_lr: float = 3e-4
+    warmup_steps: int = 10
+    microbatches: int = 1
+    seed: int = 0
+    param_dtype: Any = jnp.float32
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, data_cfg: DataConfig,
+                 tcfg: TrainerConfig, mesh=None,
+                 opt_cfg: Optional[adamw.AdamWConfig] = None):
+        self.cfg = cfg
+        self.data_cfg = data_cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.opt_cfg = opt_cfg or adamw.AdamWConfig()
+        self.ctx = rules.make_context(mesh) if mesh is not None else None
+        self.monitor = HealthMonitor()
+        self.ckpt = CheckpointManager(tcfg.checkpoint_dir, keep=tcfg.keep)
+
+        lr_fn = lambda step: warmup_cosine(
+            step, peak_lr=tcfg.peak_lr, warmup_steps=tcfg.warmup_steps,
+            total_steps=tcfg.steps)
+        step_fn = make_train_step(
+            cfg, self.ctx, self.opt_cfg, lr_fn,
+            microbatches=tcfg.microbatches)
+        self._step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    # -- state --------------------------------------------------------------
+    def init_state(self):
+        params = api.init_params(
+            self.cfg, jax.random.PRNGKey(self.tcfg.seed),
+            dtype=self.tcfg.param_dtype)
+        opt_state = adamw.init_state(params, self.opt_cfg)
+        return params, opt_state, 0
+
+    def try_restore(self):
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return self.init_state()
+        params, opt_state, _ = self.init_state()
+        tree = self.ckpt.restore({"params": params, "opt": opt_state})
+        meta = self.ckpt.meta()
+        log.info("restored checkpoint at step %d", meta["step"])
+        return tree["params"], tree["opt"], meta["step"]
+
+    # -- loop ---------------------------------------------------------------
+    def run(self, fail_at: Optional[int] = None,
+            max_restarts: int = 2) -> Dict[str, Any]:
+        """Run to tcfg.steps; survives ``max_restarts`` worker failures.
+
+        ``fail_at``: raise an injected RuntimeError at that step once
+        (fault-tolerance test hook).
+        """
+        restarts = 0
+        failed_once = False
+        losses = []
+        while True:
+            try:
+                params, opt_state, start = self.try_restore()
+                for step in range(start, self.tcfg.steps):
+                    if fail_at is not None and step == fail_at and not failed_once:
+                        failed_once = True
+                        raise RuntimeError("injected worker failure")
+                    batch = {
+                        k: jnp.asarray(v)
+                        for k, v in make_batch(self.data_cfg, step).items()
+                    }
+                    with StepTimer() as t:
+                        params, opt_state, metrics = self._step(
+                            params, opt_state, batch)
+                        loss = float(metrics["loss"])
+                    straggler = self.monitor.record_step(t.seconds)
+                    if straggler:
+                        log.warning("straggler step %d: %.3fs (baseline %.3fs)",
+                                    step, t.seconds, self.monitor.baseline_s)
+                    losses.append(loss)
+                    if step % self.tcfg.log_every == 0:
+                        log.info("step %d loss %.4f (%.3fs)", step, loss,
+                                 t.seconds)
+                    if (step + 1) % self.tcfg.checkpoint_every == 0:
+                        self.ckpt.save(
+                            step + 1, {"params": params, "opt": opt_state},
+                            extra={"data_step": step + 1})
+                self.ckpt.save(self.tcfg.steps,
+                               {"params": params, "opt": opt_state},
+                               extra={"data_step": self.tcfg.steps})
+                self.ckpt.wait()
+                return {
+                    "losses": losses,
+                    "restarts": restarts,
+                    "straggler_events": self.monitor.straggler_events,
+                    "params": params,
+                }
+            except RuntimeError as e:
+                restarts += 1
+                log.warning("worker failure (%s); restart %d", e, restarts)
+                if restarts > max_restarts:
+                    raise

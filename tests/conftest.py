@@ -1,0 +1,9 @@
+import os
+
+# Tests run single-device on CPU (the dry-run sets its own 512-device flag
+# in a separate process — never here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

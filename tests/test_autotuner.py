@@ -1,0 +1,123 @@
+"""Autotuner, cost model, tiling policy — the paper's core machinery."""
+import itertools
+import os
+
+import pytest
+
+import repro.kernels.bilinear.ops  # noqa: F401  (registers kernels)
+import repro.kernels.matmul.ops  # noqa: F401
+import repro.kernels.flash_attention.ops  # noqa: F401
+from repro.core import (
+    GEFORCE_8800GTS, GTX260, TPU_V5E, TPU_V6E, Autotuner, TilingPolicy,
+)
+from repro.core import registry
+from repro.core.cost_model import estimate
+from repro.core.tiling import TileConstraints, TileShape, enumerate_tiles
+
+
+def test_enumerate_respects_vmem():
+    c = TileConstraints(rank=2, max_dims=(4096, 4096), lane_dim=1,
+                        sublane_dim=0)
+    vmem = lambda t: t.size * 4
+    tiles = enumerate_tiles(c, TPU_V5E, "float32", vmem)
+    budget = TPU_V5E.vmem_bytes * c.vmem_fraction
+    assert tiles and all(t.size * 4 <= budget for t in tiles)
+
+
+def test_enumerate_alignment():
+    c = TileConstraints(rank=2, max_dims=(512, 4096), lane_dim=1,
+                        sublane_dim=0)
+    tiles = enumerate_tiles(c, TPU_V5E, "float32", lambda t: t.size * 4)
+    for t in tiles:
+        assert t[1] % TPU_V5E.lane_count == 0 or t[1] == 4096
+        assert t[0] % TPU_V5E.sublane_fp32 == 0 or t[0] == 512
+
+
+def test_autotuner_cache_roundtrip(tmp_path):
+    path = os.path.join(tmp_path, "cache.json")
+    at = Autotuner(cache_path=path)
+    prob = dict(m=1024, k=1024, n=1024)
+    t1 = at.best_tile("matmul", prob, "bfloat16", TPU_V5E)
+    at2 = Autotuner(cache_path=path)
+    t2 = at2.best_tile("matmul", prob, "bfloat16", TPU_V5E)
+    assert t1 == t2
+    assert at2.cached()
+
+
+def test_measured_overrides_model():
+    at = Autotuner()
+    prob = dict(m=512, k=512, n=512)
+    # Measurement prefers SMALL tiles — the opposite of the model's
+    # fewer-grid-steps preference: the winner must be measurement-ranked.
+    measured = []
+
+    def measure(tile):
+        measured.append(tile)
+        return float(tile.size)
+
+    res = at.sweep("matmul", prob, "bfloat16", TPU_V5E, measure_fn=measure)
+    assert res.best.measured_s is not None
+    assert res.best.tile == min(measured, key=lambda t: t.size)
+
+
+def test_best_tile_differs_across_hardware():
+    """The paper's central claim at the framework level: per-model optima."""
+    at = Autotuner()
+    prob = dict(src_h=800, src_w=800, scale=4)
+    tiles = [TileShape((h, w))
+             for h, w in itertools.product((4, 8, 16, 32), repeat=2)]
+    r1 = at.sweep("bilinear_cuda", prob, "float32", GTX260, tiles=tiles)
+    r2 = at.sweep("bilinear_cuda", prob, "float32", GEFORCE_8800GTS,
+                  tiles=tiles)
+    assert r1.best.tile != r2.best.tile
+
+
+def test_policy_heuristic_legal():
+    pol = TilingPolicy(mode="heuristic", hardware=TPU_V5E)
+    t = pol.tile_for("matmul", dict(m=4096, k=4096, n=4096))
+    spec = registry.get("matmul")
+    assert spec.vmem_bytes(t, dict(m=4096, k=4096, n=4096), "bfloat16") \
+        <= TPU_V5E.vmem_bytes
+
+
+def test_policy_robust_worst_case():
+    """§V: robust mode picks a tile near-optimal on the WORST fleet member."""
+    fleet = (GTX260, GEFORCE_8800GTS)
+    pol = TilingPolicy(mode="robust", fleet=fleet)
+    prob = dict(src_h=800, src_w=800, scale=8)
+    t = pol.tile_for("bilinear_cuda", prob, "float32")
+    spec = registry.get("bilinear_cuda")
+    # Evaluate the chosen tile on the weakest GPU vs its true optimum.
+    at = Autotuner()
+    best = at.sweep("bilinear_cuda", prob, "float32", GEFORCE_8800GTS).best
+    cost_t = estimate(
+        GEFORCE_8800GTS, spec.workload(t, prob, "float32"),
+        spec.n_tiles(t, prob), spec.vmem_bytes(t, prob, "float32"),
+    ).total_s
+    assert cost_t <= 1.5 * best.score
+
+
+def test_cost_model_infeasible_tiles():
+    spec = registry.get("bilinear_cuda")
+    prob = dict(src_h=800, src_w=800, scale=2)
+    big = TileShape((64, 64))  # 4096 threads > 512 limit
+    cost = estimate(GTX260, spec.workload(big, prob, "float32"),
+                    spec.n_tiles(big, prob), 0.0)
+    assert cost.total_s == float("inf")
+
+
+def test_tpu_compute_bound_large_matmul():
+    at = Autotuner()
+    res = at.sweep("matmul", dict(m=8192, k=8192, n=8192), "bfloat16", TPU_V5E)
+    assert res.best.cost.dominant() == "compute"
+    assert res.best.cost.utilization > 0.9
+
+
+def test_more_cores_less_sensitivity_tpu():
+    """§IV.C on TPU descriptors: v6e (bigger) no more sensitive than v5e."""
+    at = Autotuner()
+    prob = dict(s=4096, f=4096)
+    import repro.kernels.rglru.ops  # noqa: F401
+    s5 = at.sweep("rglru", prob, "bfloat16", TPU_V5E).sensitivity()
+    s6 = at.sweep("rglru", prob, "bfloat16", TPU_V6E).sensitivity()
+    assert s6 <= s5 * 1.5

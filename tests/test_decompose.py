@@ -1,0 +1,54 @@
+"""Segment decomposition: periodic patterns scan their repeat unit."""
+import pytest
+
+from repro import configs
+from repro.configs.base import ArchConfig, LayerSpec, repeat_pattern
+from repro.models.transformer import decompose
+
+
+def _flatten(segs):
+    out = []
+    for seg in segs:
+        if seg[0] == "seq":
+            out.extend(seg[1])
+        else:
+            _, unit, reps = seg
+            out.extend(unit * reps)
+    return tuple(out)
+
+
+@pytest.mark.parametrize("arch", configs.list_archs())
+def test_decomposition_preserves_pattern(arch):
+    cfg = configs.get_arch(arch)
+    if cfg.encoder is not None and cfg.encoder.kind == "audio":
+        pytest.skip("enc-dec uses its own stacks")
+    assert _flatten(decompose(cfg)) == cfg.layers()
+
+
+def test_alternating_pattern_scans_unit():
+    cfg = configs.get_arch("gemma2-9b")
+    segs = decompose(cfg)
+    assert len(segs) == 1 and segs[0][0] == "scan"
+    assert len(segs[0][1]) == 2 and segs[0][2] == 21
+
+
+def test_griffin_pattern_with_remainder():
+    cfg = configs.get_arch("recurrentgemma-9b")
+    segs = decompose(cfg)
+    kinds = [s[0] for s in segs]
+    assert "scan" in kinds
+    scan = next(s for s in segs if s[0] == "scan")
+    assert len(scan[1]) * scan[2] >= 36   # at least 12 units of 3
+
+
+def test_prefix_irregular_layer():
+    cfg = configs.get_arch("deepseek-moe-16b")
+    segs = decompose(cfg)
+    assert segs[0][0] == "seq" and len(segs[0][1]) == 1
+    assert segs[1][0] == "scan" and segs[1][2] == 27
+
+
+def test_homogeneous_single_scan():
+    cfg = configs.get_arch("mamba2-2.7b")
+    segs = decompose(cfg)
+    assert len(segs) == 1 and segs[0][0] == "scan" and segs[0][2] == 64

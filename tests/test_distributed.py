@@ -1,0 +1,120 @@
+"""Distributed-path correctness on multi-host-device meshes (subprocesses:
+device count must be set before jax init, so each case runs isolated).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str) -> str:
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, cwd=ROOT, timeout=600)
+    assert "OK" in out.stdout, (out.stdout[-1000:], out.stderr[-3000:])
+    return out.stdout
+
+
+def test_sharded_flash_decode_matches_full():
+    """shard_map LSE-combined decode == single-device full forward."""
+    _run("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro import configs
+from repro.models import api, flags
+from repro.models import transformer as T
+from repro.distributed import sharding_rules as rules
+
+mesh = jax.make_mesh((2, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg = dataclasses.replace(configs.get_smoke("qwen2-1.5b"),
+                          n_kv_heads=1, n_heads=4)
+params = api.init_params(cfg, jax.random.PRNGKey(0))
+B, S = 4, 16
+tok = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+full = T.forward(params, cfg, tok, remat=False).logits
+ctx = rules.make_context(mesh)
+caches = T.make_caches(cfg, B, S, jnp.float32)
+pre = T.forward(params, cfg, tok[:, :S-1], caches=caches, remat=False)
+flags.set_perf(decode_sharded=True)
+def _step(p, t, c):
+    o = T.forward(p, cfg, t, ctx=ctx, caches=c, decode=True, remat=False)
+    return o.logits, o.caches
+with jax.set_mesh(mesh):
+    logits, _ = jax.jit(_step)(params, tok[:, S-1:], pre.caches)
+np.testing.assert_allclose(np.asarray(logits[:, 0]), np.asarray(full[:, -1]),
+                           rtol=5e-4, atol=5e-4)
+print("OK")
+""")
+
+
+def test_moe_ep_sharded_matches_local():
+    """shard_map EP MoE == single-device all-experts computation."""
+    _run("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro import configs
+from repro.models import api
+from repro.models import transformer as T
+from repro.distributed import sharding_rules as rules
+
+mesh = jax.make_mesh((2, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg = configs.get_smoke("qwen3-moe-235b-a22b")
+cfg = dataclasses.replace(
+    cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=32.0))
+params = api.init_params(cfg, jax.random.PRNGKey(0))
+B, S = 4, 16
+tok = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+ref = T.forward(params, cfg, tok, remat=False).logits
+
+ctx = rules.make_context(mesh)
+def f(p, t):
+    return T.forward(p, cfg, t, ctx=ctx, remat=False).logits
+with jax.set_mesh(mesh):
+    out = jax.jit(f)(params, tok)
+np.testing.assert_allclose(np.asarray(out, np.float32),
+                           np.asarray(ref, np.float32), rtol=2e-3, atol=2e-3)
+print("OK")
+""")
+
+
+def test_train_step_runs_on_mesh():
+    """One real optimizer step executes on a 4-device mesh (DP x TP)."""
+    _run("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from repro import configs
+from repro.models import api
+from repro.distributed import sharding_rules as rules
+from repro.optim import adamw
+from repro.train.step import make_train_step
+
+mesh = jax.make_mesh((2, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg = configs.get_smoke("qwen2-1.5b")
+ctx = rules.make_context(mesh)
+params = api.init_params(cfg, jax.random.PRNGKey(0))
+ocfg = adamw.AdamWConfig()
+opt = adamw.init_state(params, ocfg)
+step = make_train_step(cfg, ctx, ocfg, microbatches=2)
+tok = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab_size)
+batch = {"tokens": tok, "targets": tok}
+with jax.set_mesh(mesh):
+    p2, o2, m = jax.jit(step)(params, opt, batch)
+assert np.isfinite(float(m["loss"]))
+# params actually changed
+d = sum(float(jnp.abs(a - b).sum())
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+assert d > 0
+print("OK")
+""")

@@ -1,0 +1,49 @@
+"""Tiled matmul Pallas kernel vs jnp oracle — shape/dtype/tile sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.matmul.matmul import matmul
+from repro.kernels.matmul.ref import matmul_ref
+
+
+@pytest.mark.parametrize("mkn", [(64, 64, 64), (128, 256, 64), (32, 512, 128)])
+@pytest.mark.parametrize("tile", [(32, 64, 32), (64, 128, 64)])
+def test_shapes_tiles(mkn, tile):
+    m, k, n = mkn
+    ka, kb = jax.random.split(jax.random.PRNGKey(0))
+    a = jax.random.normal(ka, (m, k), jnp.float32)
+    b = jax.random.normal(kb, (k, n), jnp.float32)
+    out = matmul(a, b, tile=tile, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(matmul_ref(a, b)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4), (jnp.bfloat16, 3e-2)])
+def test_dtypes(dtype, tol):
+    ka, kb = jax.random.split(jax.random.PRNGKey(1))
+    a = jax.random.normal(ka, (64, 128), jnp.float32).astype(dtype)
+    b = jax.random.normal(kb, (128, 64), jnp.float32).astype(dtype)
+    out = matmul(a, b, tile=(32, 64, 64), interpret=True)
+    ref = matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+def test_k_accumulation_order():
+    """Many k-steps accumulate in f32 regardless of input dtype."""
+    ka, kb = jax.random.split(jax.random.PRNGKey(2))
+    a = jax.random.normal(ka, (32, 1024), jnp.bfloat16)
+    b = jax.random.normal(kb, (1024, 32), jnp.bfloat16)
+    out = matmul(a, b, tile=(32, 128, 32), interpret=True)
+    ref = matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=3e-2, atol=3e-1)
+
+
+def test_indivisible_raises():
+    a = jnp.zeros((33, 64), jnp.float32)
+    b = jnp.zeros((64, 64), jnp.float32)
+    with pytest.raises(ValueError):
+        matmul(a, b, tile=(32, 64, 64), interpret=True)

@@ -1,0 +1,73 @@
+"""RG-LRU scan kernel vs oracle; associative-scan analysis path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.rglru.ops import rglru
+from repro.kernels.rglru.ref import rglru_ref
+from repro.kernels.rglru.rglru import rglru_scan
+from repro.models import flags
+
+
+def _inputs(b=2, s=64, f=256, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 5)
+    x = jax.random.normal(ks[0], (b, s, f), jnp.float32)
+    r = jax.nn.sigmoid(jax.random.normal(ks[1], (b, s, f)))
+    i = jax.nn.sigmoid(jax.random.normal(ks[2], (b, s, f)))
+    ap = jax.random.normal(ks[3], (f,))
+    h0 = jax.random.normal(ks[4], (b, f)) * 0.5
+    return x, r, i, ap, h0
+
+
+@pytest.mark.parametrize("tile", [(16, 128), (32, 256), (64, 128)])
+def test_kernel_tiles(tile):
+    x, r, i, ap, h0 = _inputs()
+    y_ref, h_ref = rglru_ref(x, r, i, ap, h0=h0)
+    y, h = rglru(x, r, i, ap, h0=h0, tile=tile, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_no_initial_state():
+    x, r, i, ap, _ = _inputs(key=1)
+    y_ref, _ = rglru_ref(x, r, i, ap)
+    y, _ = rglru(x, r, i, ap, tile=(16, 128), interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_associative_scan_path_matches():
+    x, r, i, ap, h0 = _inputs(s=32, f=64, key=2)
+    y1, hl1 = rglru_ref(x, r, i, ap, h0=h0)
+    flags.set_analysis_unroll(True)
+    try:
+        y2, hl2 = rglru_ref(x, r, i, ap, h0=h0)
+    finally:
+        flags.set_analysis_unroll(False)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hl1), np.asarray(hl2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decay_bounds():
+    """|h_t| stays bounded when inputs are bounded (contractive recurrence)."""
+    x, r, i, ap, _ = _inputs(s=256, key=3)
+    y, h = rglru_ref(x, r, i, ap)
+    assert float(jnp.max(jnp.abs(y))) < 50.0
+
+
+def test_state_continuation():
+    """Scanning halves with carried state == scanning the whole sequence."""
+    x, r, i, ap, _ = _inputs(key=4)
+    y_full, h_full = rglru_ref(x, r, i, ap)
+    s = x.shape[1] // 2
+    y1, h1 = rglru_ref(x[:, :s], r[:, :s], i[:, :s], ap)
+    y2, h2 = rglru_ref(x[:, s:], r[:, s:], i[:, s:], ap, h0=h1)
+    np.testing.assert_allclose(np.asarray(y_full[:, s:]), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_full), np.asarray(h2),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,90 @@
+"""The paper's empirical claims, reproduced through the calibrated cost model.
+
+Each test pins one claim from the paper (section references inline). The
+cost model is calibrated against the paper's own Table I hardware
+descriptors; see benchmarks/bench_bilinear_fig3.py for the full sweep.
+"""
+import itertools
+
+import pytest
+
+import repro.kernels.bilinear.ops  # noqa: F401  (registers bilinear_cuda)
+from repro.core import Autotuner, GEFORCE_8800GTS, GTX260, TilingPolicy
+from repro.core import registry
+from repro.core.cost_model import estimate
+from repro.core.tiling import TileShape
+
+# The paper's sweep axis (Fig. 3): CUDA (x=width, y=height); our TileShape
+# is (height, width).
+SWEEP = [TileShape((h, w)) for h, w in itertools.product((4, 8, 16, 32),
+                                                         repeat=2)]
+AT = Autotuner()
+
+
+def _prob(scale):
+    return dict(src_h=800, src_w=800, scale=scale)
+
+
+def _cost(hw, prob, tile):
+    spec = registry.get("bilinear_cuda")
+    return estimate(hw, spec.workload(tile, prob, "float32"),
+                    spec.n_tiles(tile, prob), 0.0).total_s
+
+
+def test_central_claim_optima_differ_across_models():
+    """§IV/§V: the best tile on one GPU model is not the best on another."""
+    diffs = 0
+    for scale in (2, 4, 6, 8, 10):
+        b1 = AT.sweep("bilinear_cuda", _prob(scale), "float32", GTX260,
+                      tiles=SWEEP).best.tile
+        b2 = AT.sweep("bilinear_cuda", _prob(scale), "float32",
+                      GEFORCE_8800GTS, tiles=SWEEP).best.tile
+        diffs += b1 != b2
+    assert diffs >= 1
+
+
+def test_fig4_wide_beats_tall():
+    """Fig. 4: at fixed thread count, row-major-wide tiles win (both GPUs)."""
+    prob = _prob(8)
+    for hw in (GTX260, GEFORCE_8800GTS):
+        assert _cost(hw, prob, TileShape((4, 8))) < \
+            _cost(hw, prob, TileShape((8, 4)))
+        assert _cost(hw, prob, TileShape((4, 32))) < \
+            _cost(hw, prob, TileShape((32, 4)))
+
+
+def test_sensitivity_higher_on_smaller_gpu_at_large_scales():
+    """§IV.C: fewer cores => more tile-shape sensitivity (scales >= 6)."""
+    for scale in (6, 8):
+        s1 = AT.sweep("bilinear_cuda", _prob(scale), "float32", GTX260,
+                      tiles=SWEEP).sensitivity()
+        s2 = AT.sweep("bilinear_cuda", _prob(scale), "float32",
+                      GEFORCE_8800GTS, tiles=SWEEP).sensitivity()
+        assert s2 > s1
+
+
+def test_occupancy_cliff_512_thread_tiles():
+    """§III.B: a 32x16 tile fills GTX260 (2x512 active) but leaves the
+    8800GTS at 512/768 — its relative cost vs the best tile is worse there."""
+    prob = _prob(4)
+    t = TileShape((16, 32))  # 512 threads
+    rel_gtx = _cost(GTX260, prob, t) / AT.sweep(
+        "bilinear_cuda", prob, "float32", GTX260, tiles=SWEEP).best.score
+    rel_8800 = _cost(GEFORCE_8800GTS, prob, t) / AT.sweep(
+        "bilinear_cuda", prob, "float32", GEFORCE_8800GTS,
+        tiles=SWEEP).best.score
+    assert rel_8800 > rel_gtx
+
+
+def test_32x4_robust_choice():
+    """§V conclusion: 32x4 is within ~10% of optimal on the worst-case GPU
+    at every scale, and the robust policy picks a 32-wide small-height tile."""
+    for scale in (2, 4, 6, 8, 10):
+        best = AT.sweep("bilinear_cuda", _prob(scale), "float32",
+                        GEFORCE_8800GTS, tiles=SWEEP).best.score
+        c = _cost(GEFORCE_8800GTS, _prob(scale), TileShape((4, 32)))
+        assert c <= 1.10 * best, scale
+
+    pol = TilingPolicy(mode="robust", fleet=(GTX260, GEFORCE_8800GTS))
+    t = pol.tile_for("bilinear_cuda", _prob(8), "float32")
+    assert t[1] >= 32 and t[0] <= 8  # wide, shallow — the 32x4 principle

@@ -1,0 +1,47 @@
+"""Pipeline parallelism (GPipe over the pod axis): correctness vs sequential."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str) -> str:
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, cwd=ROOT, timeout=600)
+    assert "OK" in out.stdout, (out.stdout[-800:], out.stderr[-3000:])
+    return out.stdout
+
+
+def test_gpipe_matches_sequential():
+    _run("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import ArchConfig
+from repro.distributed import pipeline as PP
+
+cfg = ArchConfig(name="pp_test", family="dense", n_layers=4, d_model=64,
+                 n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                 vocab_size=128, tie_embeddings=True).validate()
+mesh = jax.make_mesh((2,), ("pod",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+params = PP.init_pipeline_params(cfg, jax.random.PRNGKey(0), n_stages=2)
+sh = PP.pipeline_shardings(params, mesh)
+params = jax.tree.map(jax.device_put, params, sh)
+
+tok = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab_size)
+loss_fn = PP.make_pipeline_loss(cfg, mesh, n_stages=2, n_microbatches=2)
+with jax.set_mesh(mesh):
+    pp_loss = jax.jit(loss_fn)(params, tok, tok)
+ref = PP.sequential_reference_loss(cfg, jax.device_get(params), tok, tok)
+np.testing.assert_allclose(float(pp_loss), float(ref), rtol=2e-4)
+
+# gradients flow through the pipeline (ppermute transpose)
+g = jax.jit(jax.grad(lambda p: loss_fn(p, tok, tok)))(params)
+gn = sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(g))
+assert np.isfinite(gn) and gn > 0
+print("OK")
+""")

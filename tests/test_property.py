@@ -1,0 +1,112 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.kernels.bilinear.ops  # noqa: F401
+import repro.kernels.matmul.ops  # noqa: F401
+from repro.core import TPU_V5E, estimate
+from repro.core.cost_model import TileWorkload
+from repro.core.tiling import (
+    TileConstraints, TileShape, cdiv, enumerate_tiles, round_up,
+)
+from repro.kernels.bilinear.bilinear import bilinear_upscale
+from repro.kernels.bilinear.ref import bilinear_upscale_ref
+from repro.models.layers import apply_rope, rms_norm
+
+COMMON = dict(deadline=None, max_examples=25)
+
+
+@given(st.integers(1, 10_000), st.integers(1, 512))
+@settings(**COMMON)
+def test_round_up_properties(x, m):
+    r = round_up(x, m)
+    assert r >= x and r % m == 0 and r - x < m
+
+
+@given(st.integers(1, 10_000), st.integers(1, 512))
+@settings(**COMMON)
+def test_cdiv_properties(a, b):
+    assert cdiv(a, b) * b >= a > (cdiv(a, b) - 1) * b
+
+
+@given(st.integers(64, 2048), st.integers(64, 2048))
+@settings(**COMMON)
+def test_enumerate_tiles_legal(m, n):
+    c = TileConstraints(rank=2, max_dims=(m, n), lane_dim=1, sublane_dim=0)
+    tiles = enumerate_tiles(c, TPU_V5E, "float32", lambda t: t.size * 4)
+    assert tiles
+    budget = TPU_V5E.vmem_bytes * c.vmem_fraction
+    for t in tiles:
+        assert t[0] <= m and t[1] <= n
+        assert t.size * 4 <= budget
+
+
+@given(st.floats(1e6, 1e12), st.floats(1e3, 1e9))
+@settings(**COMMON)
+def test_cost_monotone_in_flops(flops, hbm):
+    w1 = TileWorkload(flops=flops, hbm_bytes=hbm, row_segments=1,
+                      row_stride_bytes=4096.0)
+    w2 = TileWorkload(flops=flops * 2, hbm_bytes=hbm, row_segments=1,
+                      row_stride_bytes=4096.0)
+    c1 = estimate(TPU_V5E, w1, 10, vmem_bytes=1024.0)
+    c2 = estimate(TPU_V5E, w2, 10, vmem_bytes=1024.0)
+    assert c2.total_s >= c1.total_s
+
+
+@given(st.integers(2, 6), st.integers(1, 4), st.sampled_from([2, 3, 4, 5]))
+@settings(deadline=None, max_examples=10)
+def test_bilinear_kernel_matches_ref_random_shapes(h8, w8, scale):
+    h, w = h8 * 8, w8 * 16
+    src = jax.random.uniform(jax.random.PRNGKey(h * w), (h, w), jnp.float32)
+    ref = bilinear_upscale_ref(src, scale)
+    out = bilinear_upscale(src, scale, tile=(h * scale, w * scale),
+                           interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(0, 10))
+@settings(**COMMON)
+def test_rms_norm_scale_invariance(seed):
+    """rms_norm(c*x) == rms_norm(x) for c > 0 (scale invariance)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 32))
+    w = jnp.zeros(32)
+    a = rms_norm(x, w)
+    b = rms_norm(x * 7.0, w)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-5)
+
+
+@given(st.integers(0, 10))
+@settings(**COMMON)
+def test_rope_norm_preserving(seed):
+    """Rotary embedding is a rotation: preserves per-pair norms."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 8, 64))
+    pos = jnp.arange(8)[None]
+    y = apply_rope(x, pos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-4)
+
+
+@given(st.integers(1, 64), st.integers(1, 8))
+@settings(**COMMON)
+def test_tileshape_ordering_total(size, rank):
+    dims = tuple([size] * rank)
+    t = TileShape(dims)
+    assert t.size == size ** rank
+    assert len(t) == rank
+
+
+@given(st.integers(0, 20))
+@settings(deadline=None, max_examples=8)
+def test_quantize_idempotent_on_grid(seed):
+    from repro.optim.compression import _quantize
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,))
+    q, s = _quantize(x)
+    deq = q.astype(jnp.float32) * s
+    q2, s2 = _quantize(deq)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(q2), atol=1)

@@ -1,0 +1,84 @@
+"""Roofline analysis unit tests: HLO collective parsing + term math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hardware import TPU_V5E
+from repro.roofline.analysis import (
+    RooflineTerms, _shape_bytes, parse_collectives,
+)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[8,4096]") == 8 * 4096 * 2
+    assert _shape_bytes("f32[16]") == 64
+    assert _shape_bytes("(bf16[2,4], f32[8])") == 16 + 32
+    assert _shape_bytes("pred[4]") == 4
+    assert _shape_bytes("token[]") == 0
+
+
+def test_parse_collectives_synthetic():
+    hlo = """
+  %all-reduce.1 = bf16[8,128]{1,0} all-reduce(bf16[8,128] %x), replica_groups={}
+  %all-gather.2 = f32[64,32]{1,0} all-gather(f32[4,32] %y), dimensions={0}
+  %reduce-scatter.3 = f32[4,32]{1,0} reduce-scatter(f32[64,32] %z)
+  %add.4 = f32[2]{0} add(f32[2] %a, f32[2] %b)
+  %collective-permute.5 = bf16[16]{0} collective-permute(bf16[16] %w)
+"""
+    stats = parse_collectives(hlo)
+    assert stats.count_by_kind == {
+        "all-reduce": 1, "all-gather": 1, "reduce-scatter": 1,
+        "collective-permute": 1,
+    }
+    assert stats.bytes_by_kind["all-reduce"] == 8 * 128 * 2 * 2.0
+    assert stats.bytes_by_kind["all-gather"] == 64 * 32 * 4
+    assert stats.total_bytes > 0
+
+
+def test_async_start_done_counted_once():
+    hlo = """
+  %all-gather-start.1 = (f32[4,8], f32[16,8]) all-gather-start(f32[4,8] %p)
+  %all-gather-done.1 = f32[16,8] all-gather-done(%all-gather-start.1)
+"""
+    stats = parse_collectives(hlo)
+    assert stats.count_by_kind.get("all-gather", 0) == 1
+
+
+def test_terms_dominance():
+    t = RooflineTerms(flops=1e12, hbm_bytes=1e9, collective_bytes=1e6,
+                      compute_s=1e12 / TPU_V5E.peak_flops_bf16,
+                      memory_s=1e9 / TPU_V5E.hbm_bw,
+                      collective_s=1e6 / (4 * 50e9))
+    assert t.dominant == "compute"
+    assert 0 < t.roofline_fraction() <= 1.0
+
+
+def test_real_compiled_collective_parse():
+    """An actual psum lowered on 2 host devices contains an all-reduce."""
+    import os
+    import subprocess
+    import sys
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax, jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.roofline.analysis import parse_collectives
+mesh = jax.make_mesh((2,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+def f(x):
+    return jax.lax.psum(x.sum(axis=0), "d")
+g = shard_map(f, mesh=mesh, in_specs=P("d", None), out_specs=P(),
+              check_vma=False)
+x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+c = jax.jit(g).lower(x).compile()
+stats = parse_collectives(c.as_text())
+assert stats.total_bytes > 0, stats
+print("OK")
+"""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, cwd=os.path.dirname(
+                             os.path.dirname(os.path.abspath(__file__))))
+    assert "OK" in out.stdout, out.stderr[-2000:]

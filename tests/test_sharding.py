@@ -1,0 +1,65 @@
+"""Sharding rules: logical axes -> PartitionSpec on a stub mesh (no devices)."""
+import dataclasses
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding_rules import batch_axes_for, param_spec
+
+
+@dataclasses.dataclass
+class StubMesh:
+    shape: dict
+    axis_names: tuple
+
+
+SINGLE = StubMesh({"data": 16, "model": 16}, ("data", "model"))
+MULTI = StubMesh({"pod": 2, "data": 16, "model": 16},
+                 ("pod", "data", "model"))
+
+
+def test_tp_axes_mapped():
+    spec = param_spec(("d_model", "ff"), (4096, 14336), SINGLE, fsdp=False)
+    assert spec == P(None, "model")
+
+
+def test_fsdp_shards_largest_free_axis():
+    spec = param_spec(("d_model", "ff"), (4096, 14336), SINGLE, fsdp=True)
+    assert spec == P("data", "model")
+
+
+def test_indivisible_axis_not_sharded():
+    # kv_heads=2 < 16: stays replicated on the model axis.
+    spec = param_spec(("d_model", "kv_heads", None), (1536, 2, 128), SINGLE,
+                      fsdp=False)
+    assert spec == P(None, None, None)
+
+
+def test_vocab_sharding():
+    spec = param_spec(("vocab", "d_model"), (153600, 1536), SINGLE, fsdp=True)
+    assert spec == P("model", "data")
+
+
+def test_stacked_layer_dim_never_sharded_by_tp():
+    # Leading scan axis has logical axis None; FSDP may not shard a
+    # non-divisible leading dim (e.g. 28 layers % 16 != 0).
+    spec = param_spec((None, "d_model", "ff"), (28, 1536, 8960), SINGLE,
+                      fsdp=True)
+    assert spec[0] is None
+    assert spec == P(None, None, "model") or spec == P(None, "data", "model")
+
+
+def test_experts_sharded():
+    spec = param_spec(("experts", "d_model", None), (128, 4096, 1536),
+                      SINGLE, fsdp=True)
+    assert spec[0] == "model"
+
+
+def test_batch_axes():
+    assert batch_axes_for(SINGLE) == ("data",)
+    assert batch_axes_for(MULTI) == ("pod", "data")
+
+
+def test_small_param_replicated():
+    spec = param_spec((None,), (7,), SINGLE, fsdp=True)
+    assert spec == P(None)

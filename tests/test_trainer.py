@@ -1,0 +1,68 @@
+"""Trainer integration: loss decreases, fault injection + restart, stragglers."""
+import logging
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data.pipeline import DataConfig
+from repro.distributed.fault_tolerance import HealthMonitor
+from repro.optim import adamw
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _trainer(tmp_path, steps=30, fail_at=None, arch="qwen2-1.5b", **kw):
+    cfg = configs.get_smoke(arch)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                          global_batch=4)
+    tcfg = TrainerConfig(steps=steps, checkpoint_every=10,
+                         checkpoint_dir=str(tmp_path), peak_lr=1e-3,
+                         warmup_steps=5, log_every=1000, **kw)
+    return Trainer(cfg, data_cfg, tcfg,
+                   opt_cfg=adamw.AdamWConfig(weight_decay=0.01))
+
+
+def test_loss_decreases(tmp_path):
+    out = _trainer(tmp_path, steps=30).run()
+    losses = out["losses"]
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1
+    assert out["restarts"] == 0
+
+
+def test_failure_recovery(tmp_path):
+    """Injected crash at step 15 -> restore from step-10 checkpoint -> finish."""
+    out = _trainer(tmp_path, steps=25, fail_at=None).run(fail_at=15)
+    assert out["restarts"] == 1
+    # Completed all steps despite the crash: losses cover >= 25 step records.
+    assert len(out["losses"]) >= 25
+
+
+def test_failure_before_any_checkpoint(tmp_path):
+    out = _trainer(tmp_path, steps=12).run(fail_at=3)
+    assert out["restarts"] == 1
+    assert len(out["losses"]) >= 12
+
+
+def test_too_many_failures_raises(tmp_path):
+    t = _trainer(tmp_path, steps=10)
+    with pytest.raises(RuntimeError):
+        # fail_at fires once, but max_restarts=0 means it is fatal.
+        t.run(fail_at=2, max_restarts=0)
+
+
+def test_straggler_detection():
+    hm = HealthMonitor(warmup_steps=2, straggler_factor=2.0)
+    flags = [hm.record_step(s) for s in [1.0] * 8 + [5.0] + [1.0] * 3]
+    assert flags[8] is True
+    assert hm.straggler_events == 1
+    assert sum(flags) == 1
+    # Baseline unpolluted by the outlier.
+    assert hm.baseline_s == pytest.approx(1.0, rel=0.05)
+
+
+def test_microbatched_step_matches_plain(tmp_path):
+    """Gradient accumulation (2 microbatches) trains to a similar loss."""
+    out1 = _trainer(tmp_path / "a", steps=15).run()
+    out2 = _trainer(tmp_path / "b", steps=15, microbatches=2).run()
+    assert abs(out1["losses"][-1] - out2["losses"][-1]) < 0.5
