@@ -1,0 +1,56 @@
+"""Plan-transfer penalty: tuned on model A, run on model B.
+
+The paper's Fig. 3 cross-model comparison, productized: for each kernel we
+take the tile a plan compiled FOR hardware A would pick, run it unchanged on
+hardware B ("naive" transfer — what you get by shipping one tuned config to
+a mixed fleet), and compare against B's own optimum. We then show what the
+plan store's ``cross_hardware`` resolution recovers by re-ranking the
+donor's candidate curve with B's cost model.
+
+CSV: kernel,problem,src_hw,dst_hw,naive_penalty_pct,reranked_penalty_pct
+"""
+import warnings
+
+from repro import kernels
+from repro.core import (
+    GEFORCE_8800GTS, GTX260, TPU_V5E, TPU_V6E, Autotuner,
+)
+from repro.core.plans import compile_plan, _rescore
+
+CASES = [
+    # (kernel, problem, dtype, tuned-on, run-on)
+    ("bilinear_cuda", dict(src_h=800, src_w=800, scale=2), "float32",
+     GTX260, GEFORCE_8800GTS),
+    ("bilinear_cuda", dict(src_h=800, src_w=800, scale=6), "float32",
+     GTX260, GEFORCE_8800GTS),
+    ("bilinear_cuda", dict(src_h=800, src_w=800, scale=10), "float32",
+     GEFORCE_8800GTS, GTX260),
+    ("matmul", dict(m=8192, k=4096, n=4096), "bfloat16", TPU_V5E, TPU_V6E),
+    ("flash_attention",
+     dict(sq=4096, skv=4096, d=128, hq=16, hkv=8, window=0), "bfloat16",
+     TPU_V6E, TPU_V5E),
+    ("rglru", dict(s=4096, f=4096), "bfloat16", TPU_V5E, TPU_V6E),
+]
+
+
+def run(print_fn=print):
+    kernels.register_all()
+    at = Autotuner()
+    print_fn("kernel,problem,src_hw,dst_hw,naive_penalty_pct,"
+             "reranked_penalty_pct")
+    for kernel, prob, dtype, src, dst in CASES:
+        src_best = at.sweep(kernel, prob, dtype, src).best.tile
+        dst_best_s = at.sweep(kernel, prob, dtype, dst).best.score
+        # Naive: ship A's winner to B unchanged.
+        naive_s = _rescore(kernel, src_best, prob, dtype, dst)
+        # Plan store: compile only on A, resolve on B (re-ranked transfer).
+        plan = compile_plan([(kernel, prob, dtype, src)], autotuner=at)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")  # the transfer warning, expected
+            res = plan.resolve(kernel, prob, dtype, dst)
+        reranked_s = res.score_s if res is not None else float("inf")
+        naive_pct = 100.0 * (naive_s / dst_best_s - 1.0)
+        rerank_pct = 100.0 * (reranked_s / dst_best_s - 1.0)
+        pk = ";".join(f"{k}={v}" for k, v in sorted(prob.items()))
+        print_fn(f"{kernel},{pk},{src.name},{dst.name},"
+                 f"{naive_pct:.1f},{rerank_pct:.1f}")

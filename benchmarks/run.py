@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` style CSV blocks:
   fig3        — tile sweep x scales x 2 GPU models (paper Fig. 3)
   fig4        — wide-vs-tall geometry (paper Fig. 4)
   sensitivity — tile sensitivity vs core count (paper §IV.C)
+  transfer    — tuned-on-A/run-on-B plan-transfer penalties (Fig. 3 across models)
   kernels     — kernel reference timings + autotuned v5e tiles
   roofline    — the 40-cell dry-run roofline table (if results exist)
 """
@@ -11,8 +12,8 @@ Prints ``name,us_per_call,derived`` style CSV blocks:
 
 def main() -> None:
     from benchmarks import (
-        bench_bilinear_fig3, bench_kernels, bench_sensitivity,
-        bench_tile_geometry, roofline_table,
+        bench_bilinear_fig3, bench_kernels, bench_plan_transfer,
+        bench_sensitivity, bench_tile_geometry, roofline_table,
     )
 
     print("== fig3: tile sweep x scale x GPU model (paper Fig. 3) ==")
@@ -23,6 +24,9 @@ def main() -> None:
     print()
     print("== sensitivity vs core count (paper §IV.C) ==")
     bench_sensitivity.run()
+    print()
+    print("== plan transfer: tuned-on-A, run-on-B penalty ==")
+    bench_plan_transfer.run()
     print()
     print("== kernel micro-benchmarks ==")
     bench_kernels.run()

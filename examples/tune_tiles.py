@@ -4,6 +4,12 @@ This is the paper's methodology as an operational tool: run once per
 hardware model, ship the cache with the binary.
 
 Run:  PYTHONPATH=src python examples/tune_tiles.py --cache /tmp/tiles.json
+
+With ``--compile-plans OUT.json`` the same sweep is packaged as a portable,
+schema-versioned TilePlan artifact (best tile per hardware + the full
+sensitivity curve) instead of a bare cache — the input to
+``ServeEngine(plans=...)`` / ``TrainerConfig.tile_plans``. The full-fleet
+compiler with shape-family problems is ``python -m repro.launch.compile_plans``.
 """
 import argparse
 import json
@@ -32,7 +38,34 @@ def main():
     ap.add_argument("--cache", default="/tmp/repro_tiles.json")
     ap.add_argument("--hardware", nargs="*",
                     default=["tpu_v4", "tpu_v5e", "tpu_v5p", "tpu_v6e"])
+    ap.add_argument("--compile-plans", default=None, metavar="OUT",
+                    help="write a portable TilePlan artifact instead of a "
+                         "bare autotuner cache")
     args = ap.parse_args()
+
+    if args.compile_plans:
+        from repro.core.plans import PLAN_SCHEMA_VERSION, compile_plan
+
+        # dtype is part of the plan key, so cover what consumers actually
+        # run (ServeEngine/Trainer default to float32, production uses
+        # bfloat16); the shared policy pins image kernels to float32.
+        from repro.launch.compile_plans import kernel_dtypes
+
+        jobs = [
+            (kernel, prob, dtype, HARDWARE_REGISTRY[hw_name])
+            for hw_name in args.hardware
+            for kernel, problems in PROBLEMS.items()
+            for prob in problems
+            for dtype in kernel_dtypes(kernel, ("bfloat16", "float32"))
+        ]
+        plan = compile_plan(jobs, meta={"generated_by": "examples.tune_tiles"})
+        plan.save(args.compile_plans)
+        for e in sorted(plan.entries(), key=lambda e: e.key):
+            print(f"{e.hardware:10s} {e.kernel:16s} "
+                  f"{str(e.problem_dict)[:48]:50s} -> {e.tile}")
+        print(f"\nplan artifact (schema v{PLAN_SCHEMA_VERSION}, "
+              f"{len(plan)} entries) written to {args.compile_plans}")
+        return
 
     at = Autotuner(cache_path=args.cache)
     for hw_name in args.hardware:

@@ -7,6 +7,7 @@ Public surface:
     Autotuner                  (core.autotuner)
     TilingPolicy               (core.policy)
     kernel registry            (core.registry)
+    AOT tile plans             (core.plans)
 """
 from repro.core.autotuner import Autotuner, SweepResult
 from repro.core.cost_model import CostBreakdown, TileWorkload, estimate
@@ -21,6 +22,16 @@ from repro.core.hardware import (
     TPU_V6E,
     HardwareModel,
 )
+from repro.core.plans import (
+    PLAN_SCHEMA_VERSION,
+    PlanEntry,
+    PlanError,
+    PlanResolution,
+    PlanSchemaError,
+    PlanTransferWarning,
+    TilePlan,
+    compile_plan,
+)
 from repro.core.policy import TilingPolicy, default_policy, set_default_policy
 from repro.core.tiling import TileConstraints, TileShape, cdiv, round_up
 
@@ -30,4 +41,6 @@ __all__ = [
     "TPU_V4", "TPU_V5E", "TPU_V5P", "TPU_V6E", "GTX260", "GEFORCE_8800GTS",
     "TilingPolicy", "default_policy", "set_default_policy",
     "TileConstraints", "TileShape", "cdiv", "round_up",
+    "PLAN_SCHEMA_VERSION", "PlanEntry", "PlanError", "PlanResolution",
+    "PlanSchemaError", "PlanTransferWarning", "TilePlan", "compile_plan",
 ]

@@ -17,12 +17,15 @@ import dataclasses
 import json
 import os
 import threading
-from typing import Callable, Dict, List, Mapping, Optional, Tuple
+from typing import TYPE_CHECKING, Callable, Dict, List, Mapping, Optional, Tuple
 
 from repro.core import registry
 from repro.core.cost_model import CostBreakdown, estimate
 from repro.core.hardware import HardwareModel
 from repro.core.tiling import TileShape, enumerate_tiles
+
+if TYPE_CHECKING:  # avoid a cycle: plans.compile_entry uses Autotuner
+    from repro.core.plans import TilePlan
 
 MeasureFn = Callable[[TileShape], float]  # returns seconds per call
 
@@ -67,12 +70,21 @@ class SweepResult:
 
 
 class Autotuner:
-    """Sweep + select + persistent cache."""
+    """Sweep + select + persistent cache.
 
-    def __init__(self, cache_path: Optional[str] = None):
+    With ``plans`` (a compiled :class:`~repro.core.plans.TilePlan`), the
+    resolution order of :meth:`best_tile` becomes cache -> plan lookup
+    (exact / nearest-shape / cross-hardware, see ``TilePlan.resolve``) ->
+    sweep, so pre-compiled fleets never sweep on the hot path.
+    """
+
+    def __init__(self, cache_path: Optional[str] = None,
+                 plans: Optional["TilePlan"] = None):
         self._cache_path = cache_path
         self._cache: Dict[str, dict] = {}
         self._lock = threading.Lock()
+        self.plans = plans
+        self.sweep_count = 0  # observability: hot paths assert this stays 0
         if cache_path and os.path.exists(cache_path):
             try:
                 with open(cache_path) as f:
@@ -101,6 +113,7 @@ class Autotuner:
         Passing ``tiles`` explicitly pins the candidate set — used by the
         paper-reproduction benchmarks to sweep the paper's own Fig. 3 axis.
         """
+        self.sweep_count += 1
         spec = registry.get(kernel)
         if tiles is None:
             constraints = spec.constraints(problem)
@@ -146,6 +159,18 @@ class Autotuner:
             hit = self._cache.get(key)
         if hit is not None:
             return TileShape(tuple(hit["tile"]))
+        if self.plans is not None:
+            res = self.plans.resolve(kernel, problem, dtype, hw)
+            if res is not None:
+                with self._lock:
+                    self._cache[key] = {
+                        "tile": list(res.tile.dims),
+                        "score_s": res.score_s,
+                        "dominant": res.entry.dominant,
+                        "source": f"plan:{res.source}",
+                    }
+                    self._flush_locked()
+                return res.tile
         result = self.sweep(kernel, problem, dtype, hw, measure_fn=measure_fn)
         best = result.best
         with self._lock:
@@ -160,9 +185,18 @@ class Autotuner:
     def _flush_locked(self) -> None:
         if not self._cache_path:
             return
+        # Approximate plan resolutions (nearest-shape clamps, cross-hardware
+        # transfers) are provisional: never durable, whoever triggers the
+        # flush, so a corrected plan artifact with an exact entry wins on
+        # the next process start. Swept/measured results and exact plan hits
+        # persist.
+        durable = {
+            k: v for k, v in self._cache.items()
+            if v.get("source") in (None, "plan:exact")
+        }
         tmp = self._cache_path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump(self._cache, f, indent=1, sort_keys=True)
+            json.dump(durable, f, indent=1, sort_keys=True)
         os.replace(tmp, self._cache_path)
 
     def cached(self) -> Dict[str, dict]:

@@ -1,0 +1,504 @@
+"""Ahead-of-time tile plans: compile once per hardware fleet, resolve anywhere.
+
+The paper's central result is that the best tile on one GPU model is not the
+best on another — tuning is a per-hardware-model activity. The Autotuner
+already does the per-model sweep, but lazily: the first request/step on a new
+``(kernel, problem, dtype, hardware)`` cell pays the sweep on the hot path.
+This module moves that cost ahead of time, the way "Comprehensive
+Optimization of Parametric Kernels for GPUs" compiles parametric plans
+offline and selects at run time:
+
+* :func:`compile_plan` sweeps a set of ``(kernel, problem, dtype, hardware)``
+  jobs and records, per cell, the best tile *and* the full sensitivity curve
+  (every candidate's score), so downstream consumers can re-rank without
+  re-sweeping.
+* :class:`TilePlan` is the portable, schema-versioned artifact (JSON on
+  disk). Loading validates the schema; a corrupt or stale artifact degrades
+  to "no plan" rather than crashing the server.
+* :meth:`TilePlan.resolve` is the run-time lookup with a three-step
+  fallback order:
+
+  1. **exact** — ``(kernel, problem, dtype, hardware)`` hit.
+  2. **nearest_shape** — same kernel/dtype/hardware, nearest problem shape
+     in log-space; the donor tile is clamped to the target problem and
+     legality-checked.
+  3. **cross_hardware** — the paper's Fig. 3 situation productized: a plan
+     tuned on model A is transferred to model B by re-ranking the donor's
+     candidate tiles with B's analytic cost model, and a
+     :class:`PlanTransferWarning` is emitted because transferred optima are
+     not trustworthy without re-measurement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import logging
+import math
+import os
+import warnings
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple, Union
+
+from repro.core import registry
+from repro.core.cost_model import estimate
+from repro.core.hardware import HardwareModel
+from repro.core.hardware import get as get_hardware
+from repro.core.tiling import TileShape
+
+log = logging.getLogger("repro.plans")
+
+# Bump on any incompatible change to the artifact layout. Loaders reject
+# mismatched versions (a stale artifact must not silently misconfigure tiles).
+PLAN_SCHEMA_VERSION = 1
+
+
+class PlanError(ValueError):
+    """Base error for plan artifacts."""
+
+
+class PlanSchemaError(PlanError):
+    """Artifact exists but is not a valid plan (bad version / missing fields)."""
+
+
+class PlanTransferWarning(UserWarning):
+    """A tile tuned on one hardware model was transferred to another.
+
+    The paper's cross-model comparison shows transferred optima can be far
+    from the true optimum; the resolution re-ranks with the target's cost
+    model, but consumers should re-tune on the real hardware when possible.
+    """
+
+
+def problem_key(problem: Mapping[str, int]) -> str:
+    return ",".join(f"{k}={v}" for k, v in sorted(problem.items()))
+
+
+def plan_key(kernel: str, problem: Mapping[str, int], dtype: str,
+             hardware: str) -> str:
+    # Same layout as Autotuner._key so the two caches stay interchangeable.
+    return f"{kernel}|{problem_key(problem)}|{dtype}|{hardware}"
+
+
+# ---------------------------------------------------------------------------
+# Artifact entries.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PlanEntry:
+    """One compiled cell: the best tile plus its full sensitivity curve."""
+
+    kernel: str
+    hardware: str
+    dtype: str
+    problem: Tuple[Tuple[str, int], ...]      # sorted items (hashable)
+    tile: TileShape
+    score_s: float
+    dominant: str                             # compute | memory | overhead
+    sensitivity: float                        # worst/best over finite entries
+    # ((dims...), score_s) ascending by score; [0] is the best tile.
+    curve: Tuple[Tuple[Tuple[int, ...], float], ...] = ()
+
+    @property
+    def problem_dict(self) -> Dict[str, int]:
+        return dict(self.problem)
+
+    @property
+    def key(self) -> str:
+        return plan_key(self.kernel, self.problem_dict, self.dtype,
+                        self.hardware)
+
+    def to_dict(self) -> dict:
+        return {
+            "kernel": self.kernel,
+            "hardware": self.hardware,
+            "dtype": self.dtype,
+            "problem": self.problem_dict,
+            "tile": list(self.tile.dims),
+            "score_s": self.score_s,
+            "dominant": self.dominant,
+            "sensitivity": self.sensitivity,
+            "curve": [[list(dims), score] for dims, score in self.curve],
+        }
+
+    @staticmethod
+    def from_dict(d: Mapping) -> "PlanEntry":
+        if not isinstance(d, Mapping):
+            raise PlanSchemaError(
+                f"plan entry must be an object, got {type(d).__name__}")
+        required = ("kernel", "hardware", "dtype", "problem", "tile",
+                    "score_s")
+        for field in required:
+            if field not in d:
+                raise PlanSchemaError(f"plan entry missing field {field!r}")
+        problem = d["problem"]
+        if (not isinstance(problem, Mapping)
+                or not all(isinstance(v, int) for v in problem.values())):
+            raise PlanSchemaError(f"bad problem in plan entry: {problem!r}")
+        tile = d["tile"]
+        if (not isinstance(tile, (list, tuple)) or not tile
+                or not all(isinstance(x, int) and x > 0 for x in tile)):
+            raise PlanSchemaError(f"bad tile in plan entry: {tile!r}")
+        try:
+            curve = []
+            for point in d.get("curve", ()):
+                dims, score = point
+                curve.append((tuple(int(x) for x in dims), float(score)))
+            return PlanEntry(
+                kernel=str(d["kernel"]),
+                hardware=str(d["hardware"]),
+                dtype=str(d["dtype"]),
+                problem=tuple(sorted(problem.items())),
+                tile=TileShape(tuple(int(x) for x in tile)),
+                score_s=float(d["score_s"]),
+                dominant=str(d.get("dominant", "")),
+                sensitivity=float(d.get("sensitivity", 1.0)),
+                curve=tuple(curve),
+            )
+        except (TypeError, ValueError) as e:
+            # Field coercion failed: a malformed artifact must surface as a
+            # schema error so load_or_none degrades instead of crashing.
+            raise PlanSchemaError(f"malformed plan entry: {e}") from e
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanResolution:
+    """How a tile request was satisfied by the plan store."""
+
+    tile: TileShape
+    source: str                    # exact | nearest_shape | cross_hardware
+    entry: PlanEntry               # the donor entry
+    score_s: float                 # (re-)estimated score on the target hw
+    distance: float = 0.0          # problem-shape distance (0 for exact)
+    donor_hardware: Optional[str] = None   # set for cross_hardware
+
+
+# ---------------------------------------------------------------------------
+# Resolution helpers.
+# ---------------------------------------------------------------------------
+
+def _shape_distance(a: Mapping[str, int], b: Mapping[str, int]) -> Optional[float]:
+    """Log-space L1 distance between two problems; None if incomparable."""
+    if set(a) != set(b):
+        return None
+    return sum(
+        abs(math.log2(max(a[k], 1) / max(b[k], 1))) for k in a
+    )
+
+
+def _fit_tile(tile: TileShape, kernel: str, problem: Mapping[str, int],
+              dtype: str, hw: HardwareModel) -> Optional[TileShape]:
+    """Clamp a donor tile to the target problem and legality-check it."""
+    try:
+        spec = registry.get(kernel)
+    except KeyError:
+        return tile  # unknown kernel: trust the donor dims as-is
+    constraints = spec.constraints(problem)
+    if len(tile) != constraints.rank:
+        return None
+    fitted = TileShape(tuple(
+        min(d, m) for d, m in zip(tile.dims, constraints.max_dims)
+    ))
+    budget = hw.vmem_bytes * constraints.vmem_fraction
+    if spec.vmem_bytes(fitted, problem, dtype) > budget:
+        return None
+    return fitted
+
+
+def _rescore(kernel: str, tile: TileShape, problem: Mapping[str, int],
+             dtype: str, hw: HardwareModel) -> float:
+    """Cost-model score of a tile on a (possibly different) hardware model."""
+    try:
+        spec = registry.get(kernel)
+        cost = estimate(
+            hw, spec.workload(tile, problem, dtype), spec.n_tiles(tile, problem),
+            vmem_bytes=spec.vmem_bytes(tile, problem, dtype),
+        )
+        return cost.total_s
+    except (KeyError, ValueError):
+        return math.inf
+
+
+# ---------------------------------------------------------------------------
+# The portable plan artifact.
+# ---------------------------------------------------------------------------
+
+class TilePlan:
+    """A set of compiled :class:`PlanEntry` cells plus artifact metadata."""
+
+    def __init__(self, entries: Iterable[PlanEntry] = (),
+                 meta: Optional[Mapping] = None):
+        self._entries: Dict[str, PlanEntry] = {}
+        self.meta: Dict = dict(meta or {})
+        for e in entries:
+            self.add(e)
+
+    # -- container ----------------------------------------------------------
+    def add(self, entry: PlanEntry) -> None:
+        self._entries[entry.key] = entry
+
+    def entries(self) -> List[PlanEntry]:
+        return list(self._entries.values())
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def kernels(self) -> List[str]:
+        return sorted({e.kernel for e in self._entries.values()})
+
+    def hardware_names(self) -> List[str]:
+        return sorted({e.hardware for e in self._entries.values()})
+
+    # -- lookup -------------------------------------------------------------
+    def lookup(self, kernel: str, problem: Mapping[str, int], dtype: str,
+               hardware: str) -> Optional[PlanEntry]:
+        return self._entries.get(plan_key(kernel, problem, dtype, hardware))
+
+    def resolve(
+        self,
+        kernel: str,
+        problem: Mapping[str, int],
+        dtype: str,
+        hw: Union[HardwareModel, str],
+        allow_nearest: bool = True,
+        allow_transfer: bool = True,
+        transfer_candidates: int = 8,
+    ) -> Optional[PlanResolution]:
+        """Lookup-then-fallback tile resolution. Never sweeps.
+
+        Order: exact hit -> nearest problem shape on the same hardware ->
+        cross-hardware transfer re-ranked with the target's cost model (with
+        a :class:`PlanTransferWarning`). Returns None when the plan has
+        nothing usable — callers fall back to heuristics or a sweep.
+        """
+        hw_model = get_hardware(hw) if isinstance(hw, str) else hw
+        problem = dict(problem)
+
+        entry = self.lookup(kernel, problem, dtype, hw_model.name)
+        if entry is not None:
+            return PlanResolution(entry.tile, "exact", entry, entry.score_s)
+
+        pool = [e for e in self._entries.values()
+                if e.kernel == kernel and e.dtype == dtype]
+
+        if allow_nearest:
+            res = self._nearest_shape(pool, kernel, problem, dtype, hw_model)
+            if res is not None:
+                return res
+
+        if allow_transfer:
+            res = self._transfer(pool, kernel, problem, dtype, hw_model,
+                                 transfer_candidates)
+            if res is not None:
+                return res
+        return None
+
+    def _nearest_shape(self, pool, kernel, problem, dtype,
+                       hw: HardwareModel) -> Optional[PlanResolution]:
+        ranked = []
+        for e in pool:
+            if e.hardware != hw.name:
+                continue
+            dist = _shape_distance(e.problem_dict, problem)
+            if dist is not None:
+                ranked.append((dist, e.key, e))
+        for dist, _, e in sorted(ranked):
+            # Walk the donor's curve best-first until a tile fits the target.
+            for dims, _score in ((tuple(e.tile.dims), e.score_s), *e.curve):
+                tile = _fit_tile(TileShape(tuple(dims)), kernel, problem,
+                                 dtype, hw)
+                if tile is None:
+                    continue
+                score = _rescore(kernel, tile, problem, dtype, hw)
+                if math.isfinite(score):
+                    log.info(
+                        "plan %s/%s: nearest-shape hit from %s (distance %.2f)",
+                        kernel, hw.name, problem_key(e.problem_dict), dist,
+                    )
+                    return PlanResolution(tile, "nearest_shape", e, score,
+                                          distance=dist)
+        return None
+
+    def _transfer(self, pool, kernel, problem, dtype, hw: HardwareModel,
+                  transfer_candidates: int) -> Optional[PlanResolution]:
+        pk = problem_key(problem)
+        donors = [e for e in pool if e.hardware != hw.name]
+        exact_problem = [e for e in donors
+                         if problem_key(e.problem_dict) == pk]
+        if exact_problem:
+            ranked = [(0.0, e.key, e) for e in exact_problem]
+        else:
+            ranked = []
+            for e in donors:
+                dist = _shape_distance(e.problem_dict, problem)
+                if dist is not None:
+                    ranked.append((dist, e.key, e))
+        ranked.sort()
+        min_dist = ranked[0][0] if ranked else 0.0
+        best: Optional[Tuple[float, TileShape, PlanEntry, float]] = None
+        for dist, _, e in ranked:
+            if best is not None and dist > min_dist:
+                # All equally-near donors have been scored; don't dilute the
+                # re-rank with farther-away problem shapes.
+                break
+            # Re-rank the donor's top candidates with the TARGET's cost
+            # model — the donor's ordering is exactly what the paper shows
+            # cannot be trusted across models.
+            candidates = ((tuple(e.tile.dims), e.score_s),
+                          *e.curve[:transfer_candidates])
+            for dims, _score in candidates:
+                tile = _fit_tile(TileShape(tuple(dims)), kernel, problem,
+                                 dtype, hw)
+                if tile is None:
+                    continue
+                score = _rescore(kernel, tile, problem, dtype, hw)
+                if math.isfinite(score) and (best is None or score < best[0]):
+                    best = (score, tile, e, dist)
+        if best is None:
+            return None
+        score, tile, entry, dist = best
+        msg = (
+            f"tile plan for {kernel} ({problem_key(problem)}, {dtype}) "
+            f"transferred from {entry.hardware} to {hw.name}: tile {tile} "
+            f"re-ranked with the {hw.name} cost model. Per-model optima are "
+            f"not portable (paper Fig. 3) — re-tune on {hw.name} to remove "
+            f"this warning."
+        )
+        warnings.warn(PlanTransferWarning(msg), stacklevel=3)
+        log.warning("%s", msg)
+        return PlanResolution(tile, "cross_hardware", entry, score,
+                              distance=dist, donor_hardware=entry.hardware)
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> dict:
+        return {
+            "schema_version": PLAN_SCHEMA_VERSION,
+            "meta": self.meta,
+            "entries": [e.to_dict() for e in self._entries.values()],
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "TilePlan":
+        if not isinstance(d, Mapping):
+            raise PlanSchemaError(f"plan artifact must be an object, got "
+                                  f"{type(d).__name__}")
+        version = d.get("schema_version")
+        if version != PLAN_SCHEMA_VERSION:
+            raise PlanSchemaError(
+                f"plan schema version {version!r} unsupported "
+                f"(expected {PLAN_SCHEMA_VERSION}); recompile with "
+                f"repro.launch.compile_plans"
+            )
+        entries = d.get("entries")
+        if not isinstance(entries, list):
+            raise PlanSchemaError("plan artifact missing 'entries' list")
+        return cls(entries=[PlanEntry.from_dict(e) for e in entries],
+                   meta=d.get("meta") or {})
+
+    def save(self, path: str) -> None:
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.to_dict(), f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: str) -> "TilePlan":
+        """Load and validate; raises PlanError on any problem."""
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except OSError as e:
+            raise PlanError(f"cannot read plan artifact {path}: {e}") from e
+        except json.JSONDecodeError as e:
+            raise PlanSchemaError(
+                f"plan artifact {path} is not valid JSON: {e}") from e
+        return cls.from_dict(data)
+
+    @classmethod
+    def load_or_none(cls, path: Optional[str]) -> Optional["TilePlan"]:
+        """Corrupt-file-tolerant load: log and return None instead of raising."""
+        if not path:
+            return None
+        try:
+            return cls.load(path)
+        except PlanError as e:
+            log.warning("ignoring unusable tile-plan artifact %s: %s", path, e)
+            return None
+
+
+# ---------------------------------------------------------------------------
+# Compilation (the ahead-of-time sweep).
+# ---------------------------------------------------------------------------
+
+# (kernel, problem, dtype, hardware) — one cell to compile.
+PlanJob = Tuple[str, Mapping[str, int], str, HardwareModel]
+
+
+def compile_entry(
+    kernel: str,
+    problem: Mapping[str, int],
+    dtype: str,
+    hw: HardwareModel,
+    autotuner=None,
+    max_candidates: int = 256,
+    curve_cap: Optional[int] = None,
+) -> PlanEntry:
+    """Sweep one cell and package the result as a :class:`PlanEntry`."""
+    if autotuner is None:
+        from repro.core.autotuner import Autotuner
+        autotuner = Autotuner()
+    result = autotuner.sweep(kernel, problem, dtype, hw,
+                             max_candidates=max_candidates)
+    best = result.best
+    if not math.isfinite(best.score):
+        raise ValueError(
+            f"no feasible tile for {kernel} {problem_key(problem)} on {hw.name}"
+        )
+    curve = sorted(
+        ((tuple(e.tile.dims), e.score) for e in result.entries
+         if math.isfinite(e.score)),
+        key=lambda p: p[1],
+    )
+    if curve_cap is not None:
+        curve = curve[:curve_cap]
+    return PlanEntry(
+        kernel=kernel,
+        hardware=hw.name,
+        dtype=dtype,
+        problem=tuple(sorted(dict(problem).items())),
+        tile=best.tile,
+        score_s=best.score,
+        dominant=best.cost.dominant(),
+        sensitivity=result.sensitivity(),
+        curve=tuple(curve),
+    )
+
+
+def compile_plan(
+    jobs: Iterable[PlanJob],
+    autotuner=None,
+    max_candidates: int = 256,
+    curve_cap: Optional[int] = None,
+    meta: Optional[Mapping] = None,
+) -> TilePlan:
+    """Compile every job into a :class:`TilePlan`.
+
+    Infeasible cells (e.g. a TPU kernel paired with a GPU descriptor that
+    cannot model it) are skipped with a log line rather than aborting the
+    whole compile.
+    """
+    plan = TilePlan(meta=meta)
+    skipped = 0
+    for kernel, problem, dtype, hw in jobs:
+        try:
+            entry = compile_entry(kernel, problem, dtype, hw,
+                                  autotuner=autotuner,
+                                  max_candidates=max_candidates,
+                                  curve_cap=curve_cap)
+        except (ValueError, KeyError) as e:
+            skipped += 1
+            log.info("plan compile: skipping %s on %s: %s", kernel, hw.name, e)
+            continue
+        plan.add(entry)
+    plan.meta["kernels"] = plan.kernels()
+    plan.meta["hardware"] = plan.hardware_names()
+    plan.meta["skipped_jobs"] = skipped
+    return plan

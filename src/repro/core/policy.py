@@ -10,6 +10,14 @@ Three modes, all grounded in the paper:
 * ``robust``     — the paper's §V recommendation: pick the tile minimizing
   the *worst-case* cost across a fleet of hardware models ("consider more
   about the performance on the worst-case GPU").
+
+With ``plans`` attached (a compiled :class:`~repro.core.plans.TilePlan`):
+``heuristic`` consults the plan before falling back to the default tile;
+``tuned`` delegates to the autotuner, whose resolution order is already
+cache -> plan -> sweep (an exact, possibly hardware-measured cache entry
+must outrank an approximate plan resolution); ``robust`` ignores plans —
+its contract is the fleet-wide worst-case minimum, which no
+single-hardware plan entry can honor.
 """
 from __future__ import annotations
 
@@ -20,6 +28,7 @@ from repro.core import registry
 from repro.core.autotuner import Autotuner
 from repro.core.cost_model import estimate
 from repro.core.hardware import PRODUCTION_TARGET, HardwareModel
+from repro.core.plans import TilePlan
 from repro.core.tiling import TileShape, enumerate_tiles
 
 
@@ -29,12 +38,16 @@ class TilingPolicy:
     hardware: HardwareModel = PRODUCTION_TARGET
     fleet: Sequence[HardwareModel] = ()      # for robust mode
     autotuner: Optional[Autotuner] = None
+    plans: Optional[TilePlan] = None         # compiled AOT plans, tried first
 
     def __post_init__(self):
         if self.mode not in ("heuristic", "tuned", "robust"):
             raise ValueError(f"unknown policy mode {self.mode!r}")
-        if self.mode == "tuned" and self.autotuner is None:
-            self.autotuner = Autotuner()
+        if self.mode == "tuned":
+            if self.autotuner is None:
+                self.autotuner = Autotuner(plans=self.plans)
+            elif self.autotuner.plans is None:
+                self.autotuner.plans = self.plans
         if self.mode == "robust" and not self.fleet:
             raise ValueError("robust mode requires a hardware fleet")
 
@@ -43,9 +56,19 @@ class TilingPolicy:
     ) -> TileShape:
         spec = registry.get(kernel)
         if self.mode == "heuristic":
+            if self.plans is not None:
+                res = self.plans.resolve(kernel, problem, dtype,
+                                         self.hardware)
+                if res is not None:
+                    return res.tile
             return spec.default_tile(problem, dtype)
         if self.mode == "tuned":
+            # The autotuner already resolves cache -> plan -> sweep; going
+            # through it keeps an exact (possibly measured) cache entry from
+            # being shadowed by an approximate plan resolution.
             return self.autotuner.best_tile(kernel, problem, dtype, self.hardware)
+        # Robust mode ignores plans: a single-hardware plan entry (or a
+        # transfer) would silently replace the fleet worst-case minimum.
         return self._robust_tile(spec, problem, dtype)
 
     def _robust_tile(self, spec, problem, dtype) -> TileShape:

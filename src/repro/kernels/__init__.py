@@ -1,3 +1,17 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+
+def register_all() -> None:
+    """Import every kernel's ops module so its KernelSpec is registered.
+
+    Plan resolution and compilation look kernels up in the registry; callers
+    that reach it without importing the ops modules (serve engine, trainer,
+    the compile-plans CLI) call this first. Idempotent.
+    """
+    import repro.kernels.bilinear.ops  # noqa: F401
+    import repro.kernels.flash_attention.ops  # noqa: F401
+    import repro.kernels.matmul.ops  # noqa: F401
+    import repro.kernels.rglru.ops  # noqa: F401
+    import repro.kernels.ssd.ops  # noqa: F401

@@ -1,0 +1,124 @@
+"""Compile the ahead-of-time tile-plan artifact for a hardware fleet.
+
+Sweeps every registered kernel across the requested hardware models and the
+problem families derived from the assigned shape set
+(``repro.configs.shapes.SHAPES``) for each architecture, plus the paper's
+bilinear scale family, and writes one schema-versioned JSON artifact:
+
+    PYTHONPATH=src python -m repro.launch.compile_plans --out plans.json
+
+Serving (``ServeEngine(plans=...)``), training
+(``TrainerConfig.tile_plans=...``) and ``TilingPolicy(plans=...)`` then
+resolve tiles from the artifact — exact hit, nearest shape, or
+cross-hardware transfer — without ever sweeping on a hot path.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro import configs, kernels
+from repro.configs import shapes as shape_families
+from repro.core import HARDWARE_REGISTRY, Autotuner
+from repro.core.plans import PLAN_SCHEMA_VERSION, PlanJob, compile_plan
+from repro.launch.specs import cell_problems
+
+# Kernels modelled only for one hardware family: everything defaults to the
+# TPU estimator; the paper's CUDA gather kernel only makes sense on the
+# paper's GPU descriptors.
+KERNEL_FAMILIES: Dict[str, Tuple[str, ...]] = {
+    "bilinear_cuda": ("gpu",),
+}
+DEFAULT_FAMILIES: Tuple[str, ...] = ("tpu",)
+
+# Representative arch coverage: dense attention, hybrid attention+RG-LRU,
+# and pure SSD — together they exercise every registered model kernel.
+DEFAULT_ARCHS = ("qwen2-1.5b", "recurrentgemma-9b", "mamba2-2.7b")
+
+# The paper's Fig. 3 sweep family (image kernels are shape-family-independent).
+BILINEAR_PROBLEMS = [dict(src_h=800, src_w=800, scale=s) for s in (2, 4, 6, 8, 10)]
+
+
+def kernel_dtypes(kernel: str, dtypes: Sequence[str]) -> Tuple[str, ...]:
+    """The dtypes to compile one kernel's cells for.
+
+    Image kernels run float32 only; model kernels sweep the requested list.
+    dtype is part of the plan key — every artifact producer must use this
+    policy or its entries are unreachable at lookup time.
+    """
+    return ("float32",) if kernel.startswith("bilinear") else tuple(dtypes)
+
+
+def build_jobs(arch_names: Sequence[str], hw_names: Sequence[str],
+               dtypes: Sequence[str]) -> List[PlanJob]:
+    """Problem families (archs x shapes + paper bilinear) x hardware fleet."""
+    kernels.register_all()
+    hardware = [HARDWARE_REGISTRY[h] for h in hw_names]
+
+    # Gather deduped (kernel, problem) cells from the shape families.
+    cells: Dict[Tuple[str, Tuple[Tuple[str, int], ...]], Dict[str, int]] = {}
+    for arch in arch_names:
+        cfg = configs.get_arch(arch)
+        for shape in shape_families.SHAPES:
+            ok, _ = shape_families.applicable(cfg, shape)
+            if not ok:
+                continue
+            for kernel, problem in cell_problems(cfg, shape).items():
+                cells[(kernel, tuple(sorted(problem.items())))] = problem
+    model_cells = [(k, p) for (k, _), p in cells.items()]
+    image_cells = ([("bilinear", p) for p in BILINEAR_PROBLEMS]
+                   + [("bilinear_cuda", p) for p in BILINEAR_PROBLEMS])
+
+    jobs: List[PlanJob] = []
+    for kernel, problem in model_cells + image_cells:
+        families = KERNEL_FAMILIES.get(kernel, DEFAULT_FAMILIES)
+        for hw in hardware:
+            if hw.family not in families:
+                continue
+            for dtype in kernel_dtypes(kernel, dtypes):
+                jobs.append((kernel, problem, dtype, hw))
+    return jobs
+
+
+def main(argv: Optional[Sequence[str]] = None) -> str:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="plans.json",
+                    help="artifact path (JSON)")
+    ap.add_argument("--hardware", nargs="*",
+                    default=sorted(HARDWARE_REGISTRY),
+                    choices=sorted(HARDWARE_REGISTRY))
+    ap.add_argument("--archs", nargs="*", default=list(DEFAULT_ARCHS),
+                    choices=configs.list_archs())
+    # Both serving dtypes by default: dtype is part of the plan key (it
+    # changes sublane alignment and VMEM budgets), so a fleet artifact must
+    # cover what engines actually run.
+    ap.add_argument("--dtypes", nargs="*", default=["bfloat16", "float32"])
+    ap.add_argument("--max-candidates", type=int, default=256,
+                    help="sweep candidates per cell (bounds the curve size)")
+    ap.add_argument("--curve-cap", type=int, default=0,
+                    help="keep only the top-N curve points (0 = full curve)")
+    args = ap.parse_args(argv)
+
+    jobs = build_jobs(args.archs, args.hardware, args.dtypes)
+    plan = compile_plan(
+        jobs,
+        autotuner=Autotuner(),
+        max_candidates=args.max_candidates,
+        curve_cap=args.curve_cap or None,
+        meta={
+            "generated_by": "repro.launch.compile_plans",
+            "archs": list(args.archs),
+            "dtypes": list(args.dtypes),
+        },
+    )
+    plan.save(args.out)
+    print(f"schema v{PLAN_SCHEMA_VERSION}: {len(plan)} entries "
+          f"({len(jobs)} jobs, {plan.meta['skipped_jobs']} infeasible) "
+          f"-> {args.out}")
+    print(f"kernels:  {', '.join(plan.kernels())}")
+    print(f"hardware: {', '.join(plan.hardware_names())}")
+    return args.out
+
+
+if __name__ == "__main__":
+    main()

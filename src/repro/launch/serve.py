@@ -1,16 +1,23 @@
 """Serving launcher: batched request demo on the reduced config.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --requests 6
+
+``--tile-plans plans.json`` resolves decode-path kernel tiles from a
+compiled AOT artifact (see ``repro.launch.compile_plans``) instead of
+tuning lazily; a corrupt/missing artifact degrades to heuristics.
 """
 from __future__ import annotations
 
 import argparse
+import logging
 import time
 
 import jax
 import numpy as np
 
 from repro import configs
+from repro.core import HARDWARE_REGISTRY, PRODUCTION_TARGET
+from repro.core.plans import TilePlan
 from repro.models import api
 from repro.serve.engine import ServeEngine
 
@@ -23,11 +30,19 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--tile-plans", default=None,
+                    help="compiled TilePlan artifact (JSON)")
+    ap.add_argument("--hardware", default=PRODUCTION_TARGET.name,
+                    choices=sorted(HARDWARE_REGISTRY))
     args = ap.parse_args()
 
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
     cfg = configs.get_smoke(args.arch)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
-    engine = ServeEngine(cfg, params, max_len=args.max_len, slots=args.slots)
+    engine = ServeEngine(cfg, params, max_len=args.max_len, slots=args.slots,
+                         plans=TilePlan.load_or_none(args.tile_plans),
+                         hardware=HARDWARE_REGISTRY[args.hardware])
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()

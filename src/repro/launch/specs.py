@@ -3,6 +3,10 @@
 ``input_specs(cfg, shape)`` returns the abstract batch for a (arch x shape)
 cell; ``state_specs`` builds the abstract params / optimizer / serve-state
 trees via jax.eval_shape. The dry-run lowers against these.
+
+``kernel_problems(cfg, batch, seq_len, kind)`` is the tile-plan counterpart:
+it maps the same cell onto the tunable-kernel problem dicts the AOT plan
+compiler sweeps and the serve/train hot paths resolve against.
 """
 from __future__ import annotations
 
@@ -17,6 +21,89 @@ from repro.models import api
 from repro.optim import adamw
 
 SDS = jax.ShapeDtypeStruct
+
+# Cap the token dim fed to the matmul tuning problem; beyond this the
+# optimum is insensitive to m (compute-bound steady state).
+MAX_PLAN_TOKENS = 65536
+
+
+def kernel_problems(cfg: ArchConfig, batch: int, seq_len: int,
+                    kind: str) -> Dict[str, Dict[str, int]]:
+    """Per-kernel tile-tuning problems for one (config, geometry) cell.
+
+    ``kind``: "train" | "prefill" (full-sequence) or "decode" (one token per
+    sequence against a KV cache of ``seq_len``). Pure config arithmetic — no
+    jax, no sweeps — so hot paths can call it at init time.
+    """
+    decode = kind == "decode"
+    tokens = batch if decode else min(batch * seq_len, MAX_PLAN_TOKENS)
+    problems: Dict[str, Dict[str, int]] = {
+        # The FF projection GEMM dominates per-layer step time.
+        "matmul": dict(m=tokens, k=cfg.d_model, n=cfg.d_ff or cfg.d_model),
+    }
+    mixers = {spec.mixer for spec in cfg.layers()}
+    if mixers & {"attn", "local_attn"}:
+        # Hybrids (attn + local_attn) tune for the global-attention workload:
+        # it dominates cost, and a window-limited problem would mischaracterize
+        # the full-attention layers (per-layer plans are a ROADMAP item).
+        window = cfg.attn_window if "attn" not in mixers else 0
+        problems["flash_attention"] = dict(
+            sq=1 if decode else seq_len,
+            skv=seq_len,
+            d=cfg.head_dim_,
+            hq=max(cfg.n_heads, 1),
+            hkv=max(cfg.n_kv_heads, 1),
+            window=window,
+        )
+    if "rglru" in mixers and cfg.recurrent is not None:
+        problems["rglru"] = dict(
+            s=1 if decode else seq_len,
+            f=cfg.recurrent.lru_width or cfg.d_model,
+        )
+    if "ssd" in mixers and cfg.ssm is not None:
+        problems["ssd"] = dict(
+            s=1 if decode else seq_len,
+            h=cfg.ssm.n_heads(cfg.d_model),
+            p=cfg.ssm.head_dim,
+            n=cfg.ssm.d_state,
+        )
+    return problems
+
+
+def cell_problems(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Dict[str, int]]:
+    """``kernel_problems`` for one of the assigned (arch x shape) cells."""
+    return kernel_problems(cfg, shape.global_batch, shape.seq_len, shape.kind)
+
+
+def resolve_model_tiles(plans, cfg: ArchConfig, batch: int, seq_len: int,
+                        kind: str, dtype: str, hardware):
+    """Resolve every kernel tile for one model geometry from an AOT plan.
+
+    Shared by ServeEngine and Trainer construction. Never sweeps: cells the
+    plan cannot resolve fall back to the kernel's zero-cost heuristic
+    default. Returns ``(tiles, resolutions)`` — kernel name -> TileShape,
+    and kernel name -> PlanResolution for the cells the plan satisfied.
+    """
+    import logging
+
+    from repro import kernels as kernel_pkg
+    from repro.core import registry
+
+    log = logging.getLogger("repro.plans")
+    kernel_pkg.register_all()
+    tiles, resolutions = {}, {}
+    for kernel, problem in kernel_problems(cfg, batch, seq_len, kind).items():
+        res = plans.resolve(kernel, problem, dtype, hardware)
+        if res is None:
+            tiles[kernel] = registry.get(kernel).default_tile(problem, dtype)
+            log.warning("no tile plan for %s on %s; using heuristic "
+                        "default %s", kernel, hardware.name, tiles[kernel])
+        else:
+            tiles[kernel] = res.tile
+            resolutions[kernel] = res
+            log.info("tile plan %s on %s: %s (%s)", kernel, hardware.name,
+                     res.tile, res.source)
+    return tiles, resolutions
 
 
 def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:

@@ -37,6 +37,12 @@ def main():
     ap.add_argument("--peak-lr", type=float, default=1e-3)
     ap.add_argument("--fail-at", type=int, default=None,
                     help="inject a failure at this step (FT demo)")
+    ap.add_argument("--tile-plans", default=None,
+                    help="compiled TilePlan artifact (JSON); corrupt/missing "
+                         "degrades to heuristic tiles")
+    ap.add_argument("--hardware", default="",
+                    help="hardware model to resolve tiles for "
+                         "(default: production target)")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO,
@@ -49,6 +55,7 @@ def main():
         steps=args.steps, checkpoint_every=args.checkpoint_every,
         checkpoint_dir=args.checkpoint_dir, peak_lr=args.peak_lr,
         microbatches=args.microbatches, log_every=10,
+        tile_plans=args.tile_plans, hardware=args.hardware,
     )
     trainer = Trainer(cfg, data_cfg, tcfg,
                       opt_cfg=adamw.AdamWConfig(weight_decay=0.01))

@@ -5,6 +5,13 @@ per request (left-padded into the shared cache), decode advances all active
 slots in one jitted step. Greedy sampling. This is the serving analogue of
 the train loop — the decode step is the unit the decode_* dry-run shapes
 lower.
+
+Tile selection: pass a compiled :class:`~repro.core.plans.TilePlan` (and the
+target :class:`~repro.core.HardwareModel`) and the engine resolves every
+decode-path kernel tile at construction time — exact hit, nearest shape, or
+cross-hardware transfer — without ever invoking an autotuner sweep on the
+request path. Cells the plan cannot resolve fall back to the zero-cost
+heuristic default tile, never to a sweep.
 """
 from __future__ import annotations
 
@@ -16,6 +23,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.hardware import PRODUCTION_TARGET, HardwareModel
+from repro.core.plans import PlanResolution, TilePlan
+from repro.core.tiling import TileShape
 from repro.models import api
 
 
@@ -30,12 +40,21 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, max_len: int = 512,
-                 slots: int = 4, dtype=jnp.float32):
+                 slots: int = 4, dtype=jnp.float32,
+                 plans: Optional[TilePlan] = None,
+                 hardware: Optional[HardwareModel] = None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.slots = slots
         self.dtype = dtype
+        self.hardware = hardware or PRODUCTION_TARGET
+        # kernel name -> resolved tile for the decode path; populated from
+        # the AOT plan at init so serving never pays a sweep.
+        self.tiles: Dict[str, TileShape] = {}
+        self.tile_resolutions: Dict[str, PlanResolution] = {}
+        if plans is not None:
+            self._resolve_tiles(plans)
         self._active: List[Optional[Request]] = [None] * slots
         self._queue: List[Request] = []
         self._finished: List[Request] = []
@@ -52,6 +71,14 @@ class ServeEngine:
                 p, cfg, batch, max_len=max_len, dtype=dtype,
                 ring_local=bool(cfg.attn_window))
         )
+
+    def _resolve_tiles(self, plans: TilePlan) -> None:
+        """Resolve decode-path kernel tiles from the plan store. No sweeps."""
+        from repro.launch.specs import resolve_model_tiles
+
+        self.tiles, self.tile_resolutions = resolve_model_tiles(
+            plans, self.cfg, self.slots, self.max_len, "decode",
+            jnp.dtype(self.dtype).name, self.hardware)
 
     def add_request(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
         rid = self._next_rid

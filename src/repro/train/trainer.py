@@ -7,6 +7,12 @@ after a failure (simulated or real), track health/straggler stats, and log.
 The loop is deliberately restart-oriented: all state lives in
 (params, opt_state, data_step), all of which round-trips through the
 CheckpointManager — a process can die at any step and resume.
+
+Tile selection: ``TrainerConfig.tile_plans`` names a compiled
+:class:`~repro.core.plans.TilePlan` artifact (or pass the object as
+``plans=``). The trainer resolves every train-step kernel tile from it at
+construction time — a corrupt or missing artifact degrades to the heuristic
+default, and no code path on the step loop ever invokes a sweep.
 """
 from __future__ import annotations
 
@@ -21,6 +27,10 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import ArchConfig
+from repro.core.hardware import PRODUCTION_TARGET
+from repro.core.hardware import get as get_hardware
+from repro.core.plans import PlanResolution, TilePlan
+from repro.core.tiling import TileShape
 from repro.data.pipeline import DataConfig, make_batch
 from repro.distributed import sharding_rules as rules
 from repro.distributed.fault_tolerance import HealthMonitor, StepTimer
@@ -44,12 +54,18 @@ class TrainerConfig:
     seed: int = 0
     param_dtype: Any = jnp.float32
     log_every: int = 10
+    # AOT tile plans: path to a compiled artifact + the hardware to resolve
+    # for ("" = the production target). Corrupt/missing artifacts are
+    # tolerated (heuristic fallback), never swept around.
+    tile_plans: Optional[str] = None
+    hardware: str = ""
 
 
 class Trainer:
     def __init__(self, cfg: ArchConfig, data_cfg: DataConfig,
                  tcfg: TrainerConfig, mesh=None,
-                 opt_cfg: Optional[adamw.AdamWConfig] = None):
+                 opt_cfg: Optional[adamw.AdamWConfig] = None,
+                 plans: Optional[TilePlan] = None):
         self.cfg = cfg
         self.data_cfg = data_cfg
         self.tcfg = tcfg
@@ -58,6 +74,14 @@ class Trainer:
         self.ctx = rules.make_context(mesh) if mesh is not None else None
         self.monitor = HealthMonitor()
         self.ckpt = CheckpointManager(tcfg.checkpoint_dir, keep=tcfg.keep)
+        self.hardware = (get_hardware(tcfg.hardware) if tcfg.hardware
+                         else PRODUCTION_TARGET)
+        self.tiles: Dict[str, TileShape] = {}
+        self.tile_resolutions: Dict[str, PlanResolution] = {}
+        if plans is None:
+            plans = TilePlan.load_or_none(tcfg.tile_plans)
+        if plans is not None:
+            self._resolve_tiles(plans)
 
         lr_fn = lambda step: warmup_cosine(
             step, peak_lr=tcfg.peak_lr, warmup_steps=tcfg.warmup_steps,
@@ -66,6 +90,16 @@ class Trainer:
             cfg, self.ctx, self.opt_cfg, lr_fn,
             microbatches=tcfg.microbatches)
         self._step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    def _resolve_tiles(self, plans: TilePlan) -> None:
+        """Resolve train-step kernel tiles from the plan store. No sweeps."""
+        from repro.launch.specs import resolve_model_tiles
+
+        # The jitted step consumes per-host batches (data/pipeline.py), so
+        # tune for host_batch, not global_batch.
+        self.tiles, self.tile_resolutions = resolve_model_tiles(
+            plans, self.cfg, self.data_cfg.host_batch, self.data_cfg.seq_len,
+            "train", jnp.dtype(self.tcfg.param_dtype).name, self.hardware)
 
     # -- state --------------------------------------------------------------
     def init_state(self):

@@ -10,6 +10,9 @@ from repro import configs
 from repro.models import api
 from repro.models import transformer as T
 
+# Full per-arch smoke sweep takes >1 min on CPU; CI fast lane skips it.
+pytestmark = pytest.mark.slow
+
 ARCHS = configs.list_archs()
 
 

@@ -10,6 +10,9 @@ import pytest
 
 from repro.configs.base import ArchConfig, LayerSpec, MoEConfig
 from repro.models.moe import _capacity, moe_apply_local, moe_defs, moe_forward
+
+# Dense-reference MoE comparisons are CPU-heavy; CI fast lane skips them.
+pytestmark = pytest.mark.slow
 from repro.models.layers import init_tree
 
 

@@ -3,7 +3,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the hypothesis dev dependency "
+           "(pip install -e '.[dev]')",
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import repro.kernels.bilinear.ops  # noqa: F401
 import repro.kernels.matmul.ops  # noqa: F401

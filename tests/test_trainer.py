@@ -11,6 +11,9 @@ from repro.distributed.fault_tolerance import HealthMonitor
 from repro.optim import adamw
 from repro.train.trainer import Trainer, TrainerConfig
 
+# End-to-end training loops; CI fast lane skips them.
+pytestmark = pytest.mark.slow
+
 
 def _trainer(tmp_path, steps=30, fail_at=None, arch="qwen2-1.5b", **kw):
     cfg = configs.get_smoke(arch)
