@@ -217,6 +217,17 @@ def _rescore(kernel: str, tile: TileShape, problem: Mapping[str, int],
         return math.inf
 
 
+def score_tile(kernel: str, tile: TileShape, problem: Mapping[str, int],
+               dtype: str, hw: HardwareModel) -> float:
+    """Public cost-model score of one tile on one hardware model (seconds).
+
+    Used by consumers that need a comparable score for cells the plan could
+    not resolve (e.g. the fleet router pricing a heuristic-default tile);
+    returns +inf when the kernel is unknown or the tile is illegal.
+    """
+    return _rescore(kernel, tile, problem, dtype, hw)
+
+
 # ---------------------------------------------------------------------------
 # The portable plan artifact.
 # ---------------------------------------------------------------------------
@@ -440,13 +451,20 @@ def compile_entry(
     autotuner=None,
     max_candidates: int = 256,
     curve_cap: Optional[int] = None,
+    measure_fn=None,
 ) -> PlanEntry:
-    """Sweep one cell and package the result as a :class:`PlanEntry`."""
+    """Sweep one cell and package the result as a :class:`PlanEntry`.
+
+    ``measure_fn`` (tile -> seconds, see ``launch.measure``) adds wall-clock
+    timing of the analytically-best candidates; measured scores outrank
+    analytic ones in the sweep's ``best`` selection.
+    """
     if autotuner is None:
         from repro.core.autotuner import Autotuner
         autotuner = Autotuner()
     result = autotuner.sweep(kernel, problem, dtype, hw,
-                             max_candidates=max_candidates)
+                             max_candidates=max_candidates,
+                             measure_fn=measure_fn)
     best = result.best
     if not math.isfinite(best.score):
         raise ValueError(
@@ -478,21 +496,29 @@ def compile_plan(
     max_candidates: int = 256,
     curve_cap: Optional[int] = None,
     meta: Optional[Mapping] = None,
+    measure_fn_factory=None,
 ) -> TilePlan:
     """Compile every job into a :class:`TilePlan`.
 
     Infeasible cells (e.g. a TPU kernel paired with a GPU descriptor that
     cannot model it) are skipped with a log line rather than aborting the
-    whole compile.
+    whole compile. ``measure_fn_factory(kernel, problem, dtype, hw)`` may
+    return a wall-clock MeasureFn per cell (or None for analytic) — see
+    ``launch.measure.make_measure_fn``.
     """
     plan = TilePlan(meta=meta)
     skipped = 0
+    measured = 0
     for kernel, problem, dtype, hw in jobs:
+        measure_fn = (measure_fn_factory(kernel, problem, dtype, hw)
+                      if measure_fn_factory is not None else None)
+        measured += measure_fn is not None
         try:
             entry = compile_entry(kernel, problem, dtype, hw,
                                   autotuner=autotuner,
                                   max_candidates=max_candidates,
-                                  curve_cap=curve_cap)
+                                  curve_cap=curve_cap,
+                                  measure_fn=measure_fn)
         except (ValueError, KeyError) as e:
             skipped += 1
             log.info("plan compile: skipping %s on %s: %s", kernel, hw.name, e)
@@ -501,4 +527,6 @@ def compile_plan(
     plan.meta["kernels"] = plan.kernels()
     plan.meta["hardware"] = plan.hardware_names()
     plan.meta["skipped_jobs"] = skipped
+    if measure_fn_factory is not None:
+        plan.meta["measured_jobs"] = measured
     return plan

@@ -2,10 +2,22 @@
 
 Sweeps every registered kernel across the requested hardware models and the
 problem families derived from the assigned shape set
-(``repro.configs.shapes.SHAPES``) for each architecture, plus the paper's
-bilinear scale family, and writes one schema-versioned JSON artifact:
+(``repro.configs.shapes.SHAPES``) for each architecture (``--all-archs``
+covers the full roofline table), plus the paper's bilinear scale family,
+and writes one schema-versioned JSON artifact:
 
     PYTHONPATH=src python -m repro.launch.compile_plans --out plans.json
+
+``--serve-buckets 64,128,512`` additionally compiles the serving
+scheduler's shape family — one (batch=1, seq=edge) prefill cell per bucket
+edge plus the slot-batch decode cell — so a
+``ShapeBucketScheduler``-admitted request always lands on an exact plan
+cell (see ``repro.serve.scheduler``).
+
+``--measure wallclock`` times the analytically-best tile candidates on the
+running backend (``launch.measure``) when real TPU hardware is present;
+measured scores outrank analytic ones. Without usable hardware every cell
+silently keeps the analytic cost model.
 
 Serving (``ServeEngine(plans=...)``), training
 (``TrainerConfig.tile_plans=...``) and ``TilingPolicy(plans=...)`` then
@@ -21,7 +33,7 @@ from repro import configs, kernels
 from repro.configs import shapes as shape_families
 from repro.core import HARDWARE_REGISTRY, Autotuner
 from repro.core.plans import PLAN_SCHEMA_VERSION, PlanJob, compile_plan
-from repro.launch.specs import cell_problems
+from repro.launch.specs import cell_problems, kernel_problems
 
 # Kernels modelled only for one hardware family: everything defaults to the
 # TPU estimator; the paper's CUDA gather kernel only makes sense on the
@@ -49,9 +61,34 @@ def kernel_dtypes(kernel: str, dtypes: Sequence[str]) -> Tuple[str, ...]:
     return ("float32",) if kernel.startswith("bilinear") else tuple(dtypes)
 
 
+def serve_bucket_cells(arch_names: Sequence[str], edges: Sequence[int],
+                       slots: int, max_len: int, smoke: bool = False,
+                       ) -> List[Tuple[str, Dict[str, int]]]:
+    """The serving scheduler's shape family as deduped (kernel, problem)
+    cells: a (batch=1, seq=edge) prefill cell per bucket edge plus the
+    engine's (slots, max_len) decode cell, per architecture."""
+    cells: Dict[Tuple[str, Tuple[Tuple[str, int], ...]], Dict[str, int]] = {}
+    get_cfg = configs.get_smoke if smoke else configs.get_arch
+    for arch in arch_names:
+        cfg = get_cfg(arch)
+        for edge in edges:
+            for kernel, problem in kernel_problems(
+                    cfg, 1, edge, "prefill").items():
+                cells[(kernel, tuple(sorted(problem.items())))] = problem
+        for kernel, problem in kernel_problems(
+                cfg, slots, max_len, "decode").items():
+            cells[(kernel, tuple(sorted(problem.items())))] = problem
+    return [(k, p) for (k, _), p in cells.items()]
+
+
 def build_jobs(arch_names: Sequence[str], hw_names: Sequence[str],
-               dtypes: Sequence[str]) -> List[PlanJob]:
-    """Problem families (archs x shapes + paper bilinear) x hardware fleet."""
+               dtypes: Sequence[str],
+               serve_buckets: Sequence[int] = (),
+               serve_slots: int = 4,
+               serve_max_len: int = 0,
+               serve_smoke: bool = False) -> List[PlanJob]:
+    """Problem families (archs x shapes + paper bilinear + serve buckets)
+    x hardware fleet."""
     kernels.register_all()
     hardware = [HARDWARE_REGISTRY[h] for h in hw_names]
 
@@ -66,16 +103,25 @@ def build_jobs(arch_names: Sequence[str], hw_names: Sequence[str],
             for kernel, problem in cell_problems(cfg, shape).items():
                 cells[(kernel, tuple(sorted(problem.items())))] = problem
     model_cells = [(k, p) for (k, _), p in cells.items()]
+    if serve_buckets:
+        model_cells += serve_bucket_cells(
+            arch_names, serve_buckets, serve_slots,
+            serve_max_len or max(serve_buckets), smoke=serve_smoke)
     image_cells = ([("bilinear", p) for p in BILINEAR_PROBLEMS]
                    + [("bilinear_cuda", p) for p in BILINEAR_PROBLEMS])
 
     jobs: List[PlanJob] = []
+    seen = set()
     for kernel, problem in model_cells + image_cells:
         families = KERNEL_FAMILIES.get(kernel, DEFAULT_FAMILIES)
         for hw in hardware:
             if hw.family not in families:
                 continue
             for dtype in kernel_dtypes(kernel, dtypes):
+                job = (kernel, tuple(sorted(problem.items())), dtype, hw.name)
+                if job in seen:
+                    continue
+                seen.add(job)
                 jobs.append((kernel, problem, dtype, hw))
     return jobs
 
@@ -89,6 +135,9 @@ def main(argv: Optional[Sequence[str]] = None) -> str:
                     choices=sorted(HARDWARE_REGISTRY))
     ap.add_argument("--archs", nargs="*", default=list(DEFAULT_ARCHS),
                     choices=configs.list_archs())
+    ap.add_argument("--all-archs", action="store_true",
+                    help="cover every architecture (the full roofline "
+                         "table's cells), not just the representative set")
     # Both serving dtypes by default: dtype is part of the plan key (it
     # changes sublane alignment and VMEM budgets), so a fleet artifact must
     # cover what engines actually run.
@@ -97,18 +146,49 @@ def main(argv: Optional[Sequence[str]] = None) -> str:
                     help="sweep candidates per cell (bounds the curve size)")
     ap.add_argument("--curve-cap", type=int, default=0,
                     help="keep only the top-N curve points (0 = full curve)")
+    ap.add_argument("--serve-buckets", default="",
+                    help="comma list of scheduler bucket edges to compile "
+                         "prefill/decode serving cells for (e.g. 64,128,512)")
+    ap.add_argument("--serve-slots", type=int, default=4,
+                    help="decode slot batch for --serve-buckets cells")
+    ap.add_argument("--serve-max-len", type=int, default=0,
+                    help="decode cache length for --serve-buckets cells "
+                         "(default: largest bucket edge)")
+    ap.add_argument("--serve-smoke", action="store_true",
+                    help="compile serve cells for the reduced smoke configs "
+                         "(what `python -m repro.launch.serve` runs) instead "
+                         "of the full architectures")
+    ap.add_argument("--measure", choices=("analytic", "wallclock"),
+                    default="analytic",
+                    help="wallclock: time top candidates on the running "
+                         "backend when real hardware is present; falls back "
+                         "to the analytic model per cell otherwise")
     args = ap.parse_args(argv)
 
-    jobs = build_jobs(args.archs, args.hardware, args.dtypes)
+    if args.all_archs:
+        args.archs = configs.list_archs()
+    buckets = sorted({int(x) for x in args.serve_buckets.split(",") if x})
+    measure_factory = None
+    if args.measure == "wallclock":
+        from repro.launch.measure import make_measure_fn
+        measure_factory = make_measure_fn
+
+    jobs = build_jobs(args.archs, args.hardware, args.dtypes,
+                      serve_buckets=buckets, serve_slots=args.serve_slots,
+                      serve_max_len=args.serve_max_len,
+                      serve_smoke=args.serve_smoke)
     plan = compile_plan(
         jobs,
         autotuner=Autotuner(),
         max_candidates=args.max_candidates,
         curve_cap=args.curve_cap or None,
+        measure_fn_factory=measure_factory,
         meta={
             "generated_by": "repro.launch.compile_plans",
             "archs": list(args.archs),
             "dtypes": list(args.dtypes),
+            "serve_buckets": buckets,
+            "measure": args.measure,
         },
     )
     plan.save(args.out)

@@ -321,6 +321,36 @@ def run_cell(arch, shape_name, multi_pod, force=False, fsdp=True,
     return res
 
 
+def plan_hit_report(plans, arch: str, shape_name: str,
+                    dtype: str = "bfloat16") -> Dict[str, str]:
+    """kernel -> resolution source for one roofline cell against a plan.
+
+    Pure plan lookups (no lowering): the dry-run's (arch x shape) cell maps
+    to kernel problems via ``specs.cell_problems`` — the same mapping
+    ``compile_plans`` sweeps — so this reports how well the artifact covers
+    the roofline table. Sources: exact | nearest_shape | cross_hardware |
+    fallback (plan had nothing usable).
+    """
+    import warnings
+
+    from repro import kernels as kernel_pkg
+    from repro.core.plans import PlanTransferWarning
+
+    kernel_pkg.register_all()
+    cfg = configs.get_arch(arch)
+    shape = get_shape(shape_name)
+    ok, _ = applicable(cfg, shape)
+    if not ok:
+        return {}
+    sources = {}
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", PlanTransferWarning)
+        for kernel, problem in S.cell_problems(cfg, shape).items():
+            res = plans.resolve(kernel, problem, dtype, PRODUCTION_TARGET)
+            sources[kernel] = res.source if res is not None else "fallback"
+    return sources
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -333,9 +363,18 @@ def main():
     ap.add_argument("--tag", default="")
     ap.add_argument("--opt", default="",
                     help="comma list of OPT_PRESETS (perf hillclimb runs)")
+    ap.add_argument("--tile-plans", default=None,
+                    help="compiled TilePlan artifact; reports per-cell plan "
+                         "hit-rate alongside the roofline results")
+    ap.add_argument("--plan-dtype", default="bfloat16",
+                    help="dtype key for the --tile-plans hit-rate lookups "
+                         "(the dry-run itself lowers bfloat16)")
     args = ap.parse_args()
     if args.opt and not args.tag:
         args.tag = args.opt.replace(",", "+")
+
+    from repro.core.plans import TilePlan
+    plans = TilePlan.load_or_none(args.tile_plans)
 
     meshes = []
     if args.single_pod or not args.multi_pod:
@@ -347,6 +386,7 @@ def main():
     shapes = [s.name for s in SHAPES] if args.all or not args.shape \
         else [args.shape]
 
+    plan_sources: List[str] = []
     for arch in archs:
         for shape_name in shapes:
             for mp in meshes:
@@ -365,7 +405,22 @@ def main():
                     )
                 elif status == "error":
                     line += f"  {res['error'][:120]}"
+                if plans is not None and not mp:
+                    sources = plan_hit_report(plans, arch, shape_name,
+                                              args.plan_dtype)
+                    if sources:
+                        plan_sources.extend(sources.values())
+                        line += "  plan=" + ",".join(
+                            f"{k}:{s}" for k, s in sorted(sources.items()))
                 print(line, flush=True)
+    if plans is not None and plan_sources:
+        hits = sum(s == "exact" for s in plan_sources)
+        print(f"tile-plan hit-rate ({args.plan_dtype}, "
+              f"{PRODUCTION_TARGET.name}): "
+              f"{hits}/{len(plan_sources)} exact "
+              f"({hits / len(plan_sources):.2f}); "
+              f"sources: { {s: plan_sources.count(s) for s in sorted(set(plan_sources))} }",
+              flush=True)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,161 @@
+"""Wall-clock tile measurement for plan compilation (real hardware only).
+
+The paper timed every tile candidate on each GPU; the plan compiler defaults
+to the analytic cost model because CI and laptops have no TPU. This module
+supplies the paper-faithful path when real hardware *is* present:
+``make_measure_fn`` returns a ``MeasureFn`` (tile -> seconds) that runs the
+kernel's jitted Pallas op on synthetic operands with warmup, which the
+autotuner then prefers over analytic scores (``SweepEntry.measured_s``
+outranks ``cost.total_s``).
+
+Gating: measurement requires the running jax backend to be a TPU *and* the
+target hardware descriptor to be TPU-family (we cannot wall-clock a GTX260
+descriptor on a TPU). Anything else returns None and the caller falls back
+to the analytic model — the compile never fails for lack of hardware.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from typing import Callable, Mapping, Optional
+
+import numpy as np
+
+from repro.core.hardware import HardwareModel
+from repro.core.tiling import TileShape
+
+log = logging.getLogger("repro.measure")
+
+MeasureFn = Callable[[TileShape], float]
+
+
+def _np_dtype(dtype: str):
+    import jax.numpy as jnp
+
+    return jnp.dtype(dtype)
+
+
+def _matmul_call(problem: Mapping[str, int], dtype: str):
+    import jax.numpy as jnp
+
+    from repro.kernels.matmul.ops import mm
+
+    rng = np.random.default_rng(0)
+    m, k, n = problem["m"], problem["k"], problem["n"]
+    a = jnp.asarray(rng.standard_normal((m, k)), _np_dtype(dtype))
+    b = jnp.asarray(rng.standard_normal((k, n)), _np_dtype(dtype))
+    return lambda tile: mm(a, b, tile=tuple(tile))
+
+
+def _flash_call(problem: Mapping[str, int], dtype: str):
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_attention.ops import attend
+
+    rng = np.random.default_rng(0)
+    sq, skv, d = problem["sq"], problem["skv"], problem["d"]
+    hq, hkv = problem["hq"], problem["hkv"]
+    window = problem.get("window", 0) or None
+    q = jnp.asarray(rng.standard_normal((1, hq, sq, d)), _np_dtype(dtype))
+    k = jnp.asarray(rng.standard_normal((1, hkv, skv, d)), _np_dtype(dtype))
+    v = jnp.asarray(rng.standard_normal((1, hkv, skv, d)), _np_dtype(dtype))
+    return lambda tile: attend(q, k, v, window=window, tile=tuple(tile))
+
+
+def _ssd_call(problem: Mapping[str, int], dtype: str):
+    import jax.numpy as jnp
+
+    from repro.kernels.ssd.ops import ssd
+
+    rng = np.random.default_rng(0)
+    s, h, p, n = problem["s"], problem["h"], problem["p"], problem["n"]
+    dt = _np_dtype(dtype)
+    x = jnp.asarray(rng.standard_normal((1, s, h, p)), dt)
+    dts = jnp.asarray(rng.uniform(0.01, 0.1, (1, s, h)), dt)
+    A = jnp.asarray(-rng.uniform(0.5, 1.5, (h,)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((1, s, n)), dt)
+    C = jnp.asarray(rng.standard_normal((1, s, n)), dt)
+    return lambda tile: ssd(x, dts, A, Bm, C, chunk=int(tile[0]))
+
+
+def _rglru_call(problem: Mapping[str, int], dtype: str):
+    import jax.numpy as jnp
+
+    from repro.kernels.rglru.ops import rglru
+
+    rng = np.random.default_rng(0)
+    s, f = problem["s"], problem["f"]
+    dt = _np_dtype(dtype)
+    x = jnp.asarray(rng.standard_normal((1, s, f)), dt)
+    r = jnp.asarray(rng.uniform(0.0, 1.0, (1, s, f)), dt)
+    i = jnp.asarray(rng.uniform(0.0, 1.0, (1, s, f)), dt)
+    a = jnp.asarray(rng.standard_normal((f,)), jnp.float32)
+    return lambda tile: rglru(x, r, i, a, tile=tuple(tile))
+
+
+def _bilinear_call(problem: Mapping[str, int], dtype: str):
+    import jax.numpy as jnp
+
+    from repro.kernels.bilinear.ops import upscale
+
+    rng = np.random.default_rng(0)
+    src = jnp.asarray(
+        rng.standard_normal((problem["src_h"], problem["src_w"])),
+        _np_dtype(dtype))
+    return lambda tile: upscale(src, problem["scale"], tile=tuple(tile))
+
+
+_BUILDERS = {
+    "matmul": _matmul_call,
+    "flash_attention": _flash_call,
+    "ssd": _ssd_call,
+    "rglru": _rglru_call,
+    "bilinear": _bilinear_call,
+}
+
+
+def hardware_available(hw: HardwareModel) -> bool:
+    """True when the running backend can execute kernels for ``hw``."""
+    import jax
+
+    try:
+        backend = jax.default_backend()
+    except RuntimeError:
+        return False
+    return backend == "tpu" and hw.family == "tpu"
+
+
+def make_measure_fn(
+    kernel: str,
+    problem: Mapping[str, int],
+    dtype: str,
+    hw: HardwareModel,
+    warmup: int = 2,
+    iters: int = 5,
+) -> Optional[MeasureFn]:
+    """A tile -> wall-clock-seconds hook for one cell, or None.
+
+    None (analytic fallback) when no real TPU backend is present, the target
+    descriptor is not TPU-family, or the kernel has no operand builder.
+    """
+    if not hardware_available(hw):
+        return None
+    builder = _BUILDERS.get(kernel)
+    if builder is None:
+        log.info("no wallclock builder for kernel %r; analytic only", kernel)
+        return None
+    import jax
+
+    call = builder(problem, dtype)
+
+    def measure(tile: TileShape) -> float:
+        for _ in range(warmup):  # first iteration compiles
+            jax.block_until_ready(call(tile))
+        t0 = time.perf_counter()
+        out = None
+        for _ in range(iters):
+            out = call(tile)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / iters
+
+    return measure

@@ -5,10 +5,19 @@
 ``--tile-plans plans.json`` resolves decode-path kernel tiles from a
 compiled AOT artifact (see ``repro.launch.compile_plans``) instead of
 tuning lazily; a corrupt/missing artifact degrades to heuristics.
+
+``--scheduler bucket`` switches admission to the shape-bucketed scheduler
+(``--bucket-policy`` sets the shape family: "64,128,512", "pow2:16:512", or
+"plan" to derive the edges from the loaded artifact). ``--fleet
+tpu_v4,tpu_v5e`` serves through the hardware-aware router instead of a
+single engine — one engine per hardware model, each request placed on the
+cost-model-cheapest instance. Runtime telemetry (per-bucket TTFT/TPOT,
+queue depth, plan hit/transfer/fallback counters) prints at exit.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import logging
 import time
 
@@ -19,7 +28,21 @@ from repro import configs
 from repro.core import HARDWARE_REGISTRY, PRODUCTION_TARGET
 from repro.core.plans import TilePlan
 from repro.models import api
-from repro.serve.engine import ServeEngine
+from repro.serve import BucketPolicy, FleetRouter, ServeEngine, make_scheduler
+
+
+def build_policy(spec: str, plans, hardware_name,
+                 max_queue: int) -> BucketPolicy:
+    """One policy for the whole deployment. ``hardware_name=None`` derives
+    "plan" edges from every hardware's cells (the union) — a fleet must
+    share a single edge set or the router's bucketing and each engine's
+    would diverge."""
+    if spec == "plan":
+        if plans is None:
+            raise SystemExit("--bucket-policy plan requires --tile-plans")
+        return BucketPolicy.from_plan(plans, hardware=hardware_name,
+                                      max_queue=max_queue)
+    return BucketPolicy.parse(spec, max_queue=max_queue)
 
 
 def main():
@@ -34,28 +57,89 @@ def main():
                     help="compiled TilePlan artifact (JSON)")
     ap.add_argument("--hardware", default=PRODUCTION_TARGET.name,
                     choices=sorted(HARDWARE_REGISTRY))
+    ap.add_argument("--scheduler", default="fifo", choices=("fifo", "bucket"),
+                    help="admission policy: naive FIFO or shape-bucketed")
+    ap.add_argument("--bucket-policy", default="pow2:16:128",
+                    help='bucket edges: "64,128", "pow2:lo:hi", or "plan" '
+                         "(derive from the --tile-plans artifact)")
+    ap.add_argument("--max-queue", type=int, default=256,
+                    help="admission bound for the bucketed scheduler")
+    ap.add_argument("--fleet", default="",
+                    help="comma list of hardware models; serve through the "
+                         "fleet router with one engine per model "
+                         "(overrides --hardware)")
+    ap.add_argument("--metrics-json", action="store_true",
+                    help="dump full metrics as JSON instead of the summary")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO,
                         format="%(asctime)s %(name)s %(message)s")
     cfg = configs.get_smoke(args.arch)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
-    engine = ServeEngine(cfg, params, max_len=args.max_len, slots=args.slots,
-                         plans=TilePlan.load_or_none(args.tile_plans),
-                         hardware=HARDWARE_REGISTRY[args.hardware])
+    plans = TilePlan.load_or_none(args.tile_plans)
+
+    fleet_names = [h for h in args.fleet.split(",") if h]
+    policy = None
+    if args.scheduler == "bucket":
+        # Fleet: derive "plan" edges across all hardware (union) so router
+        # and engines share one bucketing; single engine: its own cells.
+        policy = build_policy(
+            args.bucket_policy, plans,
+            None if fleet_names else args.hardware, args.max_queue)
+
+    def make_engine(hw_name: str) -> ServeEngine:
+        return ServeEngine(
+            cfg, params, max_len=args.max_len, slots=args.slots,
+            plans=plans, hardware=HARDWARE_REGISTRY[hw_name],
+            scheduler=make_scheduler(args.scheduler, policy))
+
+    router = None
+    if fleet_names:
+        if args.scheduler != "bucket":
+            raise SystemExit("--fleet requires --scheduler bucket "
+                             "(routing is per shape bucket)")
+        router = FleetRouter({h: make_engine(h) for h in fleet_names}, policy)
+    else:
+        engine = make_engine(args.hardware)
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
+    rejected = 0
     for i in range(args.requests):
         prompt = rng.integers(2, cfg.vocab_size, size=rng.integers(4, 12))
-        engine.add_request(prompt, max_new_tokens=args.new_tokens)
-    done = engine.run_until_done()
+        if router is not None:
+            ok = router.route(prompt, max_new_tokens=args.new_tokens)
+        else:
+            ok = engine.add_request(prompt, max_new_tokens=args.new_tokens)
+        rejected += ok is None
+
+    if router is not None:
+        done_by = router.run_until_done()
+        done = [r for rs in done_by.values() for r in rs]
+        for name, rs in sorted(done_by.items()):
+            for r in rs:
+                print(f"req {r.rid}@{name}: {r.out_tokens}")
+        print("placements:", {str(b): p for b, p in
+                              sorted(router.placements().items())})
+        metrics = router.metrics()
+    else:
+        done = engine.run_until_done()
+        for r in done:
+            print(f"req {r.rid}: {r.out_tokens}")
+        metrics = engine.metrics.as_dict()
+
     dt = time.perf_counter() - t0
     toks = sum(len(r.out_tokens) for r in done)
-    for r in done:
-        print(f"req {r.rid}: {r.out_tokens}")
-    print(f"{len(done)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks / dt:.1f} tok/s)")
+    print(f"{len(done)} requests ({rejected} rejected), {toks} tokens in "
+          f"{dt:.2f}s ({toks / dt:.1f} tok/s)")
+    if args.metrics_json:
+        print(json.dumps(metrics, indent=1, sort_keys=True, default=str))
+    elif router is not None:
+        for name, eng in sorted(router.engines.items()):
+            print(f"--- {name}")
+            print(eng.metrics.render())
+    else:
+        print(engine.metrics.render())
 
 
 if __name__ == "__main__":

@@ -11,15 +11,22 @@ Serve state is an opaque pytree from ``make_serve_state`` consumed by
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.tiling import TileShape
 from repro.models import encdec as E
 from repro.models import transformer as T
 from repro.models.context import DistContext
+
+# Resolved kernel tiles (kernel name -> TileShape), as produced by
+# ``launch.specs.resolve_model_tiles`` from an AOT TilePlan. Threaded from
+# ServeEngine/Trainer through forward() into the attention/FF/SSD call
+# sites, so a resolved plan actually changes the compiled kernels.
+Tiles = Optional[Mapping[str, TileShape]]
 
 
 def is_encdec(cfg: ArchConfig) -> bool:
@@ -45,6 +52,7 @@ def param_logical_axes(cfg: ArchConfig):
 def train_loss(
     params, cfg: ArchConfig, batch: Dict[str, Any],
     ctx: Optional[DistContext] = None, remat: bool = True,
+    tiles: Tiles = None,
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Scalar loss + metrics. Differentiable."""
     targets = batch["targets"]
@@ -58,7 +66,7 @@ def train_loss(
         out = T.forward(
             params, cfg, batch["tokens"], ctx=ctx,
             patch_embeds=batch.get("patch_embeds"), remat=remat,
-            logits_mode="hidden",
+            logits_mode="hidden", tiles=tiles,
         )
         hidden, aux = out.hidden, out.aux_loss
         if is_vlm(cfg):
@@ -90,7 +98,7 @@ def make_serve_state(
 def prefill(
     params, cfg: ArchConfig, batch: Dict[str, Any], max_len: int,
     dtype=jnp.float32, ctx: Optional[DistContext] = None,
-    ring_local: bool = False,
+    ring_local: bool = False, tiles: Tiles = None,
 ):
     """Returns (last-token logits [B, Vpad], serve_state)."""
     if is_encdec(cfg):
@@ -102,19 +110,19 @@ def prefill(
         cfg, batch["tokens"].shape[0], max_len, dtype, ring_local=ring_local)
     out = T.forward(
         params, cfg, batch["tokens"], ctx=ctx, caches=caches,
-        patch_embeds=batch.get("patch_embeds"), remat=False,
+        patch_embeds=batch.get("patch_embeds"), remat=False, tiles=tiles,
     )
     return out.logits[:, -1], out.caches
 
 
 def decode_step(
     params, cfg: ArchConfig, token: jnp.ndarray, state,
-    ctx: Optional[DistContext] = None,
+    ctx: Optional[DistContext] = None, tiles: Tiles = None,
 ):
     """token [B,1] -> (logits [B, Vpad], new state)."""
     if is_encdec(cfg):
         logits, new = E.decode_step(params, cfg, token, state, ctx)
         return logits[:, 0], new
     out = T.forward(params, cfg, token, ctx=ctx, caches=state, decode=True,
-                    remat=False)
+                    remat=False, tiles=tiles)
     return out.logits[:, 0], out.caches

@@ -86,9 +86,20 @@ def attn_forward(
     p, cfg: ArchConfig, x, positions, *,
     window: Optional[int] = None,
     cache: Optional[Dict[str, Any]] = None,
-    impl: str = "reference",
+    impl: str = "auto",
+    tile=None,
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]]]:
-    """Full-sequence attention (train/prefill). Fills ``cache`` if given."""
+    """Full-sequence attention (train/prefill). Fills ``cache`` if given.
+
+    ``tile`` is the plan-resolved (bq, bkv) flash-attention block shape
+    (``TileShape`` or 2-tuple). On the Pallas path it is the kernel's block
+    spec; on the reference path ``bkv`` sets the online-softmax KV chunk, so
+    a resolved plan changes the lowered computation on every backend.
+    ``impl``: "auto" picks the Pallas kernel on TPU backends when a resolved
+    tile legally divides the sequence, and the chunked reference otherwise
+    (Pallas TPU kernels cannot lower to host HLO; without a plan the
+    lowering is unchanged).
+    """
     b, s, _ = x.shape
     q, k, v = _project_qkv(p, cfg, x, positions)
     scale = cfg.query_scale or cfg.head_dim_ ** -0.5
@@ -96,10 +107,18 @@ def attn_forward(
         causal=True, window=window,
         softcap=cfg.attn_softcap or None, scale=scale,
     )
+    t = (min(tile[0], s), min(tile[1], s)) if tile is not None else None
+    if impl == "auto":
+        impl = "pallas" if (flags.pallas_enabled() and t is not None
+                            and s % t[0] == 0 and s % t[1] == 0) \
+            else "reference"
     if impl == "pallas":
-        out = flash_attention(q, k, v, **kwargs)
+        out = flash_attention(q, k, v, tile=t or (512, 512), **kwargs)
     else:
-        chunk = 2048 if flags.ANALYSIS_UNROLL else 512
+        if tile is not None:
+            chunk = int(tile[1])
+        else:
+            chunk = 2048 if flags.ANALYSIS_UNROLL else 512
         out = flash_attention_ref(q, k, v, chunk=min(chunk, s), **kwargs)
     y = _out_proj(p, cfg, out, x.dtype)
     new_cache = None

@@ -52,6 +52,18 @@ def set_perf(attn_bf16=None, remat=None, ssd_chunk=None,
         DECODE_ATTN_SHARDED = bool(decode_sharded)
 
 
+def pallas_enabled() -> bool:
+    """Whether plan-resolved tiles may select Pallas TPU kernels in the
+    model stack. True only on a real TPU backend: the kernels cannot lower
+    to host HLO, so CPU/GPU backends keep the reference lowerings (tiles
+    still parameterize those — e.g. the flash reference's KV chunk)."""
+    import jax
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:
+        return False
+
+
 def remat_policy():
     import jax
     if REMAT_POLICY == "dots":

@@ -182,23 +182,49 @@ def param_logical_axes(cfg: ArchConfig):
 # ---------------------------------------------------------------------------
 
 def _mixer(p, cfg: ArchConfig, spec: LayerSpec, x, positions, cache,
-           decode: bool, ctx=None):
+           decode: bool, ctx=None, tiles=None):
+    tiles = tiles or {}
     if spec.mixer in ("attn", "local_attn"):
         window = cfg.attn_window if spec.mixer == "local_attn" else None
         if decode:
             return attn_mod.attn_decode(p["attn"], cfg, x, cache=cache,
                                         window=window, ctx=ctx)
         return attn_mod.attn_forward(p["attn"], cfg, x, positions,
-                                     window=window, cache=cache)
+                                     window=window, cache=cache,
+                                     tile=tiles.get("flash_attention"))
     if spec.mixer == "rglru":
         return rglru_mod.rglru_forward(p["rglru"], cfg, x, state=cache)
     if spec.mixer == "ssd":
-        return ssm_mod.ssm_forward(p["ssm"], cfg, x, state=cache)
+        ssd_tile = tiles.get("ssd")
+        return ssm_mod.ssm_forward(p["ssm"], cfg, x, state=cache,
+                                   chunk=ssd_tile[0] if ssd_tile else 0)
     raise ValueError(spec.mixer)
 
 
-def _dense_ff(p, cfg: ArchConfig, x):
+def _tile_fits(tile, m: int, k: int, n: int) -> bool:
+    """True when the (clamped) tile divides the GEMM — pallas_call legality."""
+    return all(dim % min(t, dim) == 0
+               for t, dim in zip(tile, (m, k, n)))
+
+
+def _dense_ff(p, cfg: ArchConfig, x, tile=None):
+    """SwiGLU FF. ``tile`` is the plan-resolved matmul tile (bm, bk, bn);
+    on TPU backends the projection GEMMs run through the tiled Pallas matmul
+    kernel with it (inference paths), elsewhere the tile is advisory and the
+    einsum lowering is kept (Pallas TPU kernels cannot lower to host HLO)."""
     act = act_fn(cfg.act)
+    b, s, d = x.shape
+    f = p["w1"].shape[1]
+    if (tile is not None and flags.pallas_enabled()
+            and _tile_fits(tile, b * s, d, f)
+            and _tile_fits(tile, b * s, f, d)):
+        from repro.kernels.matmul.ops import mm
+
+        xf = x.reshape(b * s, d)
+        t = tuple(tile)
+        h = act(mm(xf, p["w1"].astype(x.dtype), tile=t))
+        h = h * mm(xf, p["w3"].astype(x.dtype), tile=t)
+        return mm(h, p["w2"].astype(x.dtype), tile=t).reshape(b, s, -1)
     h = act(jnp.einsum("bsd,df->bsf", x, p["w1"].astype(x.dtype)))
     h = h * jnp.einsum("bsd,df->bsf", x, p["w3"].astype(x.dtype))
     return jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(x.dtype))
@@ -206,24 +232,26 @@ def _dense_ff(p, cfg: ArchConfig, x):
 
 def layer_forward(
     p, cfg: ArchConfig, spec: LayerSpec, x, positions, cache,
-    ctx: Optional[DistContext], decode: bool = False,
+    ctx: Optional[DistContext], decode: bool = False, tiles=None,
 ):
     """Returns (x_out, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
+    ff_tile = (tiles or {}).get("matmul")
     h = _apply_norm(p, cfg, x, "norm1")
-    mix, new_cache = _mixer(p, cfg, spec, h, positions, cache, decode, ctx)
+    mix, new_cache = _mixer(p, cfg, spec, h, positions, cache, decode, ctx,
+                            tiles)
     if cfg.post_norms:
         mix = _apply_norm(p, cfg, mix, "post1")
 
     if cfg.parallel_block and spec.ff is not None:
-        ff = _dense_ff(p["ff"], cfg, h)
+        ff = _dense_ff(p["ff"], cfg, h, tile=ff_tile)
         x = x + mix + ff
     else:
         x = x + mix
         if spec.ff is not None:
             h2 = _apply_norm(p, cfg, x, "norm2")
             if spec.ff == "dense":
-                ff = _dense_ff(p["ff"], cfg, h2)
+                ff = _dense_ff(p["ff"], cfg, h2, tile=ff_tile)
             else:
                 ff, aux = moe_mod.moe_forward(p["moe"], cfg, h2, ctx)
             if cfg.post_norms:
@@ -240,7 +268,7 @@ def layer_forward(
 
 def _scan_unit(
     unit_params, cfg: ArchConfig, unit: Tuple[LayerSpec, ...], x, positions,
-    unit_caches, ctx, decode: bool, remat: bool,
+    unit_caches, ctx, decode: bool, remat: bool, tiles=None,
 ):
     """Scan a repeat unit (tuple of per-position stacked params) ``reps``
     times. unit_caches: matching list of stacked caches (or None)."""
@@ -251,7 +279,7 @@ def _scan_unit(
         ncs = []
         for spec, lp, lc in zip(unit, lps, lcs):
             xc, nc, aux = layer_forward(lp, cfg, spec, xc, positions, lc,
-                                        ctx, decode)
+                                        ctx, decode, tiles=tiles)
             aux_sum = aux_sum + aux
             ncs.append(nc)
         return (xc, aux_sum), ncs
@@ -322,6 +350,7 @@ def forward(
     start_pos: int = 0,
     remat: bool = True,
     logits_mode: str = "full",   # full | last | hidden
+    tiles=None,
 ) -> StackOutputs:
     """tokens [B, S] -> logits [B, S(+P), Vpad].
 
@@ -330,7 +359,9 @@ def forward(
     prepended to the token embeddings. ``logits_mode``: "last" applies the
     LM head to the final position only (prefill); "hidden" skips the head
     and returns normed hidden states (pair with fused_lm_loss to avoid
-    materializing [B, S, V] logits).
+    materializing [B, S, V] logits). ``tiles`` (kernel name -> TileShape,
+    from a resolved AOT plan) parameterizes the attention/FF/SSD kernel call
+    sites — see ``launch.specs.resolve_model_tiles``.
     """
     b, s = tokens.shape
     x = params["embed"][tokens]
@@ -359,14 +390,14 @@ def forward(
             for li, spec in enumerate(seg[1]):
                 lc = gc[li] if gc is not None else None
                 x, nc, aux = layer_forward(gp[li], cfg, spec, x, positions,
-                                           lc, ctx, decode)
+                                           lc, ctx, decode, tiles=tiles)
                 aux_total = aux_total + aux
                 ncs.append(nc)
         else:
             _, unit, reps = seg
             x, ncs, aux = _scan_unit(
                 gp, cfg, unit, x, positions, gc, ctx, decode,
-                remat=remat and not decode,
+                remat=remat and not decode, tiles=tiles,
             )
             aux_total = aux_total + aux
         if new_caches is not None:

@@ -1,0 +1,16 @@
+"""Serving subsystem: engine, shape-bucketed scheduler, fleet router,
+runtime telemetry. See ``repro.serve.scheduler`` for the admission story."""
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.fleet import FleetRouter, RouteDecision
+from repro.serve.metrics import ServeMetrics
+from repro.serve.scheduler import (
+    BucketPolicy,
+    FifoScheduler,
+    ShapeBucketScheduler,
+    make_scheduler,
+)
+
+__all__ = [
+    "Request", "ServeEngine", "FleetRouter", "RouteDecision", "ServeMetrics",
+    "BucketPolicy", "FifoScheduler", "ShapeBucketScheduler", "make_scheduler",
+]

@@ -6,17 +6,30 @@ slots in one jitted step. Greedy sampling. This is the serving analogue of
 the train loop — the decode step is the unit the decode_* dry-run shapes
 lower.
 
+Admission is delegated to a scheduler (``repro.serve.scheduler``): the
+default :class:`~repro.serve.scheduler.FifoScheduler` preserves the naive
+raw-shape behavior; a :class:`~repro.serve.scheduler.ShapeBucketScheduler`
+pads prompts to the plan's shape family so every prefill lands on an
+exactly-resolved plan cell (and a warm jit cache entry) instead of an
+arbitrary shape that silently falls back to heuristics.
+
 Tile selection: pass a compiled :class:`~repro.core.plans.TilePlan` (and the
 target :class:`~repro.core.HardwareModel`) and the engine resolves every
 decode-path kernel tile at construction time — exact hit, nearest shape, or
 cross-hardware transfer — without ever invoking an autotuner sweep on the
-request path. Cells the plan cannot resolve fall back to the zero-cost
-heuristic default tile, never to a sweep.
+request path. Prefill tiles are resolved per admitted shape (cached per
+length) and threaded into the model's kernel call sites. Cells the plan
+cannot resolve fall back to the zero-cost heuristic default tile, never to
+a sweep. Every resolution is counted in ``self.metrics`` (plan hit /
+transfer / fallback counters, TTFT/TPOT, queue depth).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+import math
+import time
+import warnings
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,9 +37,11 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.hardware import PRODUCTION_TARGET, HardwareModel
-from repro.core.plans import PlanResolution, TilePlan
+from repro.core.plans import PlanResolution, PlanTransferWarning, TilePlan
 from repro.core.tiling import TileShape
 from repro.models import api
+from repro.serve.metrics import ServeMetrics
+from repro.serve.scheduler import FifoScheduler
 
 
 @dataclasses.dataclass
@@ -34,6 +49,9 @@ class Request:
     rid: int
     prompt: np.ndarray          # [S] int32
     max_new_tokens: int = 16
+    priority: int = 0           # lower = more urgent
+    deadline: float = math.inf  # absolute, scheduler-clock units
+    bucket: Optional[int] = None  # padded length (set at submit)
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
@@ -42,13 +60,20 @@ class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, max_len: int = 512,
                  slots: int = 4, dtype=jnp.float32,
                  plans: Optional[TilePlan] = None,
-                 hardware: Optional[HardwareModel] = None):
+                 hardware: Optional[HardwareModel] = None,
+                 scheduler=None,
+                 metrics: Optional[ServeMetrics] = None,
+                 clock: Callable[[], float] = time.perf_counter):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.slots = slots
         self.dtype = dtype
         self.hardware = hardware or PRODUCTION_TARGET
+        self.plans = plans
+        self.scheduler = scheduler or FifoScheduler()
+        self.metrics = metrics or ServeMetrics(clock=clock)
+        self._clock = clock
         # kernel name -> resolved tile for the decode path; populated from
         # the AOT plan at init so serving never pays a sweep.
         self.tiles: Dict[str, TileShape] = {}
@@ -56,7 +81,6 @@ class ServeEngine:
         if plans is not None:
             self._resolve_tiles(plans)
         self._active: List[Optional[Request]] = [None] * slots
-        self._queue: List[Request] = []
         self._finished: List[Request] = []
         self._next_rid = 0
 
@@ -64,13 +88,13 @@ class ServeEngine:
         self._states = [None] * slots
 
         self._decode = jax.jit(
-            lambda p, tok, st: api.decode_step(p, cfg, tok, st)
+            lambda p, tok, st: api.decode_step(p, cfg, tok, st,
+                                               tiles=self.tiles or None)
         )
-        self._prefill = jax.jit(
-            lambda p, batch: api.prefill(
-                p, cfg, batch, max_len=max_len, dtype=dtype,
-                ring_local=bool(cfg.attn_window))
-        )
+        # Prefill programs are built per admitted length so each shape
+        # family gets its own exactly-resolved tiles (see _prefill_fn).
+        self._prefill_fns: Dict[int, Any] = {}
+        self._prefill_sources: Dict[int, Dict[str, str]] = {}
 
     def _resolve_tiles(self, plans: TilePlan) -> None:
         """Resolve decode-path kernel tiles from the plan store. No sweeps."""
@@ -79,33 +103,118 @@ class ServeEngine:
         self.tiles, self.tile_resolutions = resolve_model_tiles(
             plans, self.cfg, self.slots, self.max_len, "decode",
             jnp.dtype(self.dtype).name, self.hardware)
+        for kernel in self.tiles:
+            res = self.tile_resolutions.get(kernel)
+            self.metrics.record_plan(
+                "decode", kernel, res.source if res else "fallback")
 
-    def add_request(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+    def _prefill_fn(self, length: int):
+        """The jitted prefill program for one admitted prompt length.
+
+        Resolves the (batch=1, seq=length) prefill cell's kernel tiles from
+        the plan (cached per length) and closes over them, so a bucketed
+        shape family compiles once per bucket with the plan's exact tiles.
+        """
+        fn = self._prefill_fns.get(length)
+        if fn is not None:
+            return fn
+        tiles: Dict[str, TileShape] = {}
+        sources: Dict[str, str] = {}
+        if self.plans is not None:
+            from repro.launch.specs import resolve_model_tiles
+
+            with warnings.catch_warnings():
+                # Transfer warnings already fire once at plan resolution
+                # inside resolve; accounting below records them as counters.
+                warnings.simplefilter("ignore", PlanTransferWarning)
+                tiles, resolutions = resolve_model_tiles(
+                    self.plans, self.cfg, 1, length, "prefill",
+                    jnp.dtype(self.dtype).name, self.hardware)
+            sources = {
+                kernel: (resolutions[kernel].source
+                         if kernel in resolutions else "fallback")
+                for kernel in tiles
+            }
+        else:
+            from repro.launch.specs import kernel_problems
+
+            sources = {
+                kernel: "no_plan"
+                for kernel in kernel_problems(self.cfg, 1, length, "prefill")
+            }
+        cfg, max_len, dtype = self.cfg, self.max_len, self.dtype
+        fn = jax.jit(
+            lambda p, batch: api.prefill(
+                p, cfg, batch, max_len=max_len, dtype=dtype,
+                ring_local=bool(cfg.attn_window), tiles=tiles or None)
+        )
+        self._prefill_fns[length] = fn
+        self._prefill_sources[length] = sources
+        return fn
+
+    def add_request(self, prompt: np.ndarray, max_new_tokens: int = 16,
+                    priority: int = 0,
+                    deadline: float = math.inf) -> Optional[int]:
+        """Submit a request; returns its rid, or None when admission control
+        rejects it (queue full, prompt longer than every bucket edge, or the
+        padded prompt plus the generation would overflow the KV cache)."""
+        prompt = np.asarray(prompt, np.int32)
+        shaped = self.scheduler.admit_length(len(prompt))
+        # Decode writes KV at positions shaped..shaped+max_new-2 (the last
+        # sampled token is never cached); past max_len the update would
+        # silently clamp onto the final slot and corrupt attention.
+        if shaped is None or shaped + max_new_tokens - 1 > self.max_len:
+            self.metrics.record_reject()
+            return None
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append(Request(rid, np.asarray(prompt, np.int32),
-                                   max_new_tokens))
+        req = Request(rid, prompt, max_new_tokens,
+                      priority=priority, deadline=deadline)
+        if not self.scheduler.submit(req):
+            self.metrics.record_reject()
+            return None
+        self.metrics.record_submit(rid)
         return rid
 
     def _admit(self):
-        for i in range(self.slots):
-            if self._active[i] is None and self._queue:
-                req = self._queue.pop(0)
-                batch = {"tokens": jnp.asarray(req.prompt[None])}
-                logits, state = self._prefill(self.params, batch)
-                tok = int(jnp.argmax(logits[0, :self.cfg.vocab_size]))
-                req.out_tokens.append(tok)
-                self._active[i] = req
-                self._states[i] = state
+        free = [i for i, r in enumerate(self._active) if r is None]
+        while free:
+            req = self.scheduler.next_request()
+            if req is None:
+                break
+            prompt = self.scheduler.prepare(req)
+            prefill = self._prefill_fn(len(prompt))
+            for kernel, source in self._prefill_sources[len(prompt)].items():
+                self.metrics.record_plan("prefill", kernel, source)
+            batch = {"tokens": jnp.asarray(prompt[None])}
+            logits, state = prefill(self.params, batch)
+            tok = int(jnp.argmax(logits[0, :self.cfg.vocab_size]))
+            req.out_tokens.append(tok)
+            self.metrics.record_first_token(req.rid, req.bucket)
+            if len(req.out_tokens) >= req.max_new_tokens:
+                # Satisfied by the prefill token alone — never occupy a
+                # slot or run a decode step (which would also write KV one
+                # position past the admission bound).
+                req.done = True
+                self._finished.append(req)
+                self.metrics.record_complete()
+                continue
+            i = free.pop(0)
+            self._active[i] = req
+            self._states[i] = state
 
     def step(self) -> int:
         """Admit + one decode step for all active slots. Returns #active."""
         self._admit()
+        self.metrics.record_queue_depth(self.scheduler.pending())
         n = 0
+        active_buckets = []
+        t0 = self._clock()
         for i, req in enumerate(self._active):
             if req is None:
                 continue
             n += 1
+            active_buckets.append(req.bucket)
             last = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
             logits, self._states[i] = self._decode(
                 self.params, last, self._states[i])
@@ -116,12 +225,14 @@ class ServeEngine:
                 self._active[i] = None
                 self._states[i] = None
                 self._finished.append(req)
+                self.metrics.record_complete()
+        self.metrics.record_decode_step(active_buckets, self._clock() - t0)
         return n
 
     def run_until_done(self, max_steps: int = 1000) -> List[Request]:
         self._finished = []
         for _ in range(max_steps):
-            if not any(self._active) and not self._queue:
+            if not any(self._active) and not self.scheduler.pending():
                 break
             self.step()
         return self._finished

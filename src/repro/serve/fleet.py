@@ -1,0 +1,189 @@
+"""Hardware-aware fleet router: one engine per accelerator model.
+
+The paper's cross-model result — the optimal tile on one GPU model is not
+the optimal tile on another — has a fleet-level corollary: once tiles are
+per-model, *cost* is per-model, so the cheapest placement for a request
+depends on which hardware the fleet offers and on the request's shape
+bucket. The router makes that concrete:
+
+* it holds one :class:`~repro.serve.engine.ServeEngine` per
+  :class:`~repro.core.HardwareModel`;
+* it prices every ``(bucket, hardware)`` pair with the PR-1 plan + analytic
+  cost model — prefill at the bucket edge plus ``max_new_tokens`` decode
+  steps, each from the *per-hardware* resolved tiles;
+* it routes each request to the instance minimizing
+  ``service_estimate * (1 + backlog/slots)`` — the cost-model-optimal
+  placement, discounted for instances that are already loaded.
+
+Because memory-bound cells favor high-bandwidth models and compute-bound
+cells favor high-FLOPs models, different buckets of the *same* workload
+route to different hardware (``placement_table`` exposes the pure-cost
+ranking; ``tile_table`` shows the per-model tiles that drive it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Dict, List, Mapping, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import registry
+from repro.core.plans import PlanTransferWarning, score_tile
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.scheduler import BucketPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteDecision:
+    """Where one request went and why."""
+
+    rid: int
+    instance: str
+    bucket: int
+    score: float                      # chosen instance's loaded score
+    scores: Tuple[Tuple[str, float], ...]  # all (instance, loaded score)
+
+
+class FleetRouter:
+    """Route requests across per-hardware engines by plan-resolved cost."""
+
+    def __init__(self, engines: Mapping[str, ServeEngine],
+                 policy: BucketPolicy):
+        if not engines:
+            raise ValueError("FleetRouter needs at least one engine")
+        self.engines: Dict[str, ServeEngine] = dict(engines)
+        self.policy = policy
+        self.decisions: List[RouteDecision] = []
+        # (instance, kind, length) -> estimated seconds; pure function of
+        # the plan + cost model, so cache freely.
+        self._cell_cost: Dict[Tuple[str, str, int], float] = {}
+
+    # -- cost model ----------------------------------------------------------
+    def _phase_cost(self, name: str, kind: str, length: int) -> float:
+        """Estimated seconds of one prefill (kind="prefill", batch 1) or one
+        decode step (kind="decode", the engine's slot batch) on ``name``."""
+        key = (name, kind, length)
+        hit = self._cell_cost.get(key)
+        if hit is not None:
+            return hit
+        from repro.launch.specs import kernel_problems
+
+        eng = self.engines[name]
+        batch = 1 if kind == "prefill" else eng.slots
+        dtype = jnp.dtype(eng.dtype).name
+        total = 0.0
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", PlanTransferWarning)
+            for kernel, problem in kernel_problems(
+                    eng.cfg, batch, length, kind).items():
+                res = (eng.plans.resolve(kernel, problem, dtype, eng.hardware)
+                       if eng.plans is not None else None)
+                if res is not None:
+                    total += res.score_s
+                else:
+                    tile = registry.get(kernel).default_tile(problem, dtype)
+                    total += score_tile(kernel, tile, problem, dtype,
+                                        eng.hardware)
+        self._cell_cost[key] = total
+        return total
+
+    def service_score(self, name: str, bucket: int,
+                      max_new_tokens: int) -> float:
+        """Estimated service seconds for one request of this bucket."""
+        return (self._phase_cost(name, "prefill", bucket)
+                + max_new_tokens
+                * self._phase_cost(name, "decode", self.engines[name].max_len))
+
+    def _load(self, name: str) -> float:
+        eng = self.engines[name]
+        busy = sum(r is not None for r in eng._active)
+        return (busy + eng.scheduler.pending()) / max(eng.slots, 1)
+
+    # -- observability -------------------------------------------------------
+    def placement_table(self, max_new_tokens: int = 16) -> Dict[int, str]:
+        """Pure-cost best instance per bucket edge (no load term) — the
+        paper's per-model-optimum claim at placement granularity."""
+        table = {}
+        for edge in self.policy.edges:
+            table[edge] = min(
+                self.engines,
+                key=lambda n: (self.service_score(n, edge, max_new_tokens), n))
+        return table
+
+    def tile_table(self, bucket: int) -> Dict[str, Dict[str, str]]:
+        """instance -> kernel -> resolved prefill tile at this bucket edge
+        (exposes that the same shape wants different tiles per model)."""
+        from repro.launch.specs import resolve_model_tiles
+
+        out: Dict[str, Dict[str, str]] = {}
+        for name, eng in self.engines.items():
+            if eng.plans is None:
+                continue
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", PlanTransferWarning)
+                tiles, _ = resolve_model_tiles(
+                    eng.plans, eng.cfg, 1, bucket, "prefill",
+                    jnp.dtype(eng.dtype).name, eng.hardware)
+            out[name] = {k: str(t) for k, t in tiles.items()}
+        return out
+
+    # -- routing -------------------------------------------------------------
+    def route(self, prompt, max_new_tokens: int = 16, priority: int = 0,
+              deadline: float = float("inf")) -> Optional[RouteDecision]:
+        """Admit one request on the cheapest instance; None when rejected."""
+        bucket = self.policy.bucket_for(len(prompt))
+        if bucket is None:
+            return None
+        scores = tuple(sorted(
+            (name,
+             self.service_score(name, bucket, max_new_tokens)
+             * (1.0 + self._load(name)))
+            for name in self.engines))
+        name = min(scores, key=lambda kv: (kv[1], kv[0]))[0]
+        rid = self.engines[name].add_request(
+            prompt, max_new_tokens=max_new_tokens, priority=priority,
+            deadline=deadline)
+        if rid is None:
+            return None
+        decision = RouteDecision(
+            rid=rid, instance=name, bucket=bucket,
+            score=dict(scores)[name], scores=scores)
+        self.decisions.append(decision)
+        return decision
+
+    def placements(self) -> Dict[int, Dict[str, int]]:
+        """bucket -> instance -> routed request count (from the live run)."""
+        out: Dict[int, Dict[str, int]] = {}
+        for d in self.decisions:
+            out.setdefault(d.bucket, {}).setdefault(d.instance, 0)
+            out[d.bucket][d.instance] += 1
+        return out
+
+    # -- execution -----------------------------------------------------------
+    def step_all(self) -> int:
+        """One engine step on every instance; returns total active slots."""
+        return sum(eng.step() for eng in self.engines.values())
+
+    def pending(self) -> int:
+        return sum(eng.scheduler.pending() for eng in self.engines.values())
+
+    def run_until_done(self, max_steps: int = 1000
+                       ) -> Dict[str, List[Request]]:
+        """Drain every instance with interleaved steps (lockstep), so one
+        engine's backlog never inflates another's wall-clock TTFT/TPOT."""
+        for _ in range(max_steps):
+            if not self.step_all() and not self.pending():
+                break
+        return {name: list(eng._finished)
+                for name, eng in self.engines.items()}
+
+    def metrics(self) -> Dict[str, dict]:
+        out = {name: eng.metrics.as_dict()
+               for name, eng in self.engines.items()}
+        out["router"] = {
+            "routed": len(self.decisions),
+            "placements": {str(b): dict(sorted(p.items()))
+                           for b, p in sorted(self.placements().items())},
+        }
+        return out

@@ -1,0 +1,185 @@
+"""Runtime serving telemetry: per-bucket latency, queue depth, plan counters.
+
+One :class:`ServeMetrics` instance rides along with a ``ServeEngine`` (the
+fleet router aggregates one per instance). Everything is plain Python — no
+jax — so recording on the request path costs nanoseconds and the whole
+object exports as a dict (``as_dict``) for logging / the launcher to print.
+
+Measured quantities follow serving convention:
+
+* **TTFT** (time to first token): submit -> end of the prefill that produced
+  the request's first token, per bucket.
+* **TPOT** (time per output token): decode-step wall time divided by the
+  number of active slots, attributed to each active request's bucket.
+* **Queue depth**: scheduler backlog sampled at every engine step.
+* **Plan counters**: how each kernel-tile lookup was satisfied — ``exact``,
+  ``nearest_shape``, ``cross_hardware`` (the paper's transferred-optimum
+  case), ``fallback`` (heuristic default), or ``no_plan`` — split by phase
+  (``prefill`` / ``decode``). ``plan_hit_rate()`` is the exact-hit fraction,
+  the quantity the shape-bucketed scheduler exists to maximize.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import Counter, defaultdict
+from typing import Callable, Dict, Optional
+
+# Resolution sources, in decreasing order of trustworthiness. "fallback" is
+# the heuristic default tile (plan had nothing usable); "no_plan" means the
+# engine was constructed without an artifact at all.
+PLAN_SOURCES = ("exact", "nearest_shape", "cross_hardware", "fallback",
+                "no_plan")
+
+
+@dataclasses.dataclass
+class _LatencyStat:
+    count: int = 0
+    total_s: float = 0.0
+    max_s: float = 0.0
+
+    def record(self, dt: float) -> None:
+        self.count += 1
+        self.total_s += dt
+        self.max_s = max(self.max_s, dt)
+
+    @property
+    def mean_s(self) -> float:
+        return self.total_s / self.count if self.count else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"count": self.count, "mean_s": self.mean_s,
+                "max_s": self.max_s}
+
+
+class ServeMetrics:
+    """Mutable counters; ``clock`` is injectable for deterministic tests."""
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter):
+        self.clock = clock
+        self.submitted = 0
+        self.rejected = 0
+        self.completed = 0
+        self.tokens_out = 0
+        self._submit_t: Dict[int, float] = {}          # rid -> submit time
+        self.ttft: Dict[object, _LatencyStat] = defaultdict(_LatencyStat)
+        self.tpot: Dict[object, _LatencyStat] = defaultdict(_LatencyStat)
+        self.queue_depth_max = 0
+        self._queue_depth_sum = 0
+        self._queue_depth_n = 0
+        # (phase, source) -> count and (phase, kernel) -> source breakdown.
+        self.plan_counts: Counter = Counter()
+        self.plan_by_kernel: Dict[str, Counter] = defaultdict(Counter)
+
+    # -- request lifecycle ---------------------------------------------------
+    def record_submit(self, rid: int) -> None:
+        self.submitted += 1
+        self._submit_t[rid] = self.clock()
+
+    def record_reject(self, bucket: Optional[object] = None) -> None:
+        del bucket  # per-bucket reject split not tracked yet
+        self.rejected += 1
+
+    def record_first_token(self, rid: int, bucket: object) -> None:
+        self.tokens_out += 1   # prefill samples the request's first token
+        t0 = self._submit_t.pop(rid, None)
+        if t0 is not None:
+            self.ttft[bucket].record(self.clock() - t0)
+
+    def record_decode_step(self, buckets, dt: float) -> None:
+        """One engine decode step over ``buckets`` (one entry per active
+        slot); each slot produced one token in ``dt`` seconds total."""
+        n = len(buckets)
+        if not n:
+            return
+        per_tok = dt / n
+        for b in buckets:
+            self.tpot[b].record(per_tok)
+        self.tokens_out += n
+
+    def record_complete(self) -> None:
+        self.completed += 1
+
+    def record_queue_depth(self, depth: int) -> None:
+        self.queue_depth_max = max(self.queue_depth_max, depth)
+        self._queue_depth_sum += depth
+        self._queue_depth_n += 1
+
+    # -- plan resolution -----------------------------------------------------
+    def record_plan(self, phase: str, kernel: str, source: str) -> None:
+        if source not in PLAN_SOURCES:
+            source = "fallback"
+        self.plan_counts[(phase, source)] += 1
+        self.plan_by_kernel[kernel][source] += 1
+
+    def plan_hit_rate(self, phase: Optional[str] = None) -> float:
+        """Exact-hit fraction over all recorded resolutions (0.0 if none)."""
+        total = hits = 0
+        for (ph, source), n in self.plan_counts.items():
+            if phase is not None and ph != phase:
+                continue
+            total += n
+            if source == "exact":
+                hits += n
+        return hits / total if total else 0.0
+
+    # -- export --------------------------------------------------------------
+    @property
+    def queue_depth_mean(self) -> float:
+        return (self._queue_depth_sum / self._queue_depth_n
+                if self._queue_depth_n else 0.0)
+
+    def as_dict(self) -> Dict[str, object]:
+        plan = {src: 0 for src in PLAN_SOURCES}
+        by_phase: Dict[str, Dict[str, int]] = defaultdict(
+            lambda: {src: 0 for src in PLAN_SOURCES})
+        for (phase, source), n in self.plan_counts.items():
+            plan[source] += n
+            by_phase[phase][source] += n
+        return {
+            "requests": {
+                "submitted": self.submitted,
+                "rejected": self.rejected,
+                "completed": self.completed,
+                "tokens_out": self.tokens_out,
+            },
+            "queue_depth": {
+                "max": self.queue_depth_max,
+                "mean": self.queue_depth_mean,
+            },
+            "ttft_s": {str(b): s.as_dict() for b, s in sorted(
+                self.ttft.items(), key=lambda kv: str(kv[0]))},
+            "tpot_s": {str(b): s.as_dict() for b, s in sorted(
+                self.tpot.items(), key=lambda kv: str(kv[0]))},
+            "plan": {
+                "counts": plan,
+                "by_phase": {k: dict(v) for k, v in sorted(by_phase.items())},
+                "hit_rate": self.plan_hit_rate(),
+                "hit_rate_prefill": self.plan_hit_rate("prefill"),
+                "by_kernel": {k: dict(c) for k, c in sorted(
+                    self.plan_by_kernel.items())},
+            },
+        }
+
+    def render(self) -> str:
+        """Human-readable multi-line summary (the launcher prints this)."""
+        d = self.as_dict()
+        lines = [
+            "serve metrics:",
+            f"  requests: {d['requests']['submitted']} submitted, "
+            f"{d['requests']['rejected']} rejected, "
+            f"{d['requests']['completed']} completed, "
+            f"{d['requests']['tokens_out']} tokens",
+            f"  queue depth: max {d['queue_depth']['max']}, "
+            f"mean {d['queue_depth']['mean']:.1f}",
+            f"  plan hit rate: {d['plan']['hit_rate']:.2f} "
+            f"(prefill {d['plan']['hit_rate_prefill']:.2f}) "
+            f"counts {d['plan']['counts']}",
+        ]
+        for label, table in (("ttft", d["ttft_s"]), ("tpot", d["tpot_s"])):
+            for bucket, stat in table.items():
+                lines.append(
+                    f"  {label}[{bucket}]: n={stat['count']} "
+                    f"mean={stat['mean_s'] * 1e3:.2f}ms "
+                    f"max={stat['max_s'] * 1e3:.2f}ms")
+        return "\n".join(lines)

@@ -1,0 +1,224 @@
+"""Shape-bucketed continuous-batching scheduler.
+
+The paper's result is that a tile optimum holds for one *(problem shape,
+hardware model)* cell. PR 1 compiled those cells into AOT plans, but a
+serving engine that prefills requests at their raw prompt lengths lands on
+arbitrary shapes: almost every lookup degrades to nearest-shape (or a
+heuristic), and every distinct length is a fresh XLA compile. The scheduler
+fixes this at admission time: prompts are padded to a small family of
+**bucket edges**, so every prefill lands on an exactly-compiled plan cell
+and a warm jit cache entry.
+
+Components:
+
+* :class:`BucketPolicy` — the shape family (ascending pad targets) plus the
+  admission bound. ``from_plan`` derives edges from a compiled
+  :class:`~repro.core.plans.TilePlan` so the scheduler's shapes are, by
+  construction, the plan's shapes.
+* :class:`ShapeBucketScheduler` — per-bucket queues with priority/deadline
+  ordering (FIFO among equals), admission control (full queue or
+  over-length prompt -> reject), and left-padding to the bucket edge.
+* :class:`FifoScheduler` — the naive baseline: one queue, raw shapes. This
+  is the pre-scheduler engine behavior, kept as the default so existing
+  callers are unchanged and benchmarks have a control arm.
+
+The engine owns the slots; the scheduler only decides *which request is
+admitted next and at what shape*.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPolicy:
+    """Shape family + admission bound for bucketed scheduling.
+
+    ``edges`` are ascending prompt-length pad targets; a prompt is assigned
+    the smallest edge >= its length. Prompts longer than the largest edge
+    are rejected (admission control), as are submits beyond ``max_queue``
+    total backlog.
+    """
+
+    edges: Tuple[int, ...]
+    max_queue: int = 256
+
+    def __post_init__(self):
+        if not self.edges:
+            raise ValueError("BucketPolicy needs at least one edge")
+        if list(self.edges) != sorted(set(self.edges)):
+            raise ValueError(f"edges must be ascending/unique: {self.edges}")
+        if any(e <= 0 for e in self.edges):
+            raise ValueError(f"edges must be positive: {self.edges}")
+
+    @classmethod
+    def pow2(cls, lo: int = 16, hi: int = 1024,
+             max_queue: int = 256) -> "BucketPolicy":
+        edges = []
+        e = lo
+        while e < hi:
+            edges.append(e)
+            e *= 2
+        edges.append(hi)
+        return cls(tuple(edges), max_queue=max_queue)
+
+    @classmethod
+    def from_plan(cls, plan, kernel: str = "flash_attention",
+                  hardware: Optional[str] = None, dtype: Optional[str] = None,
+                  max_queue: int = 256) -> "BucketPolicy":
+        """Derive the shape family from a compiled plan's prefill cells.
+
+        Uses the full-sequence (sq > 1) cells of ``kernel`` — i.e. the
+        shapes the plan was actually compiled for — so bucketed admission
+        resolves exactly by construction.
+        """
+        edges = set()
+        for e in plan.entries():
+            if e.kernel != kernel:
+                continue
+            if hardware is not None and e.hardware != hardware:
+                continue
+            if dtype is not None and e.dtype != dtype:
+                continue
+            sq = e.problem_dict.get("sq", 0)
+            if sq > 1:
+                edges.add(sq)
+        if not edges:
+            raise ValueError(
+                f"plan has no full-sequence {kernel!r} cells to derive "
+                f"bucket edges from")
+        return cls(tuple(sorted(edges)), max_queue=max_queue)
+
+    def bucket_for(self, prompt_len: int) -> Optional[int]:
+        """Smallest edge >= prompt_len; None when the prompt is too long."""
+        for e in self.edges:
+            if prompt_len <= e:
+                return e
+        return None
+
+    @staticmethod
+    def parse(spec: str, max_queue: int = 256) -> "BucketPolicy":
+        """Parse a CLI spec: "64,128,512" or "pow2:16:1024"."""
+        if spec.startswith("pow2"):
+            parts = spec.split(":")
+            lo = int(parts[1]) if len(parts) > 1 else 16
+            hi = int(parts[2]) if len(parts) > 2 else 1024
+            return BucketPolicy.pow2(lo, hi, max_queue=max_queue)
+        return BucketPolicy(
+            tuple(sorted({int(x) for x in spec.split(",") if x})),
+            max_queue=max_queue)
+
+
+class FifoScheduler:
+    """Naive admission: one unbounded queue, raw prompt shapes."""
+
+    name = "fifo"
+
+    def __init__(self, max_queue: Optional[int] = None):
+        self.max_queue = max_queue
+        self._queue: deque = deque()
+
+    def admit_length(self, prompt_len: int) -> int:
+        """The sequence length a prompt would prefill at (raw — no padding)."""
+        return prompt_len
+
+    def submit(self, req) -> bool:
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            return False
+        req.bucket = len(req.prompt)
+        self._queue.append(req)
+        return True
+
+    def next_request(self):
+        return self._queue.popleft() if self._queue else None
+
+    def prepare(self, req) -> np.ndarray:
+        return req.prompt
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+
+class ShapeBucketScheduler:
+    """Per-bucket queues, priority/deadline ordering, padded admission.
+
+    Ordering within and across buckets is by ``(priority, deadline, seq)``:
+    lower priority value = more urgent; ``deadline`` defaults to +inf;
+    ``seq`` is the global submit order, so requests that tie on priority and
+    deadline pop FIFO (fairness). Across buckets the scheduler picks the
+    bucket whose *head* sorts first, which keeps bursts of one shape
+    draining together (warm compile + exact plan cell) without starving an
+    urgent request in another bucket.
+    """
+
+    name = "bucket"
+
+    def __init__(self, policy: BucketPolicy, pad_id: int = 0):
+        self.policy = policy
+        self.pad_id = pad_id
+        self._queues: Dict[int, List] = {e: [] for e in policy.edges}
+        self._seq = 0
+
+    def admit_length(self, prompt_len: int):
+        """The padded prefill length (bucket edge); None when over-length."""
+        return self.policy.bucket_for(prompt_len)
+
+    def submit(self, req) -> bool:
+        bucket = self.policy.bucket_for(len(req.prompt))
+        if bucket is None or self.pending() >= self.policy.max_queue:
+            return False
+        req.bucket = bucket
+        key = (req.priority, req.deadline, self._seq)
+        self._seq += 1
+        heapq.heappush(self._queues[bucket], (key, req))
+        return True
+
+    def next_request(self):
+        heads = [(q[0][0], bucket) for bucket, q in self._queues.items() if q]
+        if not heads:
+            return None
+        _, bucket = min(heads)
+        _, req = heapq.heappop(self._queues[bucket])
+        return req
+
+    def prepare(self, req) -> np.ndarray:
+        """Left-pad the prompt to its bucket edge.
+
+        Left padding keeps the prompt's last token at the final position, so
+        the engine's last-position prefill logits stay the request's first
+        sampled token. The pad prefix is visible to attention (no mask in
+        this synthetic stack) — bucketed outputs are deterministic per
+        bucket but not bit-identical to unpadded serving; that trade is the
+        point of shape binding.
+        """
+        pad = req.bucket - len(req.prompt)
+        if pad <= 0:
+            return req.prompt
+        return np.concatenate([
+            np.full((pad,), self.pad_id, np.int32),
+            np.asarray(req.prompt, np.int32),
+        ])
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def queue_depths(self) -> Dict[int, int]:
+        return {bucket: len(q) for bucket, q in self._queues.items()}
+
+
+def make_scheduler(kind: str, policy: Optional[BucketPolicy] = None,
+                   pad_id: int = 0):
+    """CLI-facing factory: "fifo" or "bucket" (bucket requires a policy)."""
+    if kind == "fifo":
+        return FifoScheduler()
+    if kind == "bucket":
+        if policy is None:
+            policy = BucketPolicy.pow2()
+        return ShapeBucketScheduler(policy, pad_id=pad_id)
+    raise ValueError(f"unknown scheduler kind {kind!r} (fifo|bucket)")

@@ -28,11 +28,13 @@ def make_train_step(
     microbatches: int = 1,
     remat: bool = True,
     accum_dtype=jnp.float32,
+    tiles=None,
 ):
     lr_fn = lr_fn or (lambda step: jnp.asarray(3e-4, jnp.float32))
 
     def loss_fn(params, batch):
-        return api.train_loss(params, cfg, batch, ctx, remat=remat)
+        return api.train_loss(params, cfg, batch, ctx, remat=remat,
+                              tiles=tiles)
 
     def train_step(params, opt_state, batch):
         if microbatches == 1:
@@ -84,16 +86,18 @@ def make_train_step(
 
 
 def make_serve_steps(cfg: ArchConfig, ctx: Optional[DistContext],
-                     max_len: int, dtype=jnp.float32):
+                     max_len: int, dtype=jnp.float32, tiles=None):
     """(prefill_fn, decode_fn) pair for serving / dry-run lowering."""
 
     def prefill_step(params, batch):
         # Window (local) attention layers always use ring caches: their
         # effective KV is the window, independent of total context length.
         return api.prefill(params, cfg, batch, max_len=max_len, dtype=dtype,
-                           ctx=ctx, ring_local=bool(cfg.attn_window))
+                           ctx=ctx, ring_local=bool(cfg.attn_window),
+                           tiles=tiles)
 
     def decode_step(params, token, state):
-        return api.decode_step(params, cfg, token, state, ctx=ctx)
+        return api.decode_step(params, cfg, token, state, ctx=ctx,
+                               tiles=tiles)
 
     return prefill_step, decode_step

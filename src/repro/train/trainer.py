@@ -88,7 +88,7 @@ class Trainer:
             total_steps=tcfg.steps)
         step_fn = make_train_step(
             cfg, self.ctx, self.opt_cfg, lr_fn,
-            microbatches=tcfg.microbatches)
+            microbatches=tcfg.microbatches, tiles=self.tiles or None)
         self._step = jax.jit(step_fn, donate_argnums=(0, 1))
 
     def _resolve_tiles(self, plans: TilePlan) -> None:

@@ -306,3 +306,73 @@ def test_compile_plans_cli(tmp_path):
     for e in plan.entries():
         assert len(e.curve) <= 8
         assert e.tile.dims == e.curve[0][0]  # curve is score-sorted
+
+
+def test_compile_plans_cli_serve_buckets(tmp_path):
+    """--serve-buckets compiles the scheduler's prefill + decode cells."""
+    out = str(tmp_path / "plans.json")
+    compile_plans_cli.main([
+        "--out", out, "--archs", "qwen2-1.5b", "--hardware", "tpu_v5e",
+        "--dtypes", "float32", "--curve-cap", "4",
+        "--serve-buckets", "16,32", "--serve-slots", "2",
+        "--serve-max-len", "64",
+    ])
+    plan = TilePlan.load(out)
+    assert plan.meta["serve_buckets"] == [16, 32]
+    # Full-arch prefill cells for each edge (batch=1 -> m=edge tokens).
+    cfg = configs.get_arch("qwen2-1.5b")
+    for edge in (16, 32):
+        assert plan.lookup(
+            "matmul", dict(m=edge, k=cfg.d_model, n=cfg.d_ff),
+            "float32", "tpu_v5e") is not None
+    # Decode cell at the slot batch.
+    assert plan.lookup(
+        "matmul", dict(m=2, k=cfg.d_model, n=cfg.d_ff),
+        "float32", "tpu_v5e") is not None
+
+
+# -- wall-clock measure path -------------------------------------------------
+
+def test_measure_fn_gated_off_without_tpu():
+    """On a host backend make_measure_fn must return None (analytic
+    fallback) and compile_plan with the factory must equal analytic."""
+    from repro.launch.measure import make_measure_fn
+
+    problem = dict(m=64, k=64, n=128)
+    assert make_measure_fn("matmul", problem, "float32",
+                           PRODUCTION_TARGET) is None
+    analytic = compile_plan([("matmul", problem, "float32",
+                              PRODUCTION_TARGET)])
+    with_factory = compile_plan(
+        [("matmul", problem, "float32", PRODUCTION_TARGET)],
+        measure_fn_factory=make_measure_fn)
+    assert with_factory.meta["measured_jobs"] == 0
+    a = analytic.lookup("matmul", problem, "float32", PRODUCTION_TARGET.name)
+    b = with_factory.lookup("matmul", problem, "float32",
+                            PRODUCTION_TARGET.name)
+    assert a.tile == b.tile and a.score_s == b.score_s
+
+
+def test_measure_fn_drives_sweep_selection():
+    """A measure_fn's wall-clock scores outrank the analytic model in
+    compile_entry (the real-TPU path, exercised with a fake measurer)."""
+    from repro.core.plans import compile_entry
+
+    problem = dict(m=64, k=64, n=128)
+    analytic_best = compile_entry("matmul", problem, "float32",
+                                  PRODUCTION_TARGET).tile
+    # Fake hardware: every tile is "measured" slow except one non-optimal
+    # candidate, which must win over the analytic favorite.
+    target = None
+
+    def fake_measure(tile):
+        nonlocal target
+        if target is None and tile != analytic_best:
+            target = tile
+        return 1e-9 if tile == target else 1.0
+
+    entry = compile_entry("matmul", problem, "float32", PRODUCTION_TARGET,
+                          measure_fn=fake_measure)
+    assert entry.tile == target
+    assert entry.tile != analytic_best
+    assert entry.score_s == 1e-9

@@ -1,0 +1,338 @@
+"""Serving scheduler subsystem: bucket assignment, ordering, admission,
+fleet routing, and telemetry counters.
+
+Pure scheduler/metrics logic runs in the fast lane; tests that execute the
+model through an engine are marked ``slow`` (see pyproject markers).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.serve.engine import Request
+from repro.serve.metrics import ServeMetrics
+from repro.serve.scheduler import (
+    BucketPolicy,
+    FifoScheduler,
+    ShapeBucketScheduler,
+    make_scheduler,
+)
+
+
+def req(rid, length, priority=0, deadline=math.inf):
+    return Request(rid, np.arange(length, dtype=np.int32) + 2,
+                   max_new_tokens=4, priority=priority, deadline=deadline)
+
+
+# ---------------------------------------------------------------------------
+# BucketPolicy
+# ---------------------------------------------------------------------------
+
+def test_bucket_assignment_deterministic():
+    policy = BucketPolicy((16, 64, 256))
+    for length, expect in [(1, 16), (16, 16), (17, 64), (64, 64),
+                           (65, 256), (256, 256)]:
+        assert policy.bucket_for(length) == expect
+        assert policy.bucket_for(length) == policy.bucket_for(length)
+    assert policy.bucket_for(257) is None
+
+
+def test_bucket_policy_validation_and_parse():
+    with pytest.raises(ValueError):
+        BucketPolicy(())
+    with pytest.raises(ValueError):
+        BucketPolicy((64, 16))          # not ascending
+    assert BucketPolicy.parse("64,16,256").edges == (16, 64, 256)
+    assert BucketPolicy.parse("pow2:16:128").edges == (16, 32, 64, 128)
+    assert BucketPolicy.pow2(16, 100).edges == (16, 32, 64, 100)
+
+
+def test_bucket_policy_from_plan():
+    from repro import kernels
+    from repro.core import HARDWARE_REGISTRY
+    from repro.core.plans import compile_plan
+    from repro.launch.compile_plans import serve_bucket_cells
+
+    kernels.register_all()
+    cells = serve_bucket_cells(["qwen2-1.5b"], (32, 128), slots=2,
+                               max_len=160, smoke=True)
+    plan = compile_plan([(k, p, "float32", HARDWARE_REGISTRY["tpu_v5e"])
+                         for k, p in cells])
+    policy = BucketPolicy.from_plan(plan, hardware="tpu_v5e")
+    assert policy.edges == (32, 128)   # decode (sq=1) cells excluded
+
+
+# ---------------------------------------------------------------------------
+# ShapeBucketScheduler ordering + admission
+# ---------------------------------------------------------------------------
+
+def test_fifo_within_bucket_fairness():
+    sched = ShapeBucketScheduler(BucketPolicy((16,)))
+    for i in range(5):
+        assert sched.submit(req(i, 4))
+    order = [sched.next_request().rid for _ in range(5)]
+    assert order == [0, 1, 2, 3, 4]
+    assert sched.next_request() is None
+
+
+def test_priority_then_deadline_ordering():
+    sched = ShapeBucketScheduler(BucketPolicy((16,)))
+    sched.submit(req(0, 4, priority=1))
+    sched.submit(req(1, 4, priority=0, deadline=50.0))
+    sched.submit(req(2, 4, priority=0, deadline=10.0))
+    sched.submit(req(3, 4, priority=0, deadline=10.0))
+    # priority first, then deadline, then submit order.
+    assert [sched.next_request().rid for _ in range(4)] == [2, 3, 1, 0]
+
+
+def test_cross_bucket_pops_most_urgent_head():
+    sched = ShapeBucketScheduler(BucketPolicy((16, 64)))
+    sched.submit(req(0, 40))             # bucket 64, seq 0
+    sched.submit(req(1, 4))              # bucket 16, seq 1
+    sched.submit(req(2, 4, priority=-1))  # bucket 16, urgent
+    assert sched.next_request().rid == 2
+    assert sched.next_request().rid == 0  # FIFO among equal priority
+    assert sched.next_request().rid == 1
+
+
+def test_admission_control_rejects():
+    sched = ShapeBucketScheduler(BucketPolicy((16,), max_queue=2))
+    assert sched.submit(req(0, 4))
+    assert sched.submit(req(1, 4))
+    assert not sched.submit(req(2, 4))      # queue full
+    assert not sched.submit(req(3, 99))     # longer than every edge
+    assert sched.pending() == 2
+
+
+def test_prepare_left_pads_to_edge():
+    sched = ShapeBucketScheduler(BucketPolicy((8,)), pad_id=0)
+    r = req(0, 5)
+    assert sched.submit(r)
+    padded = sched.prepare(sched.next_request())
+    assert padded.shape == (8,)
+    assert list(padded[:3]) == [0, 0, 0]
+    assert list(padded[3:]) == list(r.prompt)
+
+
+def test_engine_rejects_kv_cache_overflow():
+    """Admission must reject when padded prompt + generation would write KV
+    past max_len (the decode-slot clamp would silently corrupt attention)."""
+    import jax
+
+    from repro import configs
+    from repro.models import api
+    from repro.serve import BucketPolicy, ServeEngine, ShapeBucketScheduler
+
+    cfg = configs.get_smoke("qwen2-1.5b")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(
+        cfg, params, max_len=16, slots=1,
+        scheduler=ShapeBucketScheduler(BucketPolicy((8, 16))))
+    # bucket 16 + 4 new tokens needs KV slots up to 16+4-2=18 > 15 -> reject
+    assert eng.add_request(np.arange(10, dtype=np.int32),
+                           max_new_tokens=4) is None
+    # bucket 8 + 4 new tokens tops out at slot 10 -> admitted
+    assert eng.add_request(np.arange(5, dtype=np.int32),
+                           max_new_tokens=4) is not None
+    # FIFO path enforces the same bound on raw lengths
+    fifo = ServeEngine(cfg, params, max_len=16, slots=1)
+    assert fifo.add_request(np.arange(15, dtype=np.int32),
+                            max_new_tokens=4) is None
+    assert fifo.add_request(np.arange(12, dtype=np.int32),
+                            max_new_tokens=4) is not None
+
+
+def test_engine_single_token_request_never_decodes():
+    """max_new_tokens=1 is satisfied by the prefill sample alone: exactly
+    one token out, no decode step, no KV write past the admission bound."""
+    import jax
+
+    from repro import configs
+    from repro.models import api
+    from repro.serve import BucketPolicy, ServeEngine, ShapeBucketScheduler
+
+    cfg = configs.get_smoke("qwen2-1.5b")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(
+        cfg, params, max_len=16, slots=1,
+        scheduler=ShapeBucketScheduler(BucketPolicy((16,))))
+    # Admitted at the cache boundary: bucket 16 + 1 token needs no decode.
+    assert eng.add_request(np.arange(10, dtype=np.int32),
+                           max_new_tokens=1) is not None
+    done = eng.run_until_done()
+    assert len(done) == 1
+    assert len(done[0].out_tokens) == 1
+    assert eng.metrics.tokens_out == 1
+    assert not eng.metrics.tpot        # no decode step was recorded
+
+
+def test_make_scheduler_factory():
+    assert isinstance(make_scheduler("fifo"), FifoScheduler)
+    assert isinstance(make_scheduler("bucket"), ShapeBucketScheduler)
+    with pytest.raises(ValueError):
+        make_scheduler("nope")
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+def test_metrics_counters_with_fake_clock():
+    t = [0.0]
+    m = ServeMetrics(clock=lambda: t[0])
+    m.record_submit(0)
+    t[0] = 0.5
+    m.record_first_token(0, bucket=16)
+    m.record_decode_step([16, 16], 0.2)
+    m.record_queue_depth(3)
+    m.record_queue_depth(1)
+    m.record_plan("prefill", "matmul", "exact")
+    m.record_plan("prefill", "flash_attention", "nearest_shape")
+    m.record_plan("decode", "matmul", "exact")
+    m.record_reject()
+    m.record_complete()
+
+    d = m.as_dict()
+    # 1 prefill token (record_first_token) + 2 decode tokens.
+    assert d["requests"] == {"submitted": 1, "rejected": 1, "completed": 1,
+                             "tokens_out": 3}
+    assert d["queue_depth"]["max"] == 3 and d["queue_depth"]["mean"] == 2.0
+    assert d["ttft_s"]["16"]["count"] == 1
+    assert d["ttft_s"]["16"]["mean_s"] == pytest.approx(0.5)
+    assert d["tpot_s"]["16"]["count"] == 2
+    assert d["tpot_s"]["16"]["mean_s"] == pytest.approx(0.1)
+    assert m.plan_hit_rate() == pytest.approx(2 / 3)
+    assert m.plan_hit_rate("prefill") == pytest.approx(1 / 2)
+    assert d["plan"]["counts"]["nearest_shape"] == 1
+    assert "serve metrics" in m.render()
+
+
+# ---------------------------------------------------------------------------
+# Fleet routing (plan + cost model only; engines never execute the model)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fleet():
+    import jax
+
+    from repro import configs, kernels
+    from repro.core import HARDWARE_REGISTRY
+    from repro.core.plans import compile_plan
+    from repro.launch.compile_plans import serve_bucket_cells
+    from repro.models import api
+    from repro.serve import (
+        BucketPolicy, FleetRouter, ServeEngine, ShapeBucketScheduler,
+    )
+
+    kernels.register_all()
+    edges = (16, 64, 256, 1024)
+    slots, max_len = 2, 1040
+    cells = serve_bucket_cells(["qwen2-1.5b"], edges, slots, max_len,
+                               smoke=True)
+    hw_names = ("tpu_v4", "tpu_v5e")
+    plan = compile_plan([(k, p, "float32", HARDWARE_REGISTRY[h])
+                         for k, p in cells for h in hw_names])
+    cfg = configs.get_smoke("qwen2-1.5b")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    policy = BucketPolicy(edges)
+    engines = {
+        h: ServeEngine(cfg, params, max_len=max_len, slots=slots, plans=plan,
+                       hardware=HARDWARE_REGISTRY[h],
+                       scheduler=ShapeBucketScheduler(policy))
+        for h in hw_names
+    }
+    return FleetRouter(engines, policy)
+
+
+def test_fleet_routes_to_cost_model_optimum(fleet):
+    d = fleet.route(np.arange(10, dtype=np.int32), max_new_tokens=4)
+    assert d is not None and d.bucket == 16
+    # With every instance idle the choice IS the pure cost-model argmin.
+    best = min(d.scores, key=lambda kv: (kv[1], kv[0]))[0]
+    assert d.instance == best
+    assert d.instance == fleet.placement_table(4)[16]
+
+
+def test_fleet_placement_differs_across_buckets(fleet):
+    table = fleet.placement_table(4)
+    assert set(table) == {16, 64, 256, 1024}
+    # Memory-bound small buckets and compute-bound large buckets pick
+    # different hardware (the paper's per-model optimum, fleet-level).
+    assert len(set(table.values())) >= 2
+
+
+def test_fleet_tiles_differ_per_hardware(fleet):
+    diff = [b for b in fleet.policy.edges
+            if len({tuple(sorted(t.items()))
+                    for t in fleet.tile_table(b).values()}) > 1]
+    assert diff, "no bucket resolved different tiles across hardware models"
+
+
+def test_fleet_load_spreads_routing(fleet):
+    # Saturate the cheap instance's slots+queue; the loaded score must
+    # eventually divert a same-bucket request to the other instance.
+    seen = set()
+    for _ in range(12):
+        d = fleet.route(np.arange(10, dtype=np.int32), max_new_tokens=4)
+        assert d is not None
+        seen.add(d.instance)
+    assert len(seen) == 2
+    assert fleet.pending() > 0
+    # (queues were filled but never executed — no model compile in this test)
+
+
+def test_fleet_rejects_overlong_prompt(fleet):
+    assert fleet.route(np.zeros(4096, np.int32)) is None
+
+
+# ---------------------------------------------------------------------------
+# Engine integration (executes the model — slow lane)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_bucketed_engine_serves_to_completion():
+    import jax
+
+    from repro import configs
+    from repro.models import api
+    from repro.serve import BucketPolicy, ServeEngine, ShapeBucketScheduler
+
+    cfg = configs.get_smoke("qwen2-1.5b")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(
+        cfg, params, max_len=64, slots=2,
+        scheduler=ShapeBucketScheduler(BucketPolicy((8, 16), max_queue=4)))
+    rids = [eng.add_request(np.asarray([3, 4, 5, 6, 7]), max_new_tokens=4,
+                            priority=i % 2) for i in range(4)]
+    assert all(r is not None for r in rids)
+    assert eng.add_request(np.zeros(40, np.int32)) is None  # too long
+    done = eng.run_until_done()
+    assert len(done) == 4
+    assert all(len(r.out_tokens) == 4 for r in done)
+    assert all(r.bucket == 8 for r in done)
+    d = eng.metrics.as_dict()
+    assert d["requests"]["completed"] == 4
+    assert d["requests"]["rejected"] == 1
+    assert d["ttft_s"]["8"]["count"] == 4
+    assert d["tpot_s"]["8"]["count"] == 12  # 3 decode tokens per request
+
+
+@pytest.mark.slow
+def test_bucketed_outputs_deterministic_per_bucket():
+    import jax
+
+    from repro import configs
+    from repro.models import api
+    from repro.serve import BucketPolicy, ServeEngine, ShapeBucketScheduler
+
+    cfg = configs.get_smoke("qwen2-1.5b")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+
+    def serve_once():
+        eng = ServeEngine(
+            cfg, params, max_len=64, slots=2,
+            scheduler=ShapeBucketScheduler(BucketPolicy((8,))))
+        eng.add_request(np.asarray([9, 8, 7]), max_new_tokens=5)
+        return eng.run_until_done()[0].out_tokens
+
+    assert serve_once() == serve_once()
