@@ -1,0 +1,152 @@
+"""Dense vs flash-decode attention across cache lengths, by plan tile.
+
+For each cache length the AOT compiler picks the decode cell's KV split
+(``bkv``) per hardware model, and the bench
+
+* reports the chosen split on both modelled targets (the paper's
+  cross-model claim on the decode cell: VMEM capacity bounds the split, so
+  the same cache length wants a different ``bkv`` per model);
+* times the dense masked-softmax decode against the split-KV flash-decode
+  lowering at the resolved split on the running backend;
+* checks parity (<= 2e-5, f32) between the two lowerings.
+
+Asserted invariants (exit 1 on violation; CI runs ``--smoke``):
+  1. every decode cell compiles to a plan entry whose split divides the
+     cache (no silent tile clamp on the decode path);
+  2. dense and flash-decode agree on every timed cell;
+  3. at least one decode cell resolves a different ``bkv`` on the two
+     modelled hardware targets.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Dict, List, Tuple
+
+HARDWARE = ("tpu_v5e", "tpu_v6e")
+
+SMOKE = dict(
+    timed_lens=(256, 512, 1024),
+    plan_lens=(1024, 8192, 32768),
+    b=2, hq=4, hkv=2, d=64, iters=5,
+)
+FULL = dict(
+    timed_lens=(1024, 8192, 32768),
+    plan_lens=(1024, 8192, 32768),
+    b=4, hq=12, hkv=2, d=128, iters=20,
+)
+
+
+def compile_decode_cells(p: dict) -> Dict[Tuple[str, int], int]:
+    """(hardware, cache_len) -> plan-chosen bkv, via the AOT sweep."""
+    from repro import kernels
+    from repro.core import HARDWARE_REGISTRY
+    from repro.core.plans import compile_entry
+
+    kernels.register_all()
+    chosen = {}
+    for hw_name in HARDWARE:
+        hw = HARDWARE_REGISTRY[hw_name]
+        for skv in sorted(set(p["plan_lens"]) | set(p["timed_lens"])):
+            problem = dict(b=p["b"], skv=skv, d=p["d"], hq=p["hq"],
+                           hkv=p["hkv"], window=0)
+            entry = compile_entry("flash_decode", problem, "float32", hw)
+            chosen[(hw_name, skv)] = int(entry.tile[0])
+    return chosen
+
+
+def _time(fn, *args, iters: int) -> float:
+    import jax
+
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(smoke: bool = False, print_fn=print) -> int:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.hardware import PRODUCTION_TARGET
+    from repro.kernels.flash_attention.decode import flash_decode_ref
+
+    p = SMOKE if smoke else FULL
+    failures = 0
+
+    chosen = compile_decode_cells(p)
+    print_fn("# decode-cell plan tiles (bkv) per hardware model:")
+    for skv in sorted({s for _, s in chosen}):
+        row = {hw: chosen[(hw, skv)] for hw in HARDWARE}
+        print_fn(f"#   cache {skv:>6}: " + ", ".join(
+            f"{hw}={bkv}" for hw, bkv in row.items()))
+        for hw in HARDWARE:
+            if skv % chosen[(hw, skv)]:
+                failures += 1
+                print_fn(f"FAIL: {hw} cache {skv}: bkv {chosen[(hw, skv)]} "
+                         f"does not divide the cache")
+    if not any(chosen[(HARDWARE[0], skv)] != chosen[(HARDWARE[1], skv)]
+               for skv in {s for _, s in chosen}):
+        failures += 1
+        print_fn("FAIL: no decode cell picks a different bkv across the two "
+                 "hardware models")
+
+    def dense(q, k, v, pos):
+        n_rep = p["hq"] // p["hkv"]
+        ke = jnp.repeat(k, n_rep, axis=1) if n_rep > 1 else k
+        ve = jnp.repeat(v, n_rep, axis=1) if n_rep > 1 else v
+        s = jnp.einsum("bhk,bhsk->bhs", q, ke,
+                       preferred_element_type=jnp.float32) * p["d"] ** -0.5
+        mask = jnp.arange(k.shape[2]) <= pos
+        s = jnp.where(mask[None, None], s, -2.0e30)
+        pr = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhs,bhsk->bhk", pr.astype(ve.dtype), ve,
+                          preferred_element_type=jnp.float32).astype(q.dtype)
+
+    dense_j = jax.jit(dense)
+    rng = np.random.default_rng(0)
+    print_fn("cache_len,bkv,dense_ms,flash_ms,max_abs_diff")
+    for skv in p["timed_lens"]:
+        bkv = chosen[(PRODUCTION_TARGET.name, skv)] \
+            if (PRODUCTION_TARGET.name, skv) in chosen \
+            else chosen[(HARDWARE[0], skv)]
+        q = jnp.asarray(rng.standard_normal(
+            (p["b"], p["hq"], p["d"]), np.float32) * 0.3)
+        k = jnp.asarray(rng.standard_normal(
+            (p["b"], p["hkv"], skv, p["d"]), np.float32) * 0.3)
+        v = jnp.asarray(rng.standard_normal(
+            (p["b"], p["hkv"], skv, p["d"]), np.float32))
+        pos = jnp.asarray(skv - 1, jnp.int32)
+
+        flash = jax.jit(lambda q, k, v, pos, bkv=bkv: flash_decode_ref(
+            q, k, v, pos=pos, bkv=bkv))
+        d_ref = dense_j(q, k, v, pos)
+        f_ref = flash(q, k, v, pos)
+        diff = float(jnp.max(jnp.abs(d_ref - f_ref)))
+        if diff > 2e-5:
+            failures += 1
+            print_fn(f"FAIL: parity {diff:.2e} > 2e-5 at cache {skv}")
+        t_dense = _time(dense_j, q, k, v, pos, iters=p["iters"])
+        t_flash = _time(flash, q, k, v, pos, iters=p["iters"])
+        print_fn(f"{skv},{bkv},{t_dense * 1e3:.3f},{t_flash * 1e3:.3f},"
+                 f"{diff:.2e}")
+
+    print_fn("PASS" if not failures else f"{failures} FAILURES")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small cells for CI (short traces, tiny geometry)")
+    args = ap.parse_args()
+    sys.exit(1 if run(smoke=args.smoke) else 0)
+
+
+if __name__ == "__main__":
+    main()

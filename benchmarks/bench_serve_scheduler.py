@@ -21,7 +21,10 @@ quantifies the subsystem's core claim:
 Asserted invariants (exit 1 on violation; CI runs ``--smoke``):
   1. bucketed exact-hit rate > FIFO exact-hit rate on BOTH hardware targets;
   2. the fleet placement table uses >= 2 distinct instances across buckets;
-  3. >= 1 bucket resolves different tiles on the two hardware models.
+  3. >= 1 bucket resolves different tiles on the two hardware models;
+  4. every engine's decode step resolves its flash-decode KV split from the
+     plan (exact or nearest) and the split legally applies — no
+     ``tile_fallback`` events on the decode path.
 """
 from __future__ import annotations
 
@@ -131,11 +134,22 @@ def run(smoke: bool = False, print_fn=print) -> int:
                     BucketPolicy(edges, max_queue=len(trace) + 1))
             eng = ServeEngine(cfg, params, max_len=max_len, slots=slots,
                               plans=plan, hardware=hw, scheduler=scheduler)
+            dres = eng.tile_resolutions.get("flash_decode")
+            if (dres is None
+                    or dres.source not in ("exact", "nearest_shape")):
+                failures += 1
+                print_fn(f"FAIL: {hw_name} decode flash_decode tile not "
+                         f"plan-resolved: "
+                         f"{dres.source if dres else 'missing'}")
             wall = drive_open_loop(
                 lambda pr, n, e=eng: e.add_request(pr, max_new_tokens=n),
                 lambda e=eng: e.step() or e.scheduler.pending(),
                 trace, new_tokens, p["arrivals_per_step"])
             m = eng.metrics
+            if m.plan_counts[("decode", "tile_fallback")]:
+                failures += 1
+                print_fn(f"FAIL: {hw_name}/{sched_name}: decode tile did "
+                         f"not legally apply (tile_fallback recorded)")
             hit = m.plan_hit_rate("prefill")
             hit_rates[(sched_name, hw_name)] = hit
             srcs = m.as_dict()["plan"]["by_phase"].get("prefill", {})

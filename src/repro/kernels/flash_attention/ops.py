@@ -1,7 +1,14 @@
-"""Jit'd wrapper + registry declaration for flash attention.
+"""Jit'd wrappers + registry declarations for flash attention kernels.
 
-Problem dims: {"sq", "skv", "d", "hq", "hkv", "window"(0=none)}.
-Tile rank 2 = (bq, bkv). VMEM per step: q + k + v + out tiles + f32 scratch.
+``flash_attention`` (full-sequence prefill/train):
+    problem dims {"sq", "skv", "d", "hq", "hkv", "window"(0=none)};
+    tile rank 2 = (bq, bkv). VMEM per step: q + k + v + out tiles + scratch.
+``flash_decode`` (single query over a KV cache — its own plan cell, with
+    its own sensitivity curve per hardware model):
+    problem dims {"b", "skv", "d", "hq", "hkv", "window"(0=none)};
+    tile rank 1 = (bkv,), the split-KV chunk. VMEM per step: the K/V block
+    pair plus the resident grouped-query rows, stats, and logits — VMEM
+    capacity is what bounds the split size per hardware model.
 """
 from __future__ import annotations
 
@@ -11,8 +18,9 @@ from typing import Mapping
 import jax
 
 from repro.core import registry
-from repro.core.cost_model import TileWorkload
+from repro.core.cost_model import DRAM_PAGE_BYTES, TileWorkload
 from repro.core.tiling import TileConstraints, TileShape, cdiv, dtype_bytes
+from repro.kernels.flash_attention.decode import MIN_GROUP_ROWS, flash_decode
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_dense_ref, flash_attention_ref
 
@@ -91,4 +99,98 @@ registry.register(registry.KernelSpec(
     workload=_workload,
     n_tiles=_n_tiles,
     default_tile=_default_tile,
+))
+
+
+# ---------------------------------------------------------------------------
+# flash_decode: split-KV decode attention (one query over the cache).
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "scale", "bkv", "interpret"),
+)
+def attend_decode(q, k, v, *, pos, kv_pos=None, window=None, softcap=None,
+                  scale=None, bkv=512, interpret=False):
+    return flash_decode(
+        q, k, v, pos=pos, kv_pos=kv_pos, window=window, softcap=softcap,
+        scale=scale, bkv=bkv, interpret=interpret,
+    )
+
+
+def _group_rows(problem: Mapping[str, int]) -> int:
+    """Resident grouped-query rows per KV head, as the kernel pads them."""
+    return max(problem["hq"] // max(problem["hkv"], 1), MIN_GROUP_ROWS)
+
+
+def _decode_constraints(problem: Mapping[str, int]) -> TileConstraints:
+    # bkv is the lane dim of the [rep, bkv] logits block and the N dim of
+    # the q @ k^T MXU op; it wants lane (128) multiples.
+    return TileConstraints(
+        rank=1, max_dims=(problem["skv"],), mxu_dims=(0,), lane_dim=0,
+    )
+
+
+def _decode_vmem_bytes(tile: TileShape, problem: Mapping[str, int],
+                       dtype: str) -> float:
+    bkv = tile[0]
+    d = problem["d"]
+    b = dtype_bytes(dtype)
+    rep_p = _group_rows(problem)
+    kv_tiles = 2 * bkv * d * b                  # the streamed K and V blocks
+    resident = 2 * rep_p * d * b                # grouped q rows + out block
+    scratch = rep_p * 128 * 4 * 2 + rep_p * d * 4
+    logits = rep_p * bkv * 4
+    return kv_tiles + resident + scratch + logits
+
+
+def _decode_workload(tile: TileShape, problem: Mapping[str, int],
+                     dtype: str) -> TileWorkload:
+    bkv = tile[0]
+    d = problem["d"]
+    b = dtype_bytes(dtype)
+    rep = max(problem["hq"] // max(problem["hkv"], 1), 1)
+    window = problem.get("window", 0)
+    # Decode visits every key up to ``pos`` (~ the whole cache in steady
+    # state); a sliding window bounds the visited fraction like prefill.
+    if window:
+        visit = min(1.0, (window + bkv) / problem["skv"])
+    else:
+        visit = 1.0
+    n_kv = cdiv(problem["skv"], bkv)
+    flops = 2.0 * rep * bkv * d * 2 * visit          # qk^T and pv
+    # K/V stream dominates; the resident q/out block amortizes over the KV
+    # loop; each grid step re-issues the two stream DMAs (descriptor setup
+    # ~ one DRAM page each) — the fixed per-split cost that makes tiny bkv
+    # lose even though the streamed bytes are identical.
+    rep_p = _group_rows(problem)
+    hbm = (
+        2 * bkv * d * b * visit
+        + (2 * rep_p * d * b) / n_kv
+        + 2 * DRAM_PAGE_BYTES
+    )
+    return TileWorkload(
+        flops=flops,
+        hbm_bytes=hbm,
+        row_segments=bkv // 8,
+        row_stride_bytes=float(d * b),
+        pad_waste=max(1.0, 8 / rep) * max(1.0, 128 / d),
+    )
+
+
+def _decode_n_tiles(tile: TileShape, problem: Mapping[str, int]) -> int:
+    return problem["b"] * problem["hkv"] * cdiv(problem["skv"], tile[0])
+
+
+def _decode_default_tile(problem: Mapping[str, int], dtype: str) -> TileShape:
+    return TileShape((min(512, problem["skv"]),))
+
+
+registry.register(registry.KernelSpec(
+    name="flash_decode",
+    constraints=_decode_constraints,
+    vmem_bytes=_decode_vmem_bytes,
+    workload=_decode_workload,
+    n_tiles=_decode_n_tiles,
+    default_tile=_decode_default_tile,
 ))

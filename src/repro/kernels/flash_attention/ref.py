@@ -27,6 +27,20 @@ from repro.models import flags
 NEG_INF = -2.0e30
 
 
+def fit_bkv(bkv: int, s: int) -> int:
+    """Clamp then snap a KV chunk to the largest divisor of ``s`` <= it.
+
+    The single source of truth for the chunk a reference lowering actually
+    runs when a requested (plan) chunk does not divide the sequence — the
+    tile-event ``effective`` fields in ``models.attention`` report exactly
+    this value.
+    """
+    bkv = min(int(bkv), s)
+    if s % bkv:
+        bkv = next(c for c in range(bkv, 0, -1) if s % c == 0)
+    return bkv
+
+
 def _logits_mask(q_pos, k_pos, causal: bool, window: Optional[int]):
     """[Sq, Skv] boolean mask of *visible* positions."""
     mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
@@ -89,11 +103,9 @@ def flash_attention_ref(
     assert hq % hkv == 0, (hq, hkv)
     n_rep = hq // hkv
     scale = scale if scale is not None else d ** -0.5
-    chunk = min(chunk, skv)
-    if skv % chunk:
-        # Largest divisor of skv <= requested chunk (e.g. whisper's 1500
-        # encoder frames with a 512 request -> 375).
-        chunk = next(c for c in range(chunk, 0, -1) if skv % c == 0)
+    # Largest divisor of skv <= requested chunk (e.g. whisper's 1500
+    # encoder frames with a 512 request -> 375).
+    chunk = fit_bkv(chunk, skv)
     n_chunks = skv // chunk
 
     # GQA: repeat kv up to the q-head count. jnp.repeat partitions cleanly

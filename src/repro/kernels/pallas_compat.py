@@ -1,0 +1,13 @@
+"""Version shims for the Pallas TPU API surface the kernels use.
+
+The kernels target the current API (``pltpu.CompilerParams``); older jax
+releases (< 0.6) expose the same dataclass as ``pltpu.TPUCompilerParams``.
+Resolving the name at import time keeps every kernel source identical across
+environments instead of gating each call site.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

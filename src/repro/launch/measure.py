@@ -62,6 +62,33 @@ def _flash_call(problem: Mapping[str, int], dtype: str):
     return lambda tile: attend(q, k, v, window=window, tile=tuple(tile))
 
 
+def _flash_decode_call(problem: Mapping[str, int], dtype: str):
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_attention.ops import attend_decode
+
+    rng = np.random.default_rng(0)
+    b, skv, d = problem["b"], problem["skv"], problem["d"]
+    hq, hkv = problem["hq"], problem["hkv"]
+    window = problem.get("window", 0) or None
+    dt = _np_dtype(dtype)
+    q = jnp.asarray(rng.standard_normal((b, hq, d)), dt)
+    k = jnp.asarray(rng.standard_normal((b, hkv, skv, d)), dt)
+    v = jnp.asarray(rng.standard_normal((b, hkv, skv, d)), dt)
+    pos = jnp.asarray(skv - 1, jnp.int32)       # steady state: full cache
+
+    def call(tile):
+        if skv % int(tile[0]):
+            # The Pallas kernel cannot run a non-dividing split; score it
+            # infeasible so the sweep never certifies a tile the serve
+            # path would then reject.
+            return None
+        return attend_decode(q, k, v, pos=pos, window=window,
+                             bkv=int(tile[0]))
+
+    return call
+
+
 def _ssd_call(problem: Mapping[str, int], dtype: str):
     import jax.numpy as jnp
 
@@ -108,6 +135,7 @@ def _bilinear_call(problem: Mapping[str, int], dtype: str):
 _BUILDERS = {
     "matmul": _matmul_call,
     "flash_attention": _flash_call,
+    "flash_decode": _flash_decode_call,
     "ssd": _ssd_call,
     "rglru": _rglru_call,
     "bilinear": _bilinear_call,
@@ -136,7 +164,10 @@ def make_measure_fn(
     """A tile -> wall-clock-seconds hook for one cell, or None.
 
     None (analytic fallback) when no real TPU backend is present, the target
-    descriptor is not TPU-family, or the kernel has no operand builder.
+    descriptor is not TPU-family, or the kernel has no operand builder. A
+    builder call may itself return None for a candidate its kernel cannot
+    legally run (e.g. a non-dividing decode split); that candidate measures
+    +inf and never wins the sweep.
     """
     if not hardware_available(hw):
         return None
@@ -144,13 +175,18 @@ def make_measure_fn(
     if builder is None:
         log.info("no wallclock builder for kernel %r; analytic only", kernel)
         return None
+    import math
+
     import jax
 
     call = builder(problem, dtype)
 
     def measure(tile: TileShape) -> float:
         for _ in range(warmup):  # first iteration compiles
-            jax.block_until_ready(call(tile))
+            out = call(tile)
+            if out is None:
+                return math.inf
+            jax.block_until_ready(out)
         t0 = time.perf_counter()
         out = None
         for _ in range(iters):

@@ -47,14 +47,27 @@ def kernel_problems(cfg: ArchConfig, batch: int, seq_len: int,
         # it dominates cost, and a window-limited problem would mischaracterize
         # the full-attention layers (per-layer plans are a ROADMAP item).
         window = cfg.attn_window if "attn" not in mixers else 0
-        problems["flash_attention"] = dict(
-            sq=1 if decode else seq_len,
-            skv=seq_len,
-            d=cfg.head_dim_,
-            hq=max(cfg.n_heads, 1),
-            hkv=max(cfg.n_kv_heads, 1),
-            window=window,
-        )
+        if decode:
+            # Decode is its own kernel (split-KV flash decode), not a
+            # degenerate sq=1 prefill cell: the tunable axis is the KV
+            # split size and the sensitivity curve is decode's own.
+            problems["flash_decode"] = dict(
+                b=batch,
+                skv=seq_len,
+                d=cfg.head_dim_,
+                hq=max(cfg.n_heads, 1),
+                hkv=max(cfg.n_kv_heads, 1),
+                window=window,
+            )
+        else:
+            problems["flash_attention"] = dict(
+                sq=seq_len,
+                skv=seq_len,
+                d=cfg.head_dim_,
+                hq=max(cfg.n_heads, 1),
+                hkv=max(cfg.n_kv_heads, 1),
+                window=window,
+            )
     if "rglru" in mixers and cfg.recurrent is not None:
         problems["rglru"] = dict(
             s=1 if decode else seq_len,

@@ -2,24 +2,71 @@
 q-k norms, head padding for TP, and KV caches (full and ring-buffer).
 
 The full-sequence path lowers through the chunked flash reference (same math
-as the Pallas kernel; see kernels/flash_attention). Decode attends densely
-over the cache (O(S) memory for a single query). On real TPU deployments the
-prefill path swaps in the Pallas kernel via ``impl="pallas"``.
+as the Pallas kernel; see kernels/flash_attention). Decode dispatches on the
+plan-resolved decode tile: with a tile it lowers through the split-KV
+flash-decode kernel (Pallas on TPU, the chunked online-softmax reference
+elsewhere — the tile's ``bkv`` is the KV split on both); without one it
+attends densely over the cache (the pre-plan behavior). On real TPU
+deployments the prefill path swaps in the Pallas kernel via
+``impl="pallas"``.
+
+Tile-dispatch observability: every call that received a plan tile emits a
+trace-time event through :func:`capture_tile_events` saying whether the tile
+legally applied or the lowering silently degraded (clamped to a
+non-dividing block -> reference fallback / adjusted chunk). The serve
+engine records these as ``tile_fallback`` plan-counter entries so
+``plan_hit_rate`` reflects decode/prefill tile misses, not just plan-store
+lookups.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+import contextlib
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import flags
+from repro.kernels.flash_attention.decode import (
+    fit_bkv, flash_decode, flash_decode_ref,
+)
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.models.layers import ParamDef, apply_rope, rms_norm
 
 NEG_INF = -2.0e30
+
+# ---------------------------------------------------------------------------
+# Tile-dispatch events. Emitted at TRACE time (tile legality is a static
+# shape decision), so a sink sees one event per compiled program per
+# attention call site — cheap, and exactly when a plan tile goes unused.
+# ---------------------------------------------------------------------------
+
+_tile_event_sink: Optional[Callable[[Dict[str, Any]], None]] = None
+
+
+@contextlib.contextmanager
+def capture_tile_events(sink: Callable[[Dict[str, Any]], None]):
+    """Route tile-dispatch events emitted under this context to ``sink``.
+
+    Events are dicts: ``kernel`` (flash_attention | flash_decode), ``phase``
+    (prefill | decode), ``impl`` (the lowering actually used), ``tile`` (the
+    requested dims), ``effective`` (the parameter the lowering really used)
+    and ``fallback`` (True when the plan's tile did not legally apply).
+    """
+    global _tile_event_sink
+    prev = _tile_event_sink
+    _tile_event_sink = sink
+    try:
+        yield
+    finally:
+        _tile_event_sink = prev
+
+
+def _emit_tile_event(**event) -> None:
+    if _tile_event_sink is not None:
+        _tile_event_sink(dict(event))
 
 
 def attn_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
@@ -108,15 +155,29 @@ def attn_forward(
         softcap=cfg.attn_softcap or None, scale=scale,
     )
     t = (min(tile[0], s), min(tile[1], s)) if tile is not None else None
+    divides = t is not None and s % t[0] == 0 and s % t[1] == 0
     if impl == "auto":
-        impl = "pallas" if (flags.pallas_enabled() and t is not None
-                            and s % t[0] == 0 and s % t[1] == 0) \
+        impl = "pallas" if (flags.pallas_enabled() and divides) \
             else "reference"
     if impl == "pallas":
         out = flash_attention(q, k, v, tile=t or (512, 512), **kwargs)
+        if tile is not None:
+            _emit_tile_event(kernel="flash_attention", phase="prefill",
+                             impl="pallas", tile=tuple(tile),
+                             effective=t, fallback=False)
     else:
         if tile is not None:
-            chunk = int(tile[1])
+            chunk = min(int(tile[1]), s)
+            # The clamp can land on a non-dividing chunk; the reference
+            # then snaps to the largest divisor, silently abandoning the
+            # plan's bkv. Count it (and the Pallas-eligible-but-illegal
+            # case) instead of hiding it.
+            effective = fit_bkv(chunk, s)
+            fallback = (effective != chunk
+                        or (flags.pallas_enabled() and not divides))
+            _emit_tile_event(kernel="flash_attention", phase="prefill",
+                             impl="reference", tile=tuple(tile),
+                             effective=effective, fallback=fallback)
         else:
             chunk = 2048 if flags.ANALYSIS_UNROLL else 512
         out = flash_attention_ref(q, k, v, chunk=min(chunk, s), **kwargs)
@@ -232,8 +293,21 @@ def _decode_attn_sharded(cfg: ArchConfig, ctx, qd, k_new, v_new, cache,
 def attn_decode(
     p, cfg: ArchConfig, x, *, cache: Dict[str, Any],
     window: Optional[int] = None, ctx=None,
+    tile=None, impl: str = "auto",
 ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
-    """Single-token decode: x [B, 1, D]; dense masked attend over the cache."""
+    """Single-token decode: x [B, 1, D]; attend over the cache.
+
+    ``tile`` is the plan-resolved decode tile (``TileShape`` or tuple whose
+    last dim is ``bkv``, the split-KV chunk). ``impl``: "auto" picks the
+    Pallas flash-decode kernel on TPU backends when the tile legally divides
+    the cache length, the chunked flash-decode reference when a tile is
+    present elsewhere (``bkv`` sets the online-softmax KV split — a resolved
+    plan changes the lowered computation on every backend), and the dense
+    masked attend when no tile resolved (the pre-plan lowering). "dense" /
+    "flash_ref" / "pallas" force a path. The sequence-sharded flash-decoding
+    path (``flags.DECODE_ATTN_SHARDED``) keeps its own tiling — the split is
+    the mesh axis — and ignores ``tile``.
+    """
     b = x.shape[0]
     pos = cache["pos"]                                   # scalar int32
     positions = jnp.broadcast_to(pos[None, None], (b, 1))
@@ -267,29 +341,62 @@ def attn_decode(
         k_pos = jnp.arange(max_len)
         valid = k_pos <= pos
 
-    mask = valid & (k_pos <= pos)
-    if window is not None:
-        mask &= k_pos > pos - window
+    bkv = int(tile[-1]) if tile is not None else None
+    clamped = min(bkv, max_len) if bkv is not None else None
+    divides = clamped is not None and max_len % clamped == 0
+    auto = impl == "auto"
+    if auto:
+        if bkv is None:
+            impl = "dense"
+        elif flags.pallas_enabled() and divides:
+            impl = "pallas"
+        else:
+            impl = "flash_ref"
+    if tile is not None:
+        effective = fit_bkv(clamped, max_len)
+        if impl == "pallas":
+            fallback = False
+        elif impl == "dense":
+            fallback = True                 # forced dense ignores the tile
+        else:                               # flash_ref: ran, but at the
+            fallback = effective != clamped  # snapped (not the plan's) split
+        _emit_tile_event(
+            kernel="flash_decode", phase="decode", impl=impl,
+            tile=tuple(tile), effective=effective, fallback=fallback,
+        )
 
-    hq, hkv = cfg.padded_heads, cfg.padded_kv_heads
-    n_rep = hq // hkv
-    # GQA via kv repeat (gather) — partitions cleanly under head sharding.
-    # Keep K/V in cache dtype: upcasting a 32k-seq cache to f32 would
-    # materialize gigabytes per layer; the MXU accumulates in f32 anyway
-    # (preferred_element_type).
-    ke = jnp.repeat(ck, n_rep, axis=1) if n_rep > 1 else ck
-    ve = jnp.repeat(cv, n_rep, axis=1) if n_rep > 1 else cv
-    qd = q[:, :, 0].astype(ke.dtype)                      # [B, Hq, hd]
-    s = jnp.einsum(
-        "bhk,bhsk->bhs", qd, ke, preferred_element_type=jnp.float32,
-    ) * scale                                             # [B, Hq, S] f32
-    if cfg.attn_softcap:
-        s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
-    s = jnp.where(mask[None, None], s, NEG_INF)
-    pattn = jax.nn.softmax(s, axis=-1).astype(ve.dtype)
-    out = jnp.einsum(
-        "bhs,bhsk->bhk", pattn, ve, preferred_element_type=jnp.float32,
-    )[:, :, None].astype(x.dtype)                          # [B, Hq, 1, hd]
+    softcap = cfg.attn_softcap or None
+    if impl in ("pallas", "flash_ref"):
+        fn = flash_decode if impl == "pallas" else flash_decode_ref
+        out = fn(
+            q[:, :, 0], ck, cv, pos=pos, kv_pos=slot_pos, window=window,
+            softcap=softcap, scale=scale, bkv=clamped or 512,
+        )[:, :, None]                                      # [B, Hq, 1, hd]
+        out = out.astype(x.dtype)
+    else:
+        mask = valid & (k_pos <= pos)
+        if window is not None:
+            mask &= k_pos > pos - window
+
+        hq, hkv = cfg.padded_heads, cfg.padded_kv_heads
+        n_rep = hq // hkv
+        # GQA via kv repeat (gather) — partitions cleanly under head
+        # sharding. Keep K/V in cache dtype: upcasting a 32k-seq cache to
+        # f32 would materialize gigabytes per layer; the MXU accumulates in
+        # f32 anyway (preferred_element_type).
+        ke = jnp.repeat(ck, n_rep, axis=1) if n_rep > 1 else ck
+        ve = jnp.repeat(cv, n_rep, axis=1) if n_rep > 1 else cv
+        qd = q[:, :, 0].astype(ke.dtype)                  # [B, Hq, hd]
+        s = jnp.einsum(
+            "bhk,bhsk->bhs", qd, ke, preferred_element_type=jnp.float32,
+        ) * scale                                         # [B, Hq, S] f32
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        pattn = jax.nn.softmax(s, axis=-1).astype(ve.dtype)
+        out = jnp.einsum(
+            "bhs,bhsk->bhk", pattn, ve, preferred_element_type=jnp.float32,
+        )[:, :, None].astype(x.dtype)                      # [B, Hq, 1, hd]
     y = _out_proj(p, cfg, out, x.dtype)
     new_cache = {"k": ck, "v": cv, "pos": pos + 1}
     if slot_pos is not None:

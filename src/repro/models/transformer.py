@@ -188,7 +188,8 @@ def _mixer(p, cfg: ArchConfig, spec: LayerSpec, x, positions, cache,
         window = cfg.attn_window if spec.mixer == "local_attn" else None
         if decode:
             return attn_mod.attn_decode(p["attn"], cfg, x, cache=cache,
-                                        window=window, ctx=ctx)
+                                        window=window, ctx=ctx,
+                                        tile=tiles.get("flash_decode"))
         return attn_mod.attn_forward(p["attn"], cfg, x, positions,
                                      window=window, cache=cache,
                                      tile=tiles.get("flash_attention"))

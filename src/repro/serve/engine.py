@@ -40,6 +40,7 @@ from repro.core.hardware import PRODUCTION_TARGET, HardwareModel
 from repro.core.plans import PlanResolution, PlanTransferWarning, TilePlan
 from repro.core.tiling import TileShape
 from repro.models import api
+from repro.models import attention as attn_mod
 from repro.serve.metrics import ServeMetrics
 from repro.serve.scheduler import FifoScheduler
 
@@ -95,6 +96,40 @@ class ServeEngine:
         # family gets its own exactly-resolved tiles (see _prefill_fn).
         self._prefill_fns: Dict[int, Any] = {}
         self._prefill_sources: Dict[int, Dict[str, str]] = {}
+        # Tile-dispatch events fire once per jit trace; cache them per
+        # length and replay per admitted request so tile_fallback counts in
+        # the same unit as the per-request plan-source counters above. The
+        # decode program's (deduped) events record once per engine — the
+        # same unit as its per-engine plan-source counts from
+        # ``_resolve_tiles``. None = decode not yet traced.
+        self._prefill_tile_events: Dict[int, List[Dict[str, Any]]] = {}
+        self._decode_tile_events: Optional[List[Dict[str, Any]]] = None
+
+    @staticmethod
+    def _dedupe_events(events: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+        """Drop retrace duplicates (eval_shape / checkpoint passes and
+        identical per-layer call sites re-emit the same event)."""
+        seen, out = set(), []
+        for ev in events:
+            key = tuple(sorted((k, str(v)) for k, v in ev.items()))
+            if key not in seen:
+                seen.add(key)
+                out.append(ev)
+        return out
+
+    def _record_tile_event(self, event: Dict[str, Any]) -> None:
+        """Trace-time tile-dispatch events -> plan counters.
+
+        A ``fallback`` event means a resolved plan tile did NOT legally
+        apply at the call site (clamped to a non-dividing block, or a
+        Pallas-eligible tile degraded to the reference lowering); counting
+        it as ``tile_fallback`` makes ``plan_hit_rate`` reflect the tiles
+        the compiled programs actually consumed, not just the plan-store
+        lookups.
+        """
+        if event.get("fallback"):
+            self.metrics.record_plan(event["phase"], event["kernel"],
+                                     "tile_fallback")
 
     def _resolve_tiles(self, plans: TilePlan) -> None:
         """Resolve decode-path kernel tiles from the plan store. No sweeps."""
@@ -187,7 +222,17 @@ class ServeEngine:
             for kernel, source in self._prefill_sources[len(prompt)].items():
                 self.metrics.record_plan("prefill", kernel, source)
             batch = {"tokens": jnp.asarray(prompt[None])}
-            logits, state = prefill(self.params, batch)
+            events = self._prefill_tile_events.get(len(prompt))
+            if events is None:
+                captured: List[Dict[str, Any]] = []
+                with attn_mod.capture_tile_events(captured.append):
+                    logits, state = prefill(self.params, batch)
+                events = self._dedupe_events(captured)
+                self._prefill_tile_events[len(prompt)] = events
+            else:
+                logits, state = prefill(self.params, batch)
+            for ev in events:
+                self._record_tile_event(ev)
             tok = int(jnp.argmax(logits[0, :self.cfg.vocab_size]))
             req.out_tokens.append(tok)
             self.metrics.record_first_token(req.rid, req.bucket)
@@ -216,8 +261,17 @@ class ServeEngine:
             n += 1
             active_buckets.append(req.bucket)
             last = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
-            logits, self._states[i] = self._decode(
-                self.params, last, self._states[i])
+            if self._decode_tile_events is None:
+                captured: List[Dict[str, Any]] = []
+                with attn_mod.capture_tile_events(captured.append):
+                    logits, self._states[i] = self._decode(
+                        self.params, last, self._states[i])
+                self._decode_tile_events = self._dedupe_events(captured)
+                for ev in self._decode_tile_events:
+                    self._record_tile_event(ev)
+            else:
+                logits, self._states[i] = self._decode(
+                    self.params, last, self._states[i])
             tok = int(jnp.argmax(logits[0, :self.cfg.vocab_size]))
             req.out_tokens.append(tok)
             if len(req.out_tokens) >= req.max_new_tokens:

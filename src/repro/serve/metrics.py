@@ -26,10 +26,13 @@ from collections import Counter, defaultdict
 from typing import Callable, Dict, Optional
 
 # Resolution sources, in decreasing order of trustworthiness. "fallback" is
-# the heuristic default tile (plan had nothing usable); "no_plan" means the
-# engine was constructed without an artifact at all.
+# the heuristic default tile (plan had nothing usable); "tile_fallback"
+# means a resolved tile did not legally apply at the kernel call site (the
+# lowering degraded to a reference path or an adjusted chunk — see
+# ``models.attention.capture_tile_events``); "no_plan" means the engine was
+# constructed without an artifact at all.
 PLAN_SOURCES = ("exact", "nearest_shape", "cross_hardware", "fallback",
-                "no_plan")
+                "tile_fallback", "no_plan")
 
 
 @dataclasses.dataclass
@@ -156,6 +159,7 @@ class ServeMetrics:
                 "by_phase": {k: dict(v) for k, v in sorted(by_phase.items())},
                 "hit_rate": self.plan_hit_rate(),
                 "hit_rate_prefill": self.plan_hit_rate("prefill"),
+                "hit_rate_decode": self.plan_hit_rate("decode"),
                 "by_kernel": {k: dict(c) for k, c in sorted(
                     self.plan_by_kernel.items())},
             },
@@ -173,7 +177,8 @@ class ServeMetrics:
             f"  queue depth: max {d['queue_depth']['max']}, "
             f"mean {d['queue_depth']['mean']:.1f}",
             f"  plan hit rate: {d['plan']['hit_rate']:.2f} "
-            f"(prefill {d['plan']['hit_rate_prefill']:.2f}) "
+            f"(prefill {d['plan']['hit_rate_prefill']:.2f}, "
+            f"decode {d['plan']['hit_rate_decode']:.2f}) "
             f"counts {d['plan']['counts']}",
         ]
         for label, table in (("ttft", d["ttft_s"]), ("tpot", d["tpot_s"])):

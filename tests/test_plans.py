@@ -331,6 +331,74 @@ def test_compile_plans_cli_serve_buckets(tmp_path):
         "float32", "tpu_v5e") is not None
 
 
+# -- decode cells: the paper's cross-model claim, asserted for decode --------
+
+def _decode_prob(skv, b=4, d=128, hq=12, hkv=2, window=0):
+    return dict(b=b, skv=skv, d=d, hq=hq, hkv=hkv, window=window)
+
+
+DECODE_CACHE_LENS = (1024, 8192, 32768)
+
+
+def test_decode_cells_pick_different_bkv_across_hardware():
+    """Compile decode-cell plans for two modelled hardware targets and
+    assert the cost model picks a different KV split for at least one cell
+    — the paper's cross-model claim, now asserted for the decode kernel."""
+    from repro.core.plans import compile_entry
+
+    best = {}
+    for hw in (TPU_V5E, TPU_V6E):
+        for skv in DECODE_CACHE_LENS:
+            entry = compile_entry("flash_decode", _decode_prob(skv),
+                                  "float32", hw)
+            best[(hw.name, skv)] = entry.tile[0]
+    diverged = [skv for skv in DECODE_CACHE_LENS
+                if best[("tpu_v5e", skv)] != best[("tpu_v6e", skv)]]
+    assert diverged, f"no decode cell diverged across hardware: {best}"
+
+
+def test_decode_cell_goldens():
+    """Golden tiles: VMEM capacity bounds the split size per model (v6e has
+    2x the VMEM of v5e, so its K/V double-buffer admits a 2x split), and
+    small caches keep the whole-cache split (one DMA, no combine)."""
+    from repro.core.plans import compile_entry
+
+    expect = {
+        ("tpu_v5e", 1024): 1024,
+        ("tpu_v5e", 8192): 4096,
+        ("tpu_v5e", 32768): 4096,
+        ("tpu_v6e", 1024): 1024,
+        ("tpu_v6e", 8192): 8192,
+        ("tpu_v6e", 32768): 8192,
+    }
+    for (hw_name, skv), bkv in expect.items():
+        hw = TPU_V5E if hw_name == "tpu_v5e" else TPU_V6E
+        entry = compile_entry("flash_decode", _decode_prob(skv), "float32",
+                              hw)
+        assert entry.tile.dims == (bkv,), (
+            f"{hw_name} skv={skv}: got {entry.tile}, want ({bkv},)")
+        assert entry.dominant == "memory"      # decode is bandwidth-bound
+        assert entry.sensitivity > 1.0         # the curve is not flat
+        assert entry.curve[0][0] == entry.tile.dims
+
+
+def test_decode_cells_resolve_for_serve_geometry():
+    """kernel_problems' decode cells include flash_decode, and a plan
+    compiled from them resolves exactly for the engine geometry."""
+    cfg = configs.get_smoke("qwen2-1.5b")
+    probs = kernel_problems(cfg, 2, 64, "decode")
+    assert "flash_decode" in probs
+    assert probs["flash_decode"]["skv"] == 64
+    assert probs["flash_decode"]["b"] == 2
+    assert "flash_attention" not in probs      # decode is its own kernel
+    assert "flash_attention" in kernel_problems(cfg, 2, 64, "prefill")
+    plan = _precompiled_plan(probs)
+    res = plan.resolve("flash_decode", probs["flash_decode"], "float32",
+                       PRODUCTION_TARGET)
+    assert res is not None and res.source == "exact"
+    assert 64 % res.tile[0] == 0               # legal split for the cache
+
+
 # -- wall-clock measure path -------------------------------------------------
 
 def test_measure_fn_gated_off_without_tpu():
