@@ -1,0 +1,298 @@
+"""Chunked vs monolithic prefill under a mixed small/long request trace.
+
+The head-of-line scenario the chunked scheduler exists for: a long prompt
+(the "32k" class) is admitted just before a burst of small prompts (the
+"512" class). With monolithic prefill the whole long prompt occupies one
+engine step, so every queued small request's first token waits behind it;
+with chunked prefill the engine builds mixed steps — one plan-sized prefill
+chunk co-scheduled with the decode batch under a per-step token budget —
+and small prefills overtake between chunks.
+
+Both arms drive the real ``ServeEngine`` (identical model, plan, trace, and
+greedy outputs) on a **cost-model virtual clock**: after every engine step
+the clock advances by the step's modeled seconds (tokens processed x the
+plan's per-token prefill/decode cost + a fixed step overhead), so the
+TTFT/TPOT comparison is deterministic, hardware-independent, and measures
+exactly what this subsystem changes — the schedule, not the arithmetic.
+``--smoke`` scales the trace to the reduced config (long = top bucket edge)
+so CI finishes in seconds; the full trace uses the literal 512/32k mix.
+
+Asserted invariants (exit 1 on violation; CI runs ``--smoke``):
+  1. p95 small-request TTFT: chunked < unchunked on the mixed trace;
+  2. equal work both arms: same completions, same greedy tokens, and
+     chunked total virtual time within ``MAX_SLOWDOWN`` of unchunked
+     (the chunk-overhead bound — "equal total throughput");
+  3. the ``chunked_prefill`` plan cell compiles *different chunk lengths*
+     on tpu_v5e vs tpu_v6e at the full-dims 32k prompt (the paper's
+     per-hardware-model optimum, applied to the chunk-length tile axis);
+  4. a prompt longer than every bucket edge is admitted via chunking and
+     completes (the overflow-admission fix), instead of being dropped.
+
+``--plans plans.json`` reuses a compiled artifact (the CI workflow passes
+the compile-plans job's artifact) instead of recompiling; the bench falls
+back to compiling its own serving cells when the artifact is missing or
+does not cover the bench's shape family.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+SMOKE = dict(
+    edges=(64, 1024),
+    small_lens=(10, 24, 40, 60, 18, 33, 51, 12, 45, 28),
+    long_lens=(900, 980),
+    new_tokens=3,
+    slots=2,
+    step_token_budget=80,
+    arrivals_per_step=2,
+)
+FULL = dict(
+    edges=(512, 32768),
+    small_lens=(120, 300, 480, 200, 410, 90, 350, 260, 440, 160),
+    long_lens=(30000, 32000),
+    new_tokens=3,
+    slots=2,
+    step_token_budget=2600,
+    arrivals_per_step=2,
+)
+HARDWARE = "tpu_v5e"
+DIVERGENCE_HW = ("tpu_v5e", "tpu_v6e")
+ARCH = "qwen2-1.5b"
+STEP_OVERHEAD_S = 20e-6
+MAX_SLOWDOWN = 1.5
+
+
+class VirtualClock:
+    """Injectable engine clock; the driver advances it between steps."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def make_trace(params: dict, rng: np.random.Generator,
+               vocab: int) -> List[np.ndarray]:
+    """Long prompt first, then the small burst, then the second long —
+    the head-of-line pattern."""
+    lens = [params["long_lens"][0], *params["small_lens"][:6],
+            params["long_lens"][1], *params["small_lens"][6:]]
+    return [rng.integers(2, vocab, size=int(n)).astype(np.int32)
+            for n in lens]
+
+
+def load_or_compile_plan(path: Optional[str], cfg, edges, slots: int,
+                         max_len: int, print_fn) -> object:
+    """Reuse a compiled artifact when it covers this bench's shape family;
+    compile the serving cells otherwise."""
+    del cfg  # the serving cells are derived from ARCH's smoke config
+    from repro.launch.compile_plans import (
+        load_or_compile_cells, serve_bucket_cells,
+    )
+
+    cells = serve_bucket_cells([ARCH], edges, slots, max_len, smoke=True)
+    return load_or_compile_cells(
+        path, cells, (HARDWARE,),
+        meta={"generated_by": "bench_chunked_prefill"}, print_fn=print_fn)
+
+
+FULL_REF_LEN = 32768  # the prefill cell the per-token cost is taken from
+
+
+def step_cost_model(slots: int, max_len: int):
+    """(per-prefill-token s, per-decode-step s) for the virtual clock.
+
+    Costed at the FULL architecture's dims — the smoke trace scales the
+    executed lengths down so CI finishes in seconds, but the clock keeps
+    the real cost regime, where a monolithic long prefill is orders of
+    magnitude above the per-step overhead. Prefill is per-token from the
+    32k flash_attention cell; decode is one slot-batch step over the
+    engine's actual cache length. Both arms use the same constants, so
+    only the schedule differs.
+    """
+    from repro import configs
+    from repro.core import HARDWARE_REGISTRY, Autotuner
+    from repro.core.plans import compile_entry
+    from repro.launch.specs import kernel_problems
+
+    cfg_full = configs.get_arch(ARCH)
+    hw = HARDWARE_REGISTRY[HARDWARE]
+    tuner = Autotuner()
+    pf_prob = kernel_problems(cfg_full, 1, FULL_REF_LEN,
+                              "prefill")["flash_attention"]
+    t_pf = compile_entry("flash_attention", pf_prob, "float32", hw,
+                         autotuner=tuner).score_s / FULL_REF_LEN
+    dec_prob = kernel_problems(cfg_full, slots, max_len,
+                               "decode")["flash_decode"]
+    t_dec = compile_entry("flash_decode", dec_prob, "float32", hw,
+                          autotuner=tuner).score_s
+    return t_pf, t_dec
+
+
+def drive(engine, clock: VirtualClock, trace, new_tokens: int,
+          arrivals_per_step: int, t_pf: float, t_dec: float,
+          max_steps: int = 20000) -> Dict[int, float]:
+    """Open-loop virtual-time drive; returns rid -> submit virtual time."""
+    submit_t: Dict[int, float] = {}
+    i = 0
+    for tick in range(max_steps):
+        while i < len(trace) and i < arrivals_per_step * (tick + 1):
+            rid = engine.add_request(trace[i], max_new_tokens=new_tokens)
+            assert rid is not None, f"trace request {i} rejected"
+            submit_t[rid] = clock.t
+            i += 1
+        if not (engine.step() or engine.scheduler.pending()) \
+                and i >= len(trace):
+            break
+        stats = engine.last_step_stats
+        # One decode step advances the whole slot batch at once.
+        clock.t += (STEP_OVERHEAD_S + stats["prefill_tokens"] * t_pf
+                    + (t_dec if stats["decode_tokens"] else 0.0))
+    return submit_t
+
+
+def run(smoke: bool = False, plans_path: Optional[str] = None,
+        print_fn=print) -> int:
+    import jax
+
+    from repro import configs, kernels
+    from repro.core import HARDWARE_REGISTRY
+    from repro.models import api
+    from repro.serve import BucketPolicy, ServeEngine, ShapeBucketScheduler
+
+    kernels.register_all()
+    p = SMOKE if smoke else FULL
+    edges, slots = p["edges"], p["slots"]
+    new_tokens = p["new_tokens"]
+    small_edge, top = min(edges), max(edges)
+    max_len = top + new_tokens + 8
+    cfg = configs.get_smoke(ARCH)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    trace = make_trace(p, rng, cfg.vocab_size)
+    plan = load_or_compile_plan(plans_path, cfg, edges, slots, max_len,
+                                print_fn)
+    t_pf, t_dec = step_cost_model(slots, max_len)
+    print_fn(f"# trace: {len(trace)} requests "
+             f"({len(p['small_lens'])} small <= {small_edge}, "
+             f"{len(p['long_lens'])} long ~{top}); virtual clock "
+             f"t_pf={t_pf:.2e}s/tok t_dec={t_dec:.2e}s/step")
+
+    failures = 0
+    results = {}
+    for mode in ("unchunked", "chunked"):
+        clock = VirtualClock()
+        eng = ServeEngine(
+            cfg, params, max_len=max_len, slots=slots, plans=plan,
+            hardware=HARDWARE_REGISTRY[HARDWARE],
+            scheduler=ShapeBucketScheduler(
+                BucketPolicy(edges, max_queue=len(trace) + 1)),
+            clock=clock,
+            chunk_prefill=(mode == "chunked"),
+            step_token_budget=(p["step_token_budget"]
+                               if mode == "chunked" else 0))
+        drive(eng, clock, trace, new_tokens, p["arrivals_per_step"],
+              t_pf, t_dec)
+        m = eng.metrics.as_dict()
+        small = m["ttft_s"].get(str(small_edge), {})
+        results[mode] = dict(
+            wall=clock.t,
+            completed=eng.metrics.completed,
+            tokens={r.rid: tuple(r.out_tokens) for r in eng._finished},
+            p95=small.get("p95_s", 0.0),
+            p50=small.get("p50_s", 0.0),
+            mean=small.get("mean_s", 0.0),
+            chunks=dict(eng.metrics.chunks_per_prefill),
+        )
+        print_fn(f"{mode}: total={clock.t * 1e3:.2f}ms virtual, "
+                 f"completed={eng.metrics.completed}, small-bucket TTFT "
+                 f"mean={results[mode]['mean'] * 1e3:.2f}ms "
+                 f"p50={results[mode]['p50'] * 1e3:.2f}ms "
+                 f"p95={results[mode]['p95'] * 1e3:.2f}ms "
+                 f"chunks/prefill={results[mode]['chunks']}")
+
+    # 1. tail TTFT of small requests improves.
+    if not results["chunked"]["p95"] < results["unchunked"]["p95"]:
+        failures += 1
+        print_fn(f"FAIL: chunked small-request p95 TTFT "
+                 f"{results['chunked']['p95']:.4f}s not below unchunked "
+                 f"{results['unchunked']['p95']:.4f}s")
+    # 2. equal work: same completions and greedy tokens, bounded overhead.
+    if results["chunked"]["completed"] != results["unchunked"]["completed"]:
+        failures += 1
+        print_fn("FAIL: completion counts differ between arms")
+    if results["chunked"]["tokens"] != results["unchunked"]["tokens"]:
+        failures += 1
+        print_fn("FAIL: greedy outputs differ between arms (parity broken)")
+    if results["chunked"]["wall"] > MAX_SLOWDOWN * results["unchunked"]["wall"]:
+        failures += 1
+        print_fn(f"FAIL: chunked total virtual time "
+                 f"{results['chunked']['wall']:.4f}s exceeds "
+                 f"{MAX_SLOWDOWN}x unchunked "
+                 f"{results['unchunked']['wall']:.4f}s")
+
+    # 3. per-hardware chunk-length divergence at the full-dims 32k cell.
+    from repro.core import Autotuner
+    from repro.core.plans import compile_entry
+    from repro.launch.specs import kernel_problems
+
+    cfg_full = configs.get_arch(ARCH)
+    prob = kernel_problems(cfg_full, 1, 32768,
+                           "chunked_prefill")["chunked_prefill"]
+    chunk_by_hw = {}
+    for hw_name in DIVERGENCE_HW:
+        entry = compile_entry("chunked_prefill", prob, "float32",
+                              HARDWARE_REGISTRY[hw_name],
+                              autotuner=Autotuner())
+        chunk_by_hw[hw_name] = entry.tile[0]
+        print_fn(f"# chunked_prefill @ sq=32768 on {hw_name}: "
+                 f"tile {entry.tile} ({entry.dominant}-bound)")
+    if len(set(chunk_by_hw.values())) < 2:
+        failures += 1
+        print_fn(f"FAIL: chunk length does not diverge across "
+                 f"{DIVERGENCE_HW}: {chunk_by_hw}")
+
+    # 4. overflow admission: longer than every edge, admitted via chunking.
+    clock = VirtualClock()
+    eng = ServeEngine(
+        cfg, params, max_len=2 * top + new_tokens + 8, slots=slots,
+        plans=plan, hardware=HARDWARE_REGISTRY[HARDWARE],
+        scheduler=ShapeBucketScheduler(
+            BucketPolicy(edges, allow_overflow=True)),
+        clock=clock, chunk_prefill=True,
+        step_token_budget=p["step_token_budget"])
+    overflow = rng.integers(2, cfg.vocab_size,
+                            size=top + small_edge).astype(np.int32)
+    rid = eng.add_request(overflow, max_new_tokens=new_tokens)
+    done = eng.run_until_done(max_steps=20000)
+    if rid is None or len(done) != 1 or len(done[0].out_tokens) != new_tokens:
+        failures += 1
+        print_fn("FAIL: over-length prompt was not served via chunked "
+                 "overflow admission")
+    else:
+        print_fn(f"# overflow: len-{len(overflow)} prompt admitted at "
+                 f"bucket {done[0].bucket}, served in "
+                 f"{dict(eng.metrics.chunks_per_prefill)} chunks")
+
+    print_fn("PASS" if not failures else f"{failures} FAILURES")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="scaled trace for CI (seconds, not minutes)")
+    ap.add_argument("--plans", default=None,
+                    help="compiled TilePlan artifact to reuse (falls back "
+                         "to compiling the bench's own serving cells)")
+    args = ap.parse_args()
+    sys.exit(1 if run(smoke=args.smoke, plans_path=args.plans) else 0)
+
+
+if __name__ == "__main__":
+    main()

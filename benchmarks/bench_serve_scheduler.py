@@ -68,17 +68,22 @@ def make_trace(params: dict, rng: np.random.Generator,
             for l in lengths]
 
 
-def compile_serving_plan(edges, slots: int, max_len: int):
-    """AOT plan covering exactly the scheduler's shape family on the fleet."""
-    from repro.core import HARDWARE_REGISTRY, Autotuner
-    from repro.core.plans import compile_plan
-    from repro.launch.compile_plans import serve_bucket_cells
+def compile_serving_plan(edges, slots: int, max_len: int,
+                         plans_path=None, print_fn=print):
+    """AOT plan covering exactly the scheduler's shape family on the fleet.
+
+    ``plans_path`` reuses a compiled artifact (CI passes the compile-plans
+    job's upload) when it covers every serving cell on both hardware
+    targets; otherwise the bench compiles its own.
+    """
+    from repro.launch.compile_plans import (
+        load_or_compile_cells, serve_bucket_cells,
+    )
 
     cells = serve_bucket_cells([ARCH], edges, slots, max_len, smoke=True)
-    jobs = [(kernel, problem, "float32", HARDWARE_REGISTRY[hw])
-            for kernel, problem in cells for hw in HARDWARE]
-    return compile_plan(jobs, autotuner=Autotuner(),
-                        meta={"generated_by": "bench_serve_scheduler"})
+    return load_or_compile_cells(
+        plans_path, cells, HARDWARE,
+        meta={"generated_by": "bench_serve_scheduler"}, print_fn=print_fn)
 
 
 def drive_open_loop(submit, step, trace, new_tokens: int,
@@ -96,7 +101,7 @@ def drive_open_loop(submit, step, trace, new_tokens: int,
     return time.perf_counter() - t0
 
 
-def run(smoke: bool = False, print_fn=print) -> int:
+def run(smoke: bool = False, plans_path=None, print_fn=print) -> int:
     import jax
 
     from repro import configs, kernels
@@ -116,7 +121,8 @@ def run(smoke: bool = False, print_fn=print) -> int:
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     trace = make_trace(p, rng, cfg.vocab_size)
-    plan = compile_serving_plan(edges, slots, max_len)
+    plan = compile_serving_plan(edges, slots, max_len,
+                                plans_path=plans_path, print_fn=print_fn)
     print_fn(f"# plan: {len(plan)} cells, hardware={plan.hardware_names()}, "
              f"buckets={list(edges)}, trace={len(trace)} requests")
 
@@ -219,8 +225,11 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="small trace for CI (fewer requests/tokens)")
+    ap.add_argument("--plans", default=None,
+                    help="compiled TilePlan artifact to reuse (falls back "
+                         "to compiling the bench's own serving cells)")
     args = ap.parse_args()
-    sys.exit(1 if run(smoke=args.smoke) else 0)
+    sys.exit(1 if run(smoke=args.smoke, plans_path=args.plans) else 0)
 
 
 if __name__ == "__main__":

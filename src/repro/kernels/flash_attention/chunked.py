@@ -1,0 +1,122 @@
+"""Chunked-prefill attention: one prompt chunk over the live KV cache.
+
+Chunked prefill is the serving-side decomposition the warp/CUDA-tile papers
+make at the kernel level: one large tiled launch (the whole-prompt prefill)
+is split into schedulable sub-launches so the engine can interleave decode
+steps between them. Each sub-launch is a *continuation*: chunk N's queries
+sit at absolute positions ``start .. start+c-1`` and attend causally over
+the KV written by chunks ``0..N-1`` plus the chunk itself — exactly the
+whole-prompt computation restricted to those query rows.
+
+Two lowerings share the math:
+
+* **linear caches** reuse the existing ``q_offset`` continuation arithmetic
+  of :mod:`repro.kernels.flash_attention.flash_attention` /
+  :func:`~repro.kernels.flash_attention.ref.flash_attention_ref` — the
+  caller slices the cache to the written prefix and passes
+  ``q_offset=start`` (see ``models.attention.attn_prefill_chunk``);
+* **ring-buffer caches** need an arbitrary slot -> absolute-position map,
+  which static ``q_offset`` cannot express. :func:`flash_prefill_chunk_ref`
+  below generalizes the online-softmax reference to traced ``q_pos`` /
+  ``kv_pos`` arrays (the decode kernel's convention, lifted to ``Sq > 1``).
+
+The tunable axes of the chunked-prefill *plan cell* are ``(chunk, bkv)``:
+the chunk length (how much prompt one sub-launch covers — the resident
+query block) and the KV split streamed under it. The cell is registered in
+``ops.py``; VMEM capacity bounds the resident chunk per hardware model, so
+the same prompt length compiles different chunk sizes on different models.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ref import fit_bkv
+
+NEG_INF = -2.0e30
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "scale", "bkv"),
+)
+def flash_prefill_chunk_ref(
+    q, k, v, *, q_pos, kv_pos=None, window: Optional[int] = None,
+    softcap: Optional[float] = None, scale: Optional[float] = None,
+    bkv: int = 512,
+):
+    """Online-softmax attention of a prompt chunk over positioned keys.
+
+    q ``[B, Hq, Sq, D]`` — the chunk's queries at absolute positions
+    ``q_pos`` [Sq] (traced ok). k/v ``[B, Hkv, Skv, D]`` — the keys visible
+    to the chunk (cache history ++ the chunk's own keys); ``kv_pos`` [Skv]
+    maps each key slot to its absolute position (``-1`` = never written;
+    default linear ``arange``). A key is visible iff
+    ``0 <= kv_pos <= q_pos`` (causal continuation) and, with ``window``,
+    ``kv_pos > q_pos - window``.
+
+    GQA grouped contraction (no kv-repeat materialization), scanned over KV
+    splits of ``bkv`` — the same online-softmax update as
+    ``flash_attention_ref`` with the static ``q_offset`` causal arithmetic
+    generalized to arbitrary position maps, so ring-buffer caches chunk the
+    same way linear ones do. A non-dividing ``bkv`` snaps to the largest
+    divisor of ``Skv`` (``fit_bkv``).
+
+    NOTE: ``flash_decode_ref`` (decode.py) is the ``Sq == 1`` special case
+    of this scan. The bodies are kept separate on purpose — each reference
+    mirrors the structure of its Pallas kernel (decode: resident grouped
+    rows; chunked: resident query block) — but a change to the masking or
+    softmax-update rule in one almost certainly belongs in the other; the
+    decode==prefill parity suites in tests/test_kernels_decode.py and
+    tests/test_serve_chunked.py pin both.
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    n_rep = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    bkv = fit_bkv(bkv, skv)
+    n_kv = skv // bkv
+    if kv_pos is None:
+        kv_pos = jnp.arange(skv, dtype=jnp.int32)
+
+    qg = q.reshape(b, hkv, n_rep, sq, d).astype(jnp.float32) * scale
+    qp = jnp.asarray(q_pos, jnp.int32)
+    kc = k.reshape(b, hkv, n_kv, bkv, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hkv, n_kv, bkv, d).transpose(2, 0, 1, 3, 4)
+    pc = jnp.asarray(kv_pos, jnp.int32).reshape(n_kv, bkv)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        k_blk, v_blk, kp = xs
+        s_blk = jnp.einsum(
+            "bgrqd,bgkd->bgrqk", qg, k_blk.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )                                              # [B, Hkv, rep, Sq, bkv]
+        if softcap is not None:
+            s_blk = softcap * jnp.tanh(s_blk / softcap)
+        valid = jnp.logical_and(kp[None, :] >= 0, kp[None, :] <= qp[:, None])
+        if window is not None:
+            valid = jnp.logical_and(valid, kp[None, :] > qp[:, None] - window)
+        s_blk = jnp.where(valid[None, None, None], s_blk, NEG_INF)
+        m_cur = jnp.max(s_blk, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s_blk - m_new[..., None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum(
+            "bgrqk,bgkd->bgrqd", p, v_blk.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, n_rep, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, n_rep, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, n_rep, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, sq, d).astype(q.dtype)

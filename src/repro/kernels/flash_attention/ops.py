@@ -9,6 +9,16 @@
     tile rank 1 = (bkv,), the split-KV chunk. VMEM per step: the K/V block
     pair plus the resident grouped-query rows, stats, and logits — VMEM
     capacity is what bounds the split size per hardware model.
+``chunked_prefill`` (one prompt chunk over the live KV cache — the serving
+    scheduler's sub-launch unit; see kernels/flash_attention/chunked.py):
+    problem dims {"sq", "skv", "d", "hq", "hkv", "window"(0=none)} where
+    ``sq`` is the whole admitted prompt length;
+    tile rank 2 = (chunk, bkv) — the chunk length is a first-class tile
+    axis. One grid step is one whole chunk (queries resident, K/V streamed
+    in ``bkv`` splits), so VMEM capacity bounds the chunk per hardware
+    model and the per-chunk fixed dispatch cost penalizes tiny chunks:
+    different hardware models compile different chunk lengths for the same
+    prompt.
 """
 from __future__ import annotations
 
@@ -193,4 +203,86 @@ registry.register(registry.KernelSpec(
     workload=_decode_workload,
     n_tiles=_decode_n_tiles,
     default_tile=_decode_default_tile,
+))
+
+
+# ---------------------------------------------------------------------------
+# chunked_prefill: one prompt chunk attending over the live KV cache.
+# ---------------------------------------------------------------------------
+
+# Fixed per-chunk dispatch cost, in DRAM pages: every chunk is a separate
+# engine step (scheduler bookkeeping, program re-entry, cache-pointer DMA
+# descriptors), so halving the chunk doubles this term while the streamed
+# KV bytes stay constant. It is what makes degenerate tiny chunks lose the
+# sweep even on overhead-free TPU descriptors.
+CHUNK_STEP_PAGES = 256
+
+
+def _chunked_constraints(problem: Mapping[str, int]) -> TileConstraints:
+    # dim 0 = chunk length (the resident query block; sublane-tiled rows of
+    # the logits block, MXU M dim), dim 1 = bkv (lane dim / MXU N dim).
+    return TileConstraints(
+        rank=2, max_dims=(problem["sq"], problem["skv"]),
+        mxu_dims=(0, 1), lane_dim=1, sublane_dim=0,
+    )
+
+
+def _chunked_vmem_bytes(tile: TileShape, problem: Mapping[str, int],
+                        dtype: str) -> float:
+    chunk, bkv = tile
+    d = problem["d"]
+    b = dtype_bytes(dtype)
+    resident = chunk * d * b + chunk * d * 4      # q block + f32 accumulator
+    kv_tiles = 2 * bkv * d * b                    # streamed K and V blocks
+    scratch = chunk * 128 * 4 * 2                 # running max / denominator
+    logits = chunk * bkv * 4
+    return resident + kv_tiles + scratch + logits
+
+
+def _chunked_workload(tile: TileShape, problem: Mapping[str, int],
+                      dtype: str) -> TileWorkload:
+    chunk, bkv = tile
+    sq, d = problem["sq"], problem["d"]
+    b = dtype_bytes(dtype)
+    window = problem.get("window", 0)
+    # One grid step = one whole chunk: its queries stay resident while the
+    # visible KV prefix streams once (shared across all chunk rows). The
+    # average visible prefix over the chunks of one prompt:
+    if window:
+        visit = float(min(window + chunk, sq))
+    else:
+        visit = (sq + chunk) / 2.0
+    # Causal masking halves the MAC work per query irrespective of the
+    # chunk decomposition (inner tiles skip fully-masked blocks), so FLOPs
+    # are chunk-independent per token: 4*d per (query, visible key) pair.
+    flops = 4.0 * chunk * (sq / 2.0 if not window else visit) * d
+    hbm = (
+        2 * visit * d * b                    # K/V stream, shared by the chunk
+        + 2 * chunk * d * b                  # q in / out write
+        + CHUNK_STEP_PAGES * DRAM_PAGE_BYTES  # per-chunk dispatch (see above)
+    )
+    return TileWorkload(
+        flops=flops,
+        hbm_bytes=hbm,
+        row_segments=bkv // 8,
+        row_stride_bytes=float(d * b),
+        pad_waste=max(1.0, 128 / d),
+    )
+
+
+def _chunked_n_tiles(tile: TileShape, problem: Mapping[str, int]) -> int:
+    return problem["hq"] * cdiv(problem["sq"], tile[0])
+
+
+def _chunked_default_tile(problem: Mapping[str, int], dtype: str) -> TileShape:
+    return TileShape((min(512, problem["sq"]), min(512, problem["skv"])))
+
+
+registry.register(registry.KernelSpec(
+    name="chunked_prefill",
+    constraints=_chunked_constraints,
+    vmem_bytes=_chunked_vmem_bytes,
+    workload=_chunked_workload,
+    n_tiles=_chunked_n_tiles,
+    default_tile=_chunked_default_tile,
 ))

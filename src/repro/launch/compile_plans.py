@@ -65,20 +65,52 @@ def serve_bucket_cells(arch_names: Sequence[str], edges: Sequence[int],
                        slots: int, max_len: int, smoke: bool = False,
                        ) -> List[Tuple[str, Dict[str, int]]]:
     """The serving scheduler's shape family as deduped (kernel, problem)
-    cells: a (batch=1, seq=edge) prefill cell per bucket edge plus the
-    engine's (slots, max_len) decode cell, per architecture."""
+    cells: a (batch=1, seq=edge) prefill cell AND a chunked-prefill cell
+    (chunk length swept as a first-class tile axis) per bucket edge, plus
+    the engine's (slots, max_len) decode cell, per architecture."""
     cells: Dict[Tuple[str, Tuple[Tuple[str, int], ...]], Dict[str, int]] = {}
     get_cfg = configs.get_smoke if smoke else configs.get_arch
     for arch in arch_names:
         cfg = get_cfg(arch)
         for edge in edges:
-            for kernel, problem in kernel_problems(
-                    cfg, 1, edge, "prefill").items():
-                cells[(kernel, tuple(sorted(problem.items())))] = problem
+            for kind in ("prefill", "chunked_prefill"):
+                for kernel, problem in kernel_problems(
+                        cfg, 1, edge, kind).items():
+                    cells[(kernel, tuple(sorted(problem.items())))] = problem
         for kernel, problem in kernel_problems(
                 cfg, slots, max_len, "decode").items():
             cells[(kernel, tuple(sorted(problem.items())))] = problem
     return [(k, p) for (k, _), p in cells.items()]
+
+
+def load_or_compile_cells(plans_path, cells, hw_names: Sequence[str],
+                          dtype: str = "float32", meta=None, print_fn=print):
+    """Reuse a compiled artifact when it covers ``cells`` on every listed
+    hardware model; compile exactly those cells otherwise.
+
+    The benches' artifact-reuse path: CI passes the compile-plans job's
+    upload so bench jobs stop recompiling the serving shape family, and a
+    missing/stale/non-covering artifact degrades to a local compile.
+    """
+    from repro import kernels as kernel_pkg
+    from repro.core import HARDWARE_REGISTRY, Autotuner
+    from repro.core.plans import TilePlan, compile_plan
+
+    kernel_pkg.register_all()
+    plan = TilePlan.load_or_none(plans_path)
+    if plan is not None:
+        covered = all(
+            plan.lookup(kernel, problem, dtype, hw) is not None
+            for kernel, problem in cells for hw in hw_names)
+        if covered:
+            print_fn(f"# reusing plan artifact {plans_path} "
+                     f"({len(plan)} cells)")
+            return plan
+        print_fn(f"# plan artifact {plans_path} does not cover the "
+                 f"requested cells; recompiling")
+    jobs = [(kernel, problem, dtype, HARDWARE_REGISTRY[hw])
+            for kernel, problem in cells for hw in hw_names]
+    return compile_plan(jobs, autotuner=Autotuner(), meta=meta)
 
 
 def build_jobs(arch_names: Sequence[str], hw_names: Sequence[str],

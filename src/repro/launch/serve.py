@@ -13,6 +13,14 @@ tpu_v4,tpu_v5e`` serves through the hardware-aware router instead of a
 single engine — one engine per hardware model, each request placed on the
 cost-model-cheapest instance. Runtime telemetry (per-bucket TTFT/TPOT,
 queue depth, plan hit/transfer/fallback counters) prints at exit.
+
+``--chunk-prefill`` splits every admitted prompt into plan-sized chunks and
+co-schedules one prefill chunk with the decode batch each step (mixed
+steps), bounded by ``--step-token-budget`` tokens per step. The chunk
+length comes from the artifact's ``chunked_prefill`` cell for the target
+hardware, so different models prefill the same prompt in different chunk
+sizes. Prompts longer than the largest bucket edge are then admitted too
+(padded to a multiple of the top edge) instead of rejected.
 """
 from __future__ import annotations
 
@@ -31,8 +39,8 @@ from repro.models import api
 from repro.serve import BucketPolicy, FleetRouter, ServeEngine, make_scheduler
 
 
-def build_policy(spec: str, plans, hardware_name,
-                 max_queue: int) -> BucketPolicy:
+def build_policy(spec: str, plans, hardware_name, max_queue: int,
+                 allow_overflow: bool = False) -> BucketPolicy:
     """One policy for the whole deployment. ``hardware_name=None`` derives
     "plan" edges from every hardware's cells (the union) — a fleet must
     share a single edge set or the router's bucketing and each engine's
@@ -41,8 +49,10 @@ def build_policy(spec: str, plans, hardware_name,
         if plans is None:
             raise SystemExit("--bucket-policy plan requires --tile-plans")
         return BucketPolicy.from_plan(plans, hardware=hardware_name,
-                                      max_queue=max_queue)
-    return BucketPolicy.parse(spec, max_queue=max_queue)
+                                      max_queue=max_queue,
+                                      allow_overflow=allow_overflow)
+    return BucketPolicy.parse(spec, max_queue=max_queue,
+                              allow_overflow=allow_overflow)
 
 
 def main():
@@ -64,6 +74,16 @@ def main():
                          "(derive from the --tile-plans artifact)")
     ap.add_argument("--max-queue", type=int, default=256,
                     help="admission bound for the bucketed scheduler")
+    ap.add_argument("--chunk-prefill", action="store_true",
+                    help="split prompts into plan-sized chunks and build "
+                         "mixed prefill/decode steps (admits over-length "
+                         "prompts via chunking)")
+    ap.add_argument("--step-token-budget", type=int, default=0,
+                    help="max tokens one mixed step may process (prefill "
+                         "chunk + decode batch); 0 = plan chunk unclamped")
+    ap.add_argument("--prefill-slots", type=int, default=2,
+                    help="concurrent partially-prefilled requests (chunked "
+                         "mode; lets short prompts overtake long ones)")
     ap.add_argument("--fleet", default="",
                     help="comma list of hardware models; serve through the "
                          "fleet router with one engine per model "
@@ -85,13 +105,17 @@ def main():
         # and engines share one bucketing; single engine: its own cells.
         policy = build_policy(
             args.bucket_policy, plans,
-            None if fleet_names else args.hardware, args.max_queue)
+            None if fleet_names else args.hardware, args.max_queue,
+            allow_overflow=args.chunk_prefill)
 
     def make_engine(hw_name: str) -> ServeEngine:
         return ServeEngine(
             cfg, params, max_len=args.max_len, slots=args.slots,
             plans=plans, hardware=HARDWARE_REGISTRY[hw_name],
-            scheduler=make_scheduler(args.scheduler, policy))
+            scheduler=make_scheduler(args.scheduler, policy),
+            chunk_prefill=args.chunk_prefill,
+            step_token_budget=args.step_token_budget,
+            prefill_slots=args.prefill_slots)
 
     router = None
     if fleet_names:

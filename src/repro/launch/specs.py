@@ -31,11 +31,16 @@ def kernel_problems(cfg: ArchConfig, batch: int, seq_len: int,
                     kind: str) -> Dict[str, Dict[str, int]]:
     """Per-kernel tile-tuning problems for one (config, geometry) cell.
 
-    ``kind``: "train" | "prefill" (full-sequence) or "decode" (one token per
-    sequence against a KV cache of ``seq_len``). Pure config arithmetic — no
-    jax, no sweeps — so hot paths can call it at init time.
+    ``kind``: "train" | "prefill" (full-sequence), "decode" (one token per
+    sequence against a KV cache of ``seq_len``), or "chunked_prefill" (the
+    full ``seq_len`` prompt prefilled in scheduler-sized chunks — same
+    geometry as "prefill" but the attention cell is the ``chunked_prefill``
+    kernel, whose tile ``(chunk, bkv)`` makes the chunk length a
+    first-class tuning axis). Pure config arithmetic — no jax, no sweeps —
+    so hot paths can call it at init time.
     """
     decode = kind == "decode"
+    chunked = kind == "chunked_prefill"
     tokens = batch if decode else min(batch * seq_len, MAX_PLAN_TOKENS)
     problems: Dict[str, Dict[str, int]] = {
         # The FF projection GEMM dominates per-layer step time.
@@ -60,7 +65,8 @@ def kernel_problems(cfg: ArchConfig, batch: int, seq_len: int,
                 window=window,
             )
         else:
-            problems["flash_attention"] = dict(
+            attn_kernel = "chunked_prefill" if chunked else "flash_attention"
+            problems[attn_kernel] = dict(
                 sq=seq_len,
                 skv=seq_len,
                 d=cfg.head_dim_,

@@ -115,6 +115,35 @@ def prefill(
     return out.logits[:, -1], out.caches
 
 
+def prefill_chunk(
+    params, cfg: ArchConfig, tokens: jnp.ndarray, state, start: int,
+    ctx: Optional[DistContext] = None, tiles: Tiles = None,
+):
+    """One chunk of a multi-step (chunked) prefill.
+
+    ``tokens`` [B, c] sit at absolute positions ``start .. start+c-1``
+    (``start`` must be a static int — the engine compiles one program per
+    (chunk length, start) pair). ``state`` is the serve state from
+    :func:`make_serve_state` (chunk 0) or the previous chunk. Attention
+    layers attend over the KV the earlier chunks wrote plus the chunk
+    itself; recurrent/SSD layers continue from their carried state. Running
+    every chunk through this entry on a fresh state reproduces
+    :func:`prefill` position by position.
+
+    Returns (last-position logits [B, Vpad], new state) — the logits are
+    the request's first sampled token only when this was the final chunk.
+    """
+    if is_encdec(cfg):
+        raise NotImplementedError(
+            "chunked prefill is not supported for encoder-decoder models")
+    out = T.forward(
+        params, cfg, tokens, ctx=ctx, caches=state, start_pos=start,
+        chunked=True, decode=False, remat=False, logits_mode="last",
+        tiles=tiles,
+    )
+    return out.logits[:, -1], out.caches
+
+
 def decode_step(
     params, cfg: ArchConfig, token: jnp.ndarray, state,
     ctx: Optional[DistContext] = None, tiles: Tiles = None,

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import flags
+from repro.kernels.flash_attention.chunked import flash_prefill_chunk_ref
 from repro.kernels.flash_attention.decode import (
     fit_bkv, flash_decode, flash_decode_ref,
 )
@@ -205,6 +206,123 @@ def attn_forward(
                 cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)
             )
             new_cache = {"k": ck, "v": cv, "pos": jnp.asarray(s, jnp.int32)}
+    return y, new_cache
+
+
+def attn_prefill_chunk(
+    p, cfg: ArchConfig, x, positions, *,
+    cache: Dict[str, Any],
+    start: int,
+    window: Optional[int] = None,
+    impl: str = "auto",
+    tile=None,
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Continuation prefill of one prompt chunk over the live KV cache.
+
+    ``x`` [B, c, D] holds the chunk's tokens at absolute positions
+    ``start .. start+c-1`` (``positions`` carries them; ``start`` must be a
+    static int — each (chunk length, start) pair is its own compiled
+    program, which keeps the causal ``q_offset`` arithmetic and the cache
+    prefix slice static). The chunk attends causally over the KV written by
+    chunks ``0..N-1`` plus itself — the whole-prompt ``attn_forward``
+    computation restricted to these query rows — and writes its K/V into
+    the cache at the continuation offset.
+
+    ``tile`` is the plan-resolved ``chunked_prefill`` tile ``(chunk, bkv)``.
+    On TPU backends with a linear cache the Pallas ``flash_attention``
+    kernel runs with the existing ``q_offset`` continuation math when the
+    clamped tile legally divides ``(c, start+c)``; otherwise the chunked
+    online-softmax reference runs with ``bkv`` as its KV split. Ring-buffer
+    caches (sliding-window layers) always lower through
+    :func:`~repro.kernels.flash_attention.chunked.flash_prefill_chunk_ref`,
+    whose traced ``kv_pos`` map expresses slot wraparound that a static
+    ``q_offset`` cannot.
+    """
+    b, c, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    scale = cfg.query_scale or cfg.head_dim_ ** -0.5
+    softcap = cfg.attn_softcap or None
+
+    if "slot_pos" in cache:
+        # Ring cache: visible keys = the ring's survivors (window-bounded
+        # history) ++ the chunk itself, each with its absolute position.
+        max_len = cache["k"].shape[2]
+        k_all = jnp.concatenate([cache["k"].astype(k.dtype), k], axis=2)
+        v_all = jnp.concatenate([cache["v"].astype(v.dtype), v], axis=2)
+        kv_pos = jnp.concatenate(
+            [cache["slot_pos"], positions[0].astype(jnp.int32)])
+        skv = max_len + c
+        if tile is not None:
+            requested = min(int(tile[-1]), skv)
+            effective = fit_bkv(requested, skv)
+            _emit_tile_event(kernel="chunked_prefill", phase="prefill",
+                             impl="reference", tile=tuple(tile),
+                             effective=effective,
+                             fallback=effective != requested)
+            bkv = requested
+        else:
+            bkv = 512
+        out = flash_prefill_chunk_ref(
+            q, k_all, v_all, q_pos=positions[0], kv_pos=kv_pos,
+            window=window, softcap=softcap, scale=scale, bkv=bkv)
+        # Write the chunk's tail into the ring (mirrors attn_forward).
+        keep = min(c, max_len)
+        kk = k[:, :, -keep:]
+        vv = v[:, :, -keep:]
+        pos_tail = positions[0, -keep:]
+        slots = pos_tail % max_len
+        ck = cache["k"].at[:, :, slots].set(kk.astype(cache["k"].dtype))
+        cv = cache["v"].at[:, :, slots].set(vv.astype(cache["v"].dtype))
+        sp = cache["slot_pos"].at[slots].set(pos_tail)
+        new_cache = {"k": ck, "v": cv,
+                     "pos": jnp.asarray(start + c, jnp.int32), "slot_pos": sp}
+    else:
+        # Linear cache: the written prefix is exactly positions 0..start-1,
+        # so the existing q_offset continuation math applies directly.
+        skv = start + c
+        if start:
+            k_all = jnp.concatenate(
+                [cache["k"][:, :, :start].astype(k.dtype), k], axis=2)
+            v_all = jnp.concatenate(
+                [cache["v"][:, :, :start].astype(v.dtype), v], axis=2)
+        else:
+            k_all, v_all = k, v
+        t = (min(int(tile[0]), c), min(int(tile[1]), skv)) \
+            if tile is not None else None
+        divides = t is not None and c % t[0] == 0 and skv % t[1] == 0
+        if impl == "auto":
+            impl = "pallas" if (flags.pallas_enabled() and divides) \
+                else "reference"
+        kwargs = dict(causal=True, window=window, softcap=softcap,
+                      scale=scale, q_offset=start)
+        if impl == "pallas":
+            out = flash_attention(q, k_all, v_all, tile=t or (512, 512),
+                                  **kwargs)
+            if tile is not None:
+                _emit_tile_event(kernel="chunked_prefill", phase="prefill",
+                                 impl="pallas", tile=tuple(tile),
+                                 effective=t, fallback=False)
+        else:
+            if tile is not None:
+                requested = min(int(tile[1]), skv)
+                effective = fit_bkv(requested, skv)
+                _emit_tile_event(
+                    kernel="chunked_prefill", phase="prefill",
+                    impl="reference", tile=tuple(tile), effective=effective,
+                    fallback=(effective != requested
+                              or (flags.pallas_enabled() and not divides)))
+                chunk_kv = requested
+            else:
+                chunk_kv = 512
+            out = flash_attention_ref(q, k_all, v_all,
+                                      chunk=min(chunk_kv, skv), **kwargs)
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, start, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, start, 0))
+        new_cache = {"k": ck, "v": cv,
+                     "pos": jnp.asarray(start + c, jnp.int32)}
+    y = _out_proj(p, cfg, out, x.dtype)
     return y, new_cache
 
 

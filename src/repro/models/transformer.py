@@ -182,7 +182,7 @@ def param_logical_axes(cfg: ArchConfig):
 # ---------------------------------------------------------------------------
 
 def _mixer(p, cfg: ArchConfig, spec: LayerSpec, x, positions, cache,
-           decode: bool, ctx=None, tiles=None):
+           decode: bool, ctx=None, tiles=None, chunk_start=None):
     tiles = tiles or {}
     if spec.mixer in ("attn", "local_attn"):
         window = cfg.attn_window if spec.mixer == "local_attn" else None
@@ -190,6 +190,11 @@ def _mixer(p, cfg: ArchConfig, spec: LayerSpec, x, positions, cache,
             return attn_mod.attn_decode(p["attn"], cfg, x, cache=cache,
                                         window=window, ctx=ctx,
                                         tile=tiles.get("flash_decode"))
+        if chunk_start is not None:
+            return attn_mod.attn_prefill_chunk(
+                p["attn"], cfg, x, positions, cache=cache,
+                start=chunk_start, window=window,
+                tile=tiles.get("chunked_prefill"))
         return attn_mod.attn_forward(p["attn"], cfg, x, positions,
                                      window=window, cache=cache,
                                      tile=tiles.get("flash_attention"))
@@ -234,13 +239,14 @@ def _dense_ff(p, cfg: ArchConfig, x, tile=None):
 def layer_forward(
     p, cfg: ArchConfig, spec: LayerSpec, x, positions, cache,
     ctx: Optional[DistContext], decode: bool = False, tiles=None,
+    chunk_start=None,
 ):
     """Returns (x_out, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     ff_tile = (tiles or {}).get("matmul")
     h = _apply_norm(p, cfg, x, "norm1")
     mix, new_cache = _mixer(p, cfg, spec, h, positions, cache, decode, ctx,
-                            tiles)
+                            tiles, chunk_start=chunk_start)
     if cfg.post_norms:
         mix = _apply_norm(p, cfg, mix, "post1")
 
@@ -269,7 +275,7 @@ def layer_forward(
 
 def _scan_unit(
     unit_params, cfg: ArchConfig, unit: Tuple[LayerSpec, ...], x, positions,
-    unit_caches, ctx, decode: bool, remat: bool, tiles=None,
+    unit_caches, ctx, decode: bool, remat: bool, tiles=None, chunk_start=None,
 ):
     """Scan a repeat unit (tuple of per-position stacked params) ``reps``
     times. unit_caches: matching list of stacked caches (or None)."""
@@ -280,7 +286,8 @@ def _scan_unit(
         ncs = []
         for spec, lp, lc in zip(unit, lps, lcs):
             xc, nc, aux = layer_forward(lp, cfg, spec, xc, positions, lc,
-                                        ctx, decode, tiles=tiles)
+                                        ctx, decode, tiles=tiles,
+                                        chunk_start=chunk_start)
             aux_sum = aux_sum + aux
             ncs.append(nc)
         return (xc, aux_sum), ncs
@@ -352,6 +359,7 @@ def forward(
     remat: bool = True,
     logits_mode: str = "full",   # full | last | hidden
     tiles=None,
+    chunked: bool = False,
 ) -> StackOutputs:
     """tokens [B, S] -> logits [B, S(+P), Vpad].
 
@@ -363,6 +371,13 @@ def forward(
     materializing [B, S, V] logits). ``tiles`` (kernel name -> TileShape,
     from a resolved AOT plan) parameterizes the attention/FF/SSD kernel call
     sites — see ``launch.specs.resolve_model_tiles``.
+
+    ``chunked=True`` runs the stack as one chunk of a multi-step prefill:
+    tokens sit at absolute positions ``start_pos..start_pos+S-1`` (static
+    ``start_pos``), attention layers attend over the cache written by the
+    previous chunks plus the chunk itself (``attn_prefill_chunk``), and
+    recurrent/SSD layers continue from their carried state — which they do
+    natively, since ``caches`` is their initial state. Requires ``caches``.
     """
     b, s = tokens.shape
     x = params["embed"][tokens]
@@ -381,6 +396,10 @@ def forward(
     positions = start_pos + jnp.arange(s)[None, :].astype(jnp.int32)
     positions = jnp.broadcast_to(positions, (b, s))
 
+    if chunked and caches is None:
+        raise ValueError("chunked prefill requires caches (serve state)")
+    chunk_start = start_pos if chunked else None
+
     aux_total = jnp.zeros((), jnp.float32)
     new_caches: Optional[List[Any]] = [] if caches is not None else None
     for gi, seg in enumerate(decompose(cfg)):
@@ -391,7 +410,8 @@ def forward(
             for li, spec in enumerate(seg[1]):
                 lc = gc[li] if gc is not None else None
                 x, nc, aux = layer_forward(gp[li], cfg, spec, x, positions,
-                                           lc, ctx, decode, tiles=tiles)
+                                           lc, ctx, decode, tiles=tiles,
+                                           chunk_start=chunk_start)
                 aux_total = aux_total + aux
                 ncs.append(nc)
         else:
@@ -399,6 +419,7 @@ def forward(
             x, ncs, aux = _scan_unit(
                 gp, cfg, unit, x, positions, gc, ctx, decode,
                 remat=remat and not decode, tiles=tiles,
+                chunk_start=chunk_start,
             )
             aux_total = aux_total + aux
         if new_caches is not None:

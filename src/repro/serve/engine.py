@@ -6,6 +6,22 @@ slots in one jitted step. Greedy sampling. This is the serving analogue of
 the train loop — the decode step is the unit the decode_* dry-run shapes
 lower.
 
+Chunked prefill (``chunk_prefill=True``): instead of one monolithic prefill
+per admitted request, the engine splits each prompt into plan-sized chunks
+and builds **mixed steps** — one prefill chunk co-scheduled with the whole
+pending decode batch under ``step_token_budget`` tokens per step. The chunk
+length comes from the AOT plan's ``chunked_prefill`` cell for the admitted
+bucket (VMEM bounds the resident chunk per hardware model, so different
+models prefill the same prompt in different chunk sizes), clamped so chunk
++ decode batch always fits the budget. Up to ``prefill_slots`` requests
+hold partially-built caches concurrently and the next chunk goes to the
+most urgent one (priority, deadline, then fewest remaining tokens — so a
+short prompt admitted behind a 32k prompt produces its first token after
+one chunk-time, not after the whole 32k prefill). Chunk N's program closes
+over its static start offset and replays the existing q_offset
+continuation math in kernels/flash_attention, so chunked and whole-prompt
+prefill match position by position (tests/test_serve_chunked.py).
+
 Admission is delegated to a scheduler (``repro.serve.scheduler``): the
 default :class:`~repro.serve.scheduler.FifoScheduler` preserves the naive
 raw-shape behavior; a :class:`~repro.serve.scheduler.ShapeBucketScheduler`
@@ -57,6 +73,27 @@ class Request:
     done: bool = False
 
 
+@dataclasses.dataclass
+class _ChunkJob:
+    """One request's in-flight chunked prefill (chunk-resumable state)."""
+
+    req: Request
+    prompt: np.ndarray            # padded to the admitted length
+    chunk_len: int
+    state: Any = None             # serve caches, built chunk by chunk
+    done: int = 0                 # prompt tokens prefilled so far
+    chunks_run: int = 0
+    last_t: float = 0.0           # last prefill progress (chunk queue age)
+    # Trace-time tile events from every chunk program this request ran,
+    # deduped once at prefill completion so an N-chunk prefill counts each
+    # distinct fallback once — not N times (see _finish_prefill).
+    events: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+
+    @property
+    def remaining(self) -> int:
+        return len(self.prompt) - self.done
+
+
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, max_len: int = 512,
                  slots: int = 4, dtype=jnp.float32,
@@ -64,7 +101,10 @@ class ServeEngine:
                  hardware: Optional[HardwareModel] = None,
                  scheduler=None,
                  metrics: Optional[ServeMetrics] = None,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 chunk_prefill: bool = False,
+                 step_token_budget: int = 0,
+                 prefill_slots: int = 2):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -75,6 +115,29 @@ class ServeEngine:
         self.scheduler = scheduler or FifoScheduler()
         self.metrics = metrics or ServeMetrics(clock=clock)
         self._clock = clock
+        # Chunked-prefill configuration. ``step_token_budget`` bounds one
+        # mixed step's tokens (decode batch + one prefill chunk); 0 = no
+        # bound, the plan's chunk length runs unclamped. ``prefill_slots``
+        # bounds how many partially-prefilled caches are held at once (the
+        # concurrency that lets a short prompt overtake a long one).
+        self.chunk_prefill = chunk_prefill
+        self.step_token_budget = step_token_budget
+        self.prefill_slots = max(1, prefill_slots)
+        self._chunking: List[_ChunkJob] = []
+        self._ready: List[Any] = []   # (Request, state) done prefilling,
+        #                               waiting for a free decode slot
+        self._held: List[Request] = []  # multi-chunk requests deferred while
+        #                                 another multi-chunk prefill runs
+        #                                 (FIFO schedulers only; see
+        #                                 _next_admission)
+        self._single_chunk_edge: Optional[int] = None  # lazy, per engine
+        self._chunk_ticks = 0  # aging counter for _next_chunk_job
+        self._chunk_plans: Dict[int, Any] = {}      # admit_len -> plan tuple
+        self._chunk_fns: Dict[Any, Any] = {}        # (admit_len, start) -> fn
+        self._chunk_tile_events: Dict[Any, List[Dict[str, Any]]] = {}
+        # Per-step mixed-token accounting (virtual-clock drivers read this).
+        self.last_step_stats: Dict[str, int] = {"prefill_tokens": 0,
+                                                "decode_tokens": 0}
         # kernel name -> resolved tile for the decode path; populated from
         # the AOT plan at init so serving never pays a sweep.
         self.tiles: Dict[str, TileShape] = {}
@@ -187,6 +250,264 @@ class ServeEngine:
         self._prefill_sources[length] = sources
         return fn
 
+    # -- chunked prefill -----------------------------------------------------
+    def _chunk_plan(self, admit_len: int):
+        """(chunk_len, tiles, sources) for prefilling one admitted length.
+
+        The chunk length is the plan-resolved ``chunked_prefill`` tile's
+        first dim — chosen per hardware model, so the same prompt prefills
+        in different chunk sizes on different models — clamped so one chunk
+        plus a full decode batch fits ``step_token_budget``. The remaining
+        (FF/recurrent) kernel tiles are resolved at the chunk geometry,
+        which is the shape the chunk programs actually run.
+        """
+        hit = self._chunk_plans.get(admit_len)
+        if hit is not None:
+            return hit
+        from repro import kernels as kernel_pkg
+        from repro.core import registry
+        from repro.launch.specs import kernel_problems, resolve_model_tiles
+
+        kernel_pkg.register_all()
+        dtype = jnp.dtype(self.dtype).name
+        problem = kernel_problems(
+            self.cfg, 1, admit_len, "chunked_prefill").get("chunked_prefill")
+        tile, source = None, "no_plan"
+        if problem is not None:
+            if self.plans is not None:
+                with warnings.catch_warnings():
+                    warnings.simplefilter("ignore", PlanTransferWarning)
+                    res = self.plans.resolve(
+                        "chunked_prefill", problem, dtype, self.hardware)
+                if res is not None:
+                    tile, source = res.tile, res.source
+                else:
+                    source = "fallback"
+            if tile is None:
+                tile = registry.get("chunked_prefill").default_tile(
+                    problem, dtype)
+        chunk = int(tile[0]) if tile is not None else min(512, admit_len)
+        if self.step_token_budget:
+            # A mixed step must fit one chunk + the whole decode batch.
+            chunk = min(chunk, max(1, self.step_token_budget - self.slots))
+        chunk = max(1, min(chunk, admit_len))
+
+        tiles: Dict[str, TileShape] = {}
+        sources: Dict[str, str] = {}
+        if self.plans is not None:
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", PlanTransferWarning)
+                tiles, resolutions = resolve_model_tiles(
+                    self.plans, self.cfg, 1, chunk, "prefill", dtype,
+                    self.hardware)
+            # The chunk's attention is the chunked_prefill cell, not a
+            # (chunk x chunk) flash_attention prefill — drop the latter so
+            # plan counters reflect the cells the programs consume.
+            tiles.pop("flash_attention", None)
+            sources = {
+                kernel: (resolutions[kernel].source
+                         if kernel in resolutions else "fallback")
+                for kernel in tiles
+            }
+        else:
+            sources = {
+                kernel: "no_plan"
+                for kernel in kernel_problems(self.cfg, 1, chunk, "prefill")
+                if kernel != "flash_attention"
+            }
+        if tile is not None:
+            tiles["chunked_prefill"] = tile
+        if problem is not None:
+            # Attention-free models have no chunked_prefill cell — don't
+            # tick a phantom plan counter for a kernel that never runs.
+            sources["chunked_prefill"] = source
+        entry = (chunk, tiles, sources)
+        self._chunk_plans[admit_len] = entry
+        return entry
+
+    def chunk_len_for(self, admit_len: int) -> int:
+        """Chunk length one admitted prompt prefills in (= admit_len when
+        chunking is off — the whole prefill is one quantum)."""
+        if not self.chunk_prefill:
+            return admit_len
+        return self._chunk_plan(admit_len)[0]
+
+    def _chunk_fn(self, admit_len: int, start: int):
+        """The jitted program for one (admitted length, chunk offset) pair.
+
+        ``start`` is closed over statically: the causal q_offset arithmetic
+        and the cache-prefix slice stay compile-time constants, so a chunk
+        reads only the KV actually written — at the cost of one program per
+        chunk offset (bounded by admit_len / chunk_len per bucket).
+        """
+        key = (admit_len, start)
+        fn = self._chunk_fns.get(key)
+        if fn is not None:
+            return fn
+        _, tiles, _ = self._chunk_plan(admit_len)
+        cfg = self.cfg
+        fn = jax.jit(
+            lambda p, toks, st: api.prefill_chunk(
+                p, cfg, toks, st, start, tiles=tiles or None)
+        )
+        self._chunk_fns[key] = fn
+        return fn
+
+    def _is_multi_chunk(self, req: Request) -> bool:
+        """Will this request's prefill span more than one chunk?"""
+        admit_len = req.bucket if req.bucket is not None else len(req.prompt)
+        return admit_len > self._chunk_plan(admit_len)[0]
+
+    def _single_chunk_bound(self) -> int:
+        """Largest bucket edge whose prefill fits one chunk (0 if none)."""
+        if self._single_chunk_edge is None:
+            policy = getattr(self.scheduler, "policy", None)
+            edges = policy.edges if policy is not None else ()
+            self._single_chunk_edge = max(
+                (e for e in edges if self._chunk_plan(e)[0] >= e), default=0)
+        return self._single_chunk_edge
+
+    def _next_admission(self, long_ok: bool) -> Optional[Request]:
+        """Next request to start prefilling.
+
+        With ``long_ok=False`` only single-chunk requests qualify. Bucketed
+        schedulers support a filtered pop (``next_request_within``), so
+        queued long prompts stay in the scheduler — visible to ``max_queue``
+        admission control and the queue-depth metric — while small buckets
+        behind them stay reachable no matter how many longs are queued.
+        FIFO schedulers cannot pop selectively; deferred longs go to a
+        holding pen capped at ``prefill_slots`` entries (beyond the cap the
+        engine simply waits for the in-flight long, preserving FIFO order).
+        """
+        for i, req in enumerate(self._held):
+            if long_ok or not self._is_multi_chunk(req):
+                return self._held.pop(i)
+        within = getattr(self.scheduler, "next_request_within", None)
+        if not long_ok and within is not None:
+            return within(self._single_chunk_bound())
+        while len(self._held) < self.prefill_slots:
+            req = self.scheduler.next_request()
+            if req is None:
+                return None
+            if long_ok or not self._is_multi_chunk(req):
+                return req
+            self._held.append(req)
+        return None
+
+    def _admit_chunked(self) -> None:
+        """Move ready prefills into decode slots and queued requests into
+        free prefill slots (chunk concurrency).
+
+        At most ONE multi-chunk prefill runs at a time: a stream of long
+        prompts must not occupy every prefill slot and starve short ones —
+        the head-of-line blocking chunking exists to cut. Deferred longs
+        keep their order and start as soon as the running one finishes.
+        """
+        free = [i for i, r in enumerate(self._active) if r is None]
+        while free and self._ready:
+            req, state = self._ready.pop(0)
+            i = free.pop(0)
+            self._active[i] = req
+            self._states[i] = state
+        # Backpressure: a completed prefill holds a full KV cache until a
+        # decode slot frees. Once _ready already covers every decode slot,
+        # admitting more prefills would only stack further caches (the
+        # unchunked engine never holds more than ``slots`` live states) —
+        # stall admission until decode catches up. Live states stay
+        # bounded: decode slots + in-flight chunking + ready <=
+        # 2*slots + 2*prefill_slots.
+        if len(self._ready) >= self.slots:
+            return
+        long_in_flight = any(len(j.prompt) > j.chunk_len
+                             for j in self._chunking)
+        while len(self._chunking) < self.prefill_slots:
+            req = self._next_admission(long_ok=not long_in_flight)
+            if req is None:
+                break
+            prompt = np.asarray(self.scheduler.prepare(req), np.int32)
+            chunk_len, _, _ = self._chunk_plan(len(prompt))
+            long_in_flight = long_in_flight or len(prompt) > chunk_len
+            submit_t = self.metrics.submit_time(req.rid)
+            self._chunking.append(_ChunkJob(
+                req=req, prompt=prompt, chunk_len=chunk_len,
+                last_t=submit_t if submit_t is not None else self._clock()))
+
+    # Every AGING_PERIOD-th chunk goes to the OLDEST in-flight prefill
+    # instead of the shortest-remaining one: a sustained stream of short
+    # prompts can otherwise starve a long prefill forever (its `remaining`
+    # never shrinks because it never runs). 1/AGING_PERIOD of the chunk
+    # bandwidth is a guaranteed progress floor for the long request.
+    AGING_PERIOD = 4
+
+    def _next_chunk_job(self) -> Optional[_ChunkJob]:
+        """The most urgent in-flight prefill: priority, deadline, then
+        fewest remaining tokens (shortest-remaining-prefill-first), so a
+        short prompt admitted behind a long one reaches its first token
+        after one chunk-time instead of after the long prompt's entire
+        prefill — with periodic aging so the long one still progresses."""
+        if not self._chunking:
+            return None
+        self._chunk_ticks += 1
+        if self._chunk_ticks % self.AGING_PERIOD == 0:
+            return min(self._chunking,
+                       key=lambda j: (j.req.priority, j.req.deadline,
+                                      j.req.rid))
+        return min(self._chunking,
+                   key=lambda j: (j.req.priority, j.req.deadline,
+                                  j.remaining, j.req.rid))
+
+    def _run_chunk(self, job: _ChunkJob) -> int:
+        """Advance one job by one chunk; returns the chunk's token count."""
+        start = job.done
+        length = min(job.chunk_len, len(job.prompt) - start)
+        if job.state is None:
+            job.state = api.make_serve_state(
+                self.cfg, 1, self.max_len, self.dtype,
+                ring_local=bool(self.cfg.attn_window))
+        fn = self._chunk_fn(len(job.prompt), start)
+        toks = jnp.asarray(job.prompt[None, start:start + length])
+        key = (len(job.prompt), start)
+        events = self._chunk_tile_events.get(key)
+        if events is None:
+            captured: List[Dict[str, Any]] = []
+            with attn_mod.capture_tile_events(captured.append):
+                logits, job.state = fn(self.params, toks, job.state)
+            events = self._dedupe_events(captured)
+            self._chunk_tile_events[key] = events
+        else:
+            logits, job.state = fn(self.params, toks, job.state)
+        job.events.extend(events)
+        now = self._clock()
+        self.metrics.record_chunk(job.req.bucket, now - job.last_t)
+        job.last_t = now
+        job.done += length
+        job.chunks_run += 1
+        if job.done >= len(job.prompt):
+            self._chunking.remove(job)
+            self._finish_prefill(job, logits)
+        return length
+
+    def _finish_prefill(self, job: _ChunkJob, logits) -> None:
+        """Last chunk done: sample the first token, account the prefill."""
+        req = job.req
+        _, _, sources = self._chunk_plan(len(job.prompt))
+        # Plan + tile-event counters tick once per request prefill, not once
+        # per chunk: a 16-chunk prefill must not inflate tile_fallback 16x.
+        for kernel, source in sources.items():
+            self.metrics.record_plan("prefill", kernel, source)
+        for ev in self._dedupe_events(job.events):
+            self._record_tile_event(ev)
+        self.metrics.record_prefill_chunks(job.chunks_run)
+        tok = int(jnp.argmax(logits[0, :self.cfg.vocab_size]))
+        req.out_tokens.append(tok)
+        self.metrics.record_first_token(req.rid, req.bucket)
+        if len(req.out_tokens) >= req.max_new_tokens:
+            req.done = True
+            self._finished.append(req)
+            self.metrics.record_complete()
+        else:
+            self._ready.append((req, job.state))
+
     def add_request(self, prompt: np.ndarray, max_new_tokens: int = 16,
                     priority: int = 0,
                     deadline: float = math.inf) -> Optional[int]:
@@ -195,29 +516,38 @@ class ServeEngine:
         padded prompt plus the generation would overflow the KV cache)."""
         prompt = np.asarray(prompt, np.int32)
         shaped = self.scheduler.admit_length(len(prompt))
+        if shaped is None:
+            self.metrics.record_reject(reason="over_length")
+            return None
         # Decode writes KV at positions shaped..shaped+max_new-2 (the last
         # sampled token is never cached); past max_len the update would
         # silently clamp onto the final slot and corrupt attention.
-        if shaped is None or shaped + max_new_tokens - 1 > self.max_len:
-            self.metrics.record_reject()
+        if shaped + max_new_tokens - 1 > self.max_len:
+            self.metrics.record_reject(reason="cache_overflow")
             return None
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid, prompt, max_new_tokens,
                       priority=priority, deadline=deadline)
         if not self.scheduler.submit(req):
-            self.metrics.record_reject()
+            self.metrics.record_reject(
+                reason=getattr(self.scheduler, "last_reject_reason",
+                               "admission"))
             return None
         self.metrics.record_submit(rid)
         return rid
 
-    def _admit(self):
+    def _admit(self) -> int:
+        """Admit into free slots, running each whole prefill. Returns the
+        total prompt tokens prefilled (mixed-step accounting)."""
+        prefill_tokens = 0
         free = [i for i, r in enumerate(self._active) if r is None]
         while free:
             req = self.scheduler.next_request()
             if req is None:
                 break
             prompt = self.scheduler.prepare(req)
+            prefill_tokens += len(prompt)
             prefill = self._prefill_fn(len(prompt))
             for kernel, source in self._prefill_sources[len(prompt)].items():
                 self.metrics.record_plan("prefill", kernel, source)
@@ -247,11 +577,10 @@ class ServeEngine:
             i = free.pop(0)
             self._active[i] = req
             self._states[i] = state
+        return prefill_tokens
 
-    def step(self) -> int:
-        """Admit + one decode step for all active slots. Returns #active."""
-        self._admit()
-        self.metrics.record_queue_depth(self.scheduler.pending())
+    def _decode_all(self) -> int:
+        """One decode step for every active slot. Returns #active."""
         n = 0
         active_buckets = []
         t0 = self._clock()
@@ -283,10 +612,52 @@ class ServeEngine:
         self.metrics.record_decode_step(active_buckets, self._clock() - t0)
         return n
 
+    def step(self) -> int:
+        """One engine step. Returns the number of requests in service.
+
+        Unchunked: admit (each admission runs its whole prefill) + one
+        decode step over the active slots — the pre-chunking behavior.
+        Chunked: a **mixed step** — one prefill chunk for the most urgent
+        in-flight prefill co-scheduled with the whole decode batch, the two
+        together bounded by ``step_token_budget`` tokens.
+        """
+        if self.chunk_prefill:
+            return self._step_chunked()
+        prefill_tokens = self._admit()
+        self.metrics.record_queue_depth(self.scheduler.pending())
+        n = self._decode_all()
+        self.last_step_stats = {"prefill_tokens": prefill_tokens,
+                                "decode_tokens": n}
+        return n
+
+    def _step_chunked(self) -> int:
+        self._admit_chunked()
+        # Held (deferred multi-chunk) requests are still backlog.
+        self.metrics.record_queue_depth(
+            self.scheduler.pending() + len(self._held))
+        prefill_tokens = 0
+        job = self._next_chunk_job()
+        if job is not None:
+            prefill_tokens = self._run_chunk(job)
+            # A prefill finished by that chunk may start decoding this very
+            # step if a slot is free — its first decode token rides the
+            # same mixed step.
+            self._admit_chunked()
+        n = self._decode_all()
+        self.last_step_stats = {"prefill_tokens": prefill_tokens,
+                                "decode_tokens": n}
+        return n + len(self._chunking) + len(self._ready) + len(self._held)
+
+    def in_flight(self) -> int:
+        """Requests holding engine state (decode slots + partial prefills +
+        deferred multi-chunk admissions)."""
+        return (sum(r is not None for r in self._active)
+                + len(self._chunking) + len(self._ready) + len(self._held))
+
     def run_until_done(self, max_steps: int = 1000) -> List[Request]:
         self._finished = []
         for _ in range(max_steps):
-            if not any(self._active) and not self.scheduler.pending():
+            if not self.in_flight() and not self.scheduler.pending():
                 break
             self.step()
         return self._finished

@@ -55,14 +55,18 @@ class FleetRouter:
         self.engines: Dict[str, ServeEngine] = dict(engines)
         self.policy = policy
         self.decisions: List[RouteDecision] = []
+        # Router-level rejections (no engine was ever asked): reason -> n.
+        self.rejects: Dict[str, int] = {}
         # (instance, kind, length) -> estimated seconds; pure function of
         # the plan + cost model, so cache freely.
         self._cell_cost: Dict[Tuple[str, str, int], float] = {}
 
     # -- cost model ----------------------------------------------------------
     def _phase_cost(self, name: str, kind: str, length: int) -> float:
-        """Estimated seconds of one prefill (kind="prefill", batch 1) or one
-        decode step (kind="decode", the engine's slot batch) on ``name``."""
+        """Estimated seconds of one prefill (kind="prefill" for monolithic,
+        "chunked_prefill" for the chunk-decomposed cell, both batch 1) or
+        one decode step (kind="decode", the engine's slot batch) on
+        ``name``."""
         key = (name, kind, length)
         hit = self._cell_cost.get(key)
         if hit is not None:
@@ -70,7 +74,7 @@ class FleetRouter:
         from repro.launch.specs import kernel_problems
 
         eng = self.engines[name]
-        batch = 1 if kind == "prefill" else eng.slots
+        batch = eng.slots if kind == "decode" else 1
         dtype = jnp.dtype(eng.dtype).name
         total = 0.0
         with warnings.catch_warnings():
@@ -90,15 +94,47 @@ class FleetRouter:
 
     def service_score(self, name: str, bucket: int,
                       max_new_tokens: int) -> float:
-        """Estimated service seconds for one request of this bucket."""
-        return (self._phase_cost(name, "prefill", bucket)
+        """Estimated service seconds for one request of this bucket.
+
+        Chunk-prefill engines price the prefill through the plan's
+        ``chunked_prefill`` cell — the chunk-decomposed cost, including the
+        per-chunk dispatch overhead the chunk length was tuned against —
+        so the estimate reflects how the engine will actually run it.
+        """
+        eng = self.engines[name]
+        prefill_kind = ("chunked_prefill" if eng.chunk_prefill
+                        else "prefill")
+        return (self._phase_cost(name, prefill_kind, bucket)
                 + max_new_tokens
-                * self._phase_cost(name, "decode", self.engines[name].max_len))
+                * self._phase_cost(name, "decode", eng.max_len))
 
     def _load(self, name: str) -> float:
+        """Backlog pressure in slot-equivalents.
+
+        Unchunked engines count every queued request as one monolithic unit
+        of head-of-line work. Chunk-prefill engines hold an admitted prompt
+        for only one chunk at a time (urgent work overtakes between
+        chunks), so a queued request contributes its *chunk fraction* —
+        chunk_len / admitted length — and routing stops over-penalizing
+        instances that merely hold long prompts.
+        """
         eng = self.engines[name]
         busy = sum(r is not None for r in eng._active)
-        return (busy + eng.scheduler.pending()) / max(eng.slots, 1)
+        if not eng.chunk_prefill:
+            return (busy + eng.scheduler.pending()) / max(eng.slots, 1)
+        frac = float(len(eng._ready))
+        for job in eng._chunking:
+            frac += job.chunk_len / max(len(job.prompt), 1)
+        for req in eng._held:
+            bucket = req.bucket or len(req.prompt)
+            frac += eng.chunk_len_for(bucket) / max(bucket, 1)
+        queued = getattr(eng.scheduler, "queued_buckets", None)
+        if queued is None:
+            frac += eng.scheduler.pending()
+        else:
+            for bucket in queued():
+                frac += eng.chunk_len_for(bucket) / max(bucket, 1)
+        return (busy + frac) / max(eng.slots, 1)
 
     # -- observability -------------------------------------------------------
     def placement_table(self, max_new_tokens: int = 16) -> Dict[int, str]:
@@ -131,9 +167,12 @@ class FleetRouter:
     # -- routing -------------------------------------------------------------
     def route(self, prompt, max_new_tokens: int = 16, priority: int = 0,
               deadline: float = float("inf")) -> Optional[RouteDecision]:
-        """Admit one request on the cheapest instance; None when rejected."""
-        bucket = self.policy.bucket_for(len(prompt))
+        """Admit one request on the cheapest instance; None when rejected.
+        Router-level rejections (over-length prompt under a no-overflow
+        policy) are counted in ``self.rejects`` — never dropped silently."""
+        bucket, reason = self.policy.admit(len(prompt))
         if bucket is None:
+            self.rejects[reason] = self.rejects.get(reason, 0) + 1
             return None
         scores = tuple(sorted(
             (name,
@@ -183,6 +222,7 @@ class FleetRouter:
                for name, eng in self.engines.items()}
         out["router"] = {
             "routed": len(self.decisions),
+            "rejects": dict(sorted(self.rejects.items())),
             "placements": {str(b): dict(sorted(p.items()))
                            for b, p in sorted(self.placements().items())},
         }

@@ -7,8 +7,12 @@ object exports as a dict (``as_dict``) for logging / the launcher to print.
 
 Measured quantities follow serving convention:
 
-* **TTFT** (time to first token): submit -> end of the prefill that produced
-  the request's first token, per bucket.
+* **TTFT** (time to first token): request *submit* -> end of the prefill
+  that produced the request's first token, per bucket. Submit-anchored on
+  purpose: with chunked prefill a request's first token can trail its
+  admission by many engine steps, and measuring from admission would hide
+  exactly the queueing the chunk scheduler manages. Means come with
+  p50/p95/p99 — tail latency is what head-of-line blocking moves.
 * **TPOT** (time per output token): decode-step wall time divided by the
   number of active slots, attributed to each active request's bucket.
 * **Queue depth**: scheduler backlog sampled at every engine step.
@@ -17,13 +21,18 @@ Measured quantities follow serving convention:
   case), ``fallback`` (heuristic default), or ``no_plan`` — split by phase
   (``prefill`` / ``decode``). ``plan_hit_rate()`` is the exact-hit fraction,
   the quantity the shape-bucketed scheduler exists to maximize.
+* **Chunked prefill**: per-chunk queue age (gap since the request last made
+  prefill progress), a chunks-per-prefill histogram, and per-step mixed
+  token counts. Rejections carry an explicit reason (``over_length`` /
+  ``queue_full`` / ``cache_overflow``) — admission never drops silently.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import Counter, defaultdict
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional
 
 # Resolution sources, in decreasing order of trustworthiness. "fallback" is
 # the heuristic default tile (plan had nothing usable); "tile_fallback"
@@ -40,19 +49,42 @@ class _LatencyStat:
     count: int = 0
     total_s: float = 0.0
     max_s: float = 0.0
+    # Raw samples for percentiles, capped to bound memory on long runs:
+    # beyond the cap the buffer is circular, so percentiles describe the
+    # most recent ``sample_cap`` observations (a sliding window) while
+    # count/mean/max keep covering the whole run.
+    samples: List[float] = dataclasses.field(default_factory=list)
+    sample_cap: int = 8192
 
     def record(self, dt: float) -> None:
         self.count += 1
         self.total_s += dt
         self.max_s = max(self.max_s, dt)
+        if len(self.samples) < self.sample_cap:
+            self.samples.append(dt)
+        else:
+            # count was already incremented: sample #count lives at slot
+            # (count - 1) % cap, keeping the window exactly the newest cap.
+            self.samples[(self.count - 1) % self.sample_cap] = dt
 
     @property
     def mean_s(self) -> float:
         return self.total_s / self.count if self.count else 0.0
 
+    def percentile(self, q: float) -> float:
+        """Nearest-rank percentile over the recorded samples (0 if none)."""
+        if not self.samples:
+            return 0.0
+        ordered = sorted(self.samples)
+        rank = max(0, math.ceil(q / 100.0 * len(ordered)) - 1)
+        return ordered[rank]
+
     def as_dict(self) -> Dict[str, float]:
         return {"count": self.count, "mean_s": self.mean_s,
-                "max_s": self.max_s}
+                "max_s": self.max_s,
+                "p50_s": self.percentile(50),
+                "p95_s": self.percentile(95),
+                "p99_s": self.percentile(99)}
 
 
 class ServeMetrics:
@@ -73,15 +105,26 @@ class ServeMetrics:
         # (phase, source) -> count and (phase, kernel) -> source breakdown.
         self.plan_counts: Counter = Counter()
         self.plan_by_kernel: Dict[str, Counter] = defaultdict(Counter)
+        # Chunked-prefill telemetry.
+        self.reject_reasons: Counter = Counter()
+        self.chunks_run = 0
+        self.chunk_age: Dict[object, _LatencyStat] = defaultdict(_LatencyStat)
+        self.chunks_per_prefill: Counter = Counter()
 
     # -- request lifecycle ---------------------------------------------------
     def record_submit(self, rid: int) -> None:
         self.submitted += 1
         self._submit_t[rid] = self.clock()
 
-    def record_reject(self, bucket: Optional[object] = None) -> None:
+    def record_reject(self, bucket: Optional[object] = None,
+                      reason: str = "admission") -> None:
         del bucket  # per-bucket reject split not tracked yet
         self.rejected += 1
+        self.reject_reasons[reason] += 1
+
+    def submit_time(self, rid: int) -> Optional[float]:
+        """Submit timestamp of a not-yet-first-token request (else None)."""
+        return self._submit_t.get(rid)
 
     def record_first_token(self, rid: int, bucket: object) -> None:
         self.tokens_out += 1   # prefill samples the request's first token
@@ -102,6 +145,19 @@ class ServeMetrics:
 
     def record_complete(self) -> None:
         self.completed += 1
+
+    # -- chunked prefill -----------------------------------------------------
+    def record_chunk(self, bucket: object, queue_age_s: float) -> None:
+        """One prefill chunk ran; ``queue_age_s`` is how long the request
+        sat without prefill progress before this chunk (submit -> first
+        chunk, then chunk -> chunk) — the quantity the per-step token
+        budget trades against decode latency."""
+        self.chunks_run += 1
+        self.chunk_age[bucket].record(queue_age_s)
+
+    def record_prefill_chunks(self, n_chunks: int) -> None:
+        """A request's prefill completed after ``n_chunks`` chunks."""
+        self.chunks_per_prefill[n_chunks] += 1
 
     def record_queue_depth(self, depth: int) -> None:
         self.queue_depth_max = max(self.queue_depth_max, depth)
@@ -146,9 +202,18 @@ class ServeMetrics:
                 "completed": self.completed,
                 "tokens_out": self.tokens_out,
             },
+            "rejects": dict(sorted(self.reject_reasons.items())),
             "queue_depth": {
                 "max": self.queue_depth_max,
                 "mean": self.queue_depth_mean,
+            },
+            "chunked_prefill": {
+                "chunks_run": self.chunks_run,
+                "chunks_per_prefill": {
+                    str(n): c for n, c in
+                    sorted(self.chunks_per_prefill.items())},
+                "chunk_age_s": {str(b): s.as_dict() for b, s in sorted(
+                    self.chunk_age.items(), key=lambda kv: str(kv[0]))},
             },
             "ttft_s": {str(b): s.as_dict() for b, s in sorted(
                 self.ttft.items(), key=lambda kv: str(kv[0]))},
@@ -181,10 +246,18 @@ class ServeMetrics:
             f"decode {d['plan']['hit_rate_decode']:.2f}) "
             f"counts {d['plan']['counts']}",
         ]
+        if d["rejects"]:
+            lines.append(f"  rejects: {d['rejects']}")
+        if self.chunks_run:
+            lines.append(
+                f"  chunked prefill: {self.chunks_run} chunks, "
+                f"chunks/prefill "
+                f"{d['chunked_prefill']['chunks_per_prefill']}")
         for label, table in (("ttft", d["ttft_s"]), ("tpot", d["tpot_s"])):
             for bucket, stat in table.items():
                 lines.append(
                     f"  {label}[{bucket}]: n={stat['count']} "
                     f"mean={stat['mean_s'] * 1e3:.2f}ms "
+                    f"p95={stat['p95_s'] * 1e3:.2f}ms "
                     f"max={stat['max_s'] * 1e3:.2f}ms")
         return "\n".join(lines)

@@ -42,12 +42,17 @@ class BucketPolicy:
 
     ``edges`` are ascending prompt-length pad targets; a prompt is assigned
     the smallest edge >= its length. Prompts longer than the largest edge
-    are rejected (admission control), as are submits beyond ``max_queue``
-    total backlog.
+    are rejected with an explicit reason (admission control) unless
+    ``allow_overflow`` is set — the chunked-prefill admission mode, where
+    an over-length prompt pads to the smallest *multiple* of the largest
+    edge that covers it and the engine prefills it chunk by chunk. Submits
+    beyond ``max_queue`` total backlog are rejected either way. Rejections
+    are never silent: ``admit`` reports why.
     """
 
     edges: Tuple[int, ...]
     max_queue: int = 256
+    allow_overflow: bool = False
 
     def __post_init__(self):
         if not self.edges:
@@ -58,20 +63,22 @@ class BucketPolicy:
             raise ValueError(f"edges must be positive: {self.edges}")
 
     @classmethod
-    def pow2(cls, lo: int = 16, hi: int = 1024,
-             max_queue: int = 256) -> "BucketPolicy":
+    def pow2(cls, lo: int = 16, hi: int = 1024, max_queue: int = 256,
+             allow_overflow: bool = False) -> "BucketPolicy":
         edges = []
         e = lo
         while e < hi:
             edges.append(e)
             e *= 2
         edges.append(hi)
-        return cls(tuple(edges), max_queue=max_queue)
+        return cls(tuple(edges), max_queue=max_queue,
+                   allow_overflow=allow_overflow)
 
     @classmethod
     def from_plan(cls, plan, kernel: str = "flash_attention",
                   hardware: Optional[str] = None, dtype: Optional[str] = None,
-                  max_queue: int = 256) -> "BucketPolicy":
+                  max_queue: int = 256,
+                  allow_overflow: bool = False) -> "BucketPolicy":
         """Derive the shape family from a compiled plan's prefill cells.
 
         Uses the full-sequence (sq > 1) cells of ``kernel`` — i.e. the
@@ -93,26 +100,47 @@ class BucketPolicy:
             raise ValueError(
                 f"plan has no full-sequence {kernel!r} cells to derive "
                 f"bucket edges from")
-        return cls(tuple(sorted(edges)), max_queue=max_queue)
+        return cls(tuple(sorted(edges)), max_queue=max_queue,
+                   allow_overflow=allow_overflow)
 
     def bucket_for(self, prompt_len: int) -> Optional[int]:
-        """Smallest edge >= prompt_len; None when the prompt is too long."""
+        """Smallest admitted pad length >= prompt_len.
+
+        Within the shape family this is the smallest edge that covers the
+        prompt. Beyond the largest edge: with ``allow_overflow`` the prompt
+        is still admitted — at the smallest multiple of the largest edge
+        covering it, so a chunking engine splits it at bucket-edge-sized
+        boundaries — otherwise None (the caller must surface an explicit
+        over-length rejection, never drop silently; see ``admit``).
+        """
         for e in self.edges:
             if prompt_len <= e:
                 return e
+        if self.allow_overflow:
+            top = self.edges[-1]
+            return math.ceil(prompt_len / top) * top
         return None
 
+    def admit(self, prompt_len: int) -> Tuple[Optional[int], str]:
+        """(pad length, reason) — reason is "ok" or why admission failed."""
+        bucket = self.bucket_for(prompt_len)
+        if bucket is None:
+            return None, "over_length"
+        return bucket, "ok"
+
     @staticmethod
-    def parse(spec: str, max_queue: int = 256) -> "BucketPolicy":
+    def parse(spec: str, max_queue: int = 256,
+              allow_overflow: bool = False) -> "BucketPolicy":
         """Parse a CLI spec: "64,128,512" or "pow2:16:1024"."""
         if spec.startswith("pow2"):
             parts = spec.split(":")
             lo = int(parts[1]) if len(parts) > 1 else 16
             hi = int(parts[2]) if len(parts) > 2 else 1024
-            return BucketPolicy.pow2(lo, hi, max_queue=max_queue)
+            return BucketPolicy.pow2(lo, hi, max_queue=max_queue,
+                                     allow_overflow=allow_overflow)
         return BucketPolicy(
             tuple(sorted({int(x) for x in spec.split(",") if x})),
-            max_queue=max_queue)
+            max_queue=max_queue, allow_overflow=allow_overflow)
 
 
 class FifoScheduler:
@@ -123,6 +151,7 @@ class FifoScheduler:
     def __init__(self, max_queue: Optional[int] = None):
         self.max_queue = max_queue
         self._queue: deque = deque()
+        self.last_reject_reason = "ok"
 
     def admit_length(self, prompt_len: int) -> int:
         """The sequence length a prompt would prefill at (raw — no padding)."""
@@ -130,6 +159,7 @@ class FifoScheduler:
 
     def submit(self, req) -> bool:
         if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            self.last_reject_reason = "queue_full"
             return False
         req.bucket = len(req.prompt)
         self._queue.append(req)
@@ -143,6 +173,10 @@ class FifoScheduler:
 
     def pending(self) -> int:
         return len(self._queue)
+
+    def queued_buckets(self) -> List[int]:
+        """Admitted length of every queued request (fleet load estimates)."""
+        return [len(r.prompt) for r in self._queue]
 
 
 class ShapeBucketScheduler:
@@ -164,23 +198,44 @@ class ShapeBucketScheduler:
         self.pad_id = pad_id
         self._queues: Dict[int, List] = {e: [] for e in policy.edges}
         self._seq = 0
+        self.last_reject_reason = "ok"
 
     def admit_length(self, prompt_len: int):
-        """The padded prefill length (bucket edge); None when over-length."""
+        """The padded prefill length (bucket edge, or the overflow multiple
+        under ``allow_overflow``); None when over-length."""
         return self.policy.bucket_for(prompt_len)
 
     def submit(self, req) -> bool:
-        bucket = self.policy.bucket_for(len(req.prompt))
-        if bucket is None or self.pending() >= self.policy.max_queue:
+        bucket, reason = self.policy.admit(len(req.prompt))
+        if bucket is None:
+            self.last_reject_reason = reason
+            return False
+        if self.pending() >= self.policy.max_queue:
+            self.last_reject_reason = "queue_full"
             return False
         req.bucket = bucket
         key = (req.priority, req.deadline, self._seq)
         self._seq += 1
-        heapq.heappush(self._queues[bucket], (key, req))
+        # Overflow buckets (allow_overflow multiples of the top edge) get
+        # their queue lazily — they are not part of the static edge family.
+        heapq.heappush(self._queues.setdefault(bucket, []), (key, req))
         return True
 
     def next_request(self):
-        heads = [(q[0][0], bucket) for bucket, q in self._queues.items() if q]
+        return self.next_request_within(None)
+
+    def next_request_within(self, max_bucket: Optional[int]):
+        """Most urgent head among buckets with edge <= ``max_bucket``.
+
+        The chunked engine's selective admission: while a multi-chunk
+        prefill is in flight it only admits single-chunk (small-bucket)
+        requests, and the per-bucket queues make that a filtered pop —
+        queued long prompts stay in the scheduler, visible to ``max_queue``
+        admission control and the queue-depth metric, without blocking the
+        small buckets behind them.
+        """
+        heads = [(q[0][0], bucket) for bucket, q in self._queues.items()
+                 if q and (max_bucket is None or bucket <= max_bucket)]
         if not heads:
             return None
         _, bucket = min(heads)
@@ -210,6 +265,10 @@ class ShapeBucketScheduler:
 
     def queue_depths(self) -> Dict[int, int]:
         return {bucket: len(q) for bucket, q in self._queues.items()}
+
+    def queued_buckets(self) -> List[int]:
+        """Admitted length of every queued request (fleet load estimates)."""
+        return [req.bucket for q in self._queues.values() for _, req in q]
 
 
 def make_scheduler(kind: str, policy: Optional[BucketPolicy] = None,
