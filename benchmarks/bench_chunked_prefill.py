@@ -1,4 +1,4 @@
-"""Chunked vs monolithic prefill under a mixed small/long request trace.
+"""Unchunked vs one-chunk-per-step vs step-packed prefill on shared traces.
 
 The head-of-line scenario the chunked scheduler exists for: a long prompt
 (the "32k" class) is admitted just before a burst of small prompts (the
@@ -6,9 +6,12 @@ The head-of-line scenario the chunked scheduler exists for: a long prompt
 engine step, so every queued small request's first token waits behind it;
 with chunked prefill the engine builds mixed steps — one plan-sized prefill
 chunk co-scheduled with the decode batch under a per-step token budget —
-and small prefills overtake between chunks.
+and small prefills overtake between chunks. **Step packing** densifies the
+mixed step further: SEVERAL in-flight prefills' chunks ride one launch
+under the plan's per-hardware pack width, so a burst of shorts stops
+serializing one chunk per step.
 
-Both arms drive the real ``ServeEngine`` (identical model, plan, trace, and
+All arms drive the real ``ServeEngine`` (identical model, plan, trace, and
 greedy outputs) on a **cost-model virtual clock**: after every engine step
 the clock advances by the step's modeled seconds (tokens processed x the
 plan's per-token prefill/decode cost + a fixed step overhead), so the
@@ -18,15 +21,25 @@ exactly what this subsystem changes — the schedule, not the arithmetic.
 so CI finishes in seconds; the full trace uses the literal 512/32k mix.
 
 Asserted invariants (exit 1 on violation; CI runs ``--smoke``):
-  1. p95 small-request TTFT: chunked < unchunked on the mixed trace;
-  2. equal work both arms: same completions, same greedy tokens, and
-     chunked total virtual time within ``MAX_SLOWDOWN`` of unchunked
-     (the chunk-overhead bound — "equal total throughput");
+  1. p95 small-request TTFT: chunked < unchunked on the mixed trace, and
+     packed no worse than chunked;
+  2. equal work all arms: same completions, same greedy tokens; chunked
+     total virtual time within ``MAX_SLOWDOWN`` of unchunked, and packed
+     total virtual time <= chunked (packing only removes steps);
   3. the ``chunked_prefill`` plan cell compiles *different chunk lengths*
-     on tpu_v5e vs tpu_v6e at the full-dims 32k prompt (the paper's
-     per-hardware-model optimum, applied to the chunk-length tile axis);
+     AND the ``packed_prefill`` cell *different pack widths* on tpu_v5e vs
+     tpu_v6e at full dims (the paper's per-hardware-model optimum, applied
+     to the chunk-length and pack-width tile axes);
   4. a prompt longer than every bucket edge is admitted via chunking and
      completes (the overflow-admission fix), instead of being dropped.
+
+Traces come from ``benchmarks/traces.py`` (shared with
+``bench_serve_scheduler`` and ``tests/test_serve_packing.py``); ``--trace
+FAMILY`` swaps the default head-of-line trace for a seed-pinned
+adversarial family (``all_short`` / ``all_long`` / ``bimodal`` /
+``overflow_heavy``) — the exact prompts the conformance suite replays.
+``--hist-out packing_hist.json`` dumps the packed arm's
+chunks-per-step histogram (the CI artifact).
 
 ``--plans plans.json`` reuses a compiled artifact (the CI workflow passes
 the compile-plans job's artifact) instead of recompiling; the bench falls
@@ -36,10 +49,13 @@ does not cover the bench's shape family.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+import traces as trace_lib
 
 SMOKE = dict(
     edges=(64, 1024),
@@ -47,8 +63,11 @@ SMOKE = dict(
     long_lens=(900, 980),
     new_tokens=3,
     slots=2,
-    step_token_budget=80,
-    arrivals_per_step=2,
+    # Room for >= 2 small-bucket chunks + the decode batch per step, so the
+    # packed arm actually packs (the budget is what it trades against).
+    step_token_budget=200,
+    prefill_slots=4,
+    arrivals_per_step=3,
 )
 FULL = dict(
     edges=(512, 32768),
@@ -57,7 +76,8 @@ FULL = dict(
     new_tokens=3,
     slots=2,
     step_token_budget=2600,
-    arrivals_per_step=2,
+    prefill_slots=4,
+    arrivals_per_step=3,
 )
 HARDWARE = "tpu_v5e"
 DIVERGENCE_HW = ("tpu_v5e", "tpu_v6e")
@@ -79,11 +99,10 @@ class VirtualClock:
 def make_trace(params: dict, rng: np.random.Generator,
                vocab: int) -> List[np.ndarray]:
     """Long prompt first, then the small burst, then the second long —
-    the head-of-line pattern."""
-    lens = [params["long_lens"][0], *params["small_lens"][:6],
-            params["long_lens"][1], *params["small_lens"][6:]]
-    return [rng.integers(2, vocab, size=int(n)).astype(np.int32)
-            for n in lens]
+    the head-of-line pattern (shared builder: benchmarks/traces.py)."""
+    lens = trace_lib.head_of_line_lengths(params["small_lens"],
+                                          params["long_lens"])
+    return trace_lib.prompts(lens, rng, vocab)
 
 
 def load_or_compile_plan(path: Optional[str], cfg, edges, slots: int,
@@ -157,6 +176,7 @@ def drive(engine, clock: VirtualClock, trace, new_tokens: int,
 
 
 def run(smoke: bool = False, plans_path: Optional[str] = None,
+        trace_family: Optional[str] = None, hist_out: Optional[str] = None,
         print_fn=print) -> int:
     import jax
 
@@ -174,28 +194,41 @@ def run(smoke: bool = False, plans_path: Optional[str] = None,
     cfg = configs.get_smoke(ARCH)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    trace = make_trace(p, rng, cfg.vocab_size)
+    if trace_family:
+        # Seed-pinned adversarial family — the exact prompts the packing
+        # conformance suite replays (benchmarks/traces.py).
+        trace = trace_lib.make_trace(trace_family, seed=0,
+                                     vocab=cfg.vocab_size, edges=edges)
+    else:
+        trace = make_trace(p, rng, cfg.vocab_size)
+    allow_overflow = any(len(pr) > top for pr in trace)
     plan = load_or_compile_plan(plans_path, cfg, edges, slots, max_len,
                                 print_fn)
     t_pf, t_dec = step_cost_model(slots, max_len)
-    print_fn(f"# trace: {len(trace)} requests "
-             f"({len(p['small_lens'])} small <= {small_edge}, "
-             f"{len(p['long_lens'])} long ~{top}); virtual clock "
-             f"t_pf={t_pf:.2e}s/tok t_dec={t_dec:.2e}s/step")
+    print_fn(f"# trace: {trace_lib.trace_summary(trace, edges)} "
+             f"(family={trace_family or 'head_of_line (default)'}); "
+             f"virtual clock t_pf={t_pf:.2e}s/tok t_dec={t_dec:.2e}s/step")
 
     failures = 0
     results = {}
-    for mode in ("unchunked", "chunked"):
+    packed_hist: Dict[str, int] = {}
+    for mode in ("unchunked", "chunked", "packed"):
         clock = VirtualClock()
         eng = ServeEngine(
-            cfg, params, max_len=max_len, slots=slots, plans=plan,
+            cfg, params,
+            max_len=(max_len if not allow_overflow
+                     else 2 * top + new_tokens + 8),
+            slots=slots, plans=plan,
             hardware=HARDWARE_REGISTRY[HARDWARE],
             scheduler=ShapeBucketScheduler(
-                BucketPolicy(edges, max_queue=len(trace) + 1)),
+                BucketPolicy(edges, max_queue=len(trace) + 1,
+                             allow_overflow=allow_overflow)),
             clock=clock,
-            chunk_prefill=(mode == "chunked"),
+            chunk_prefill=(mode != "unchunked"),
+            pack_prefill=(mode == "packed"),
+            prefill_slots=p["prefill_slots"],
             step_token_budget=(p["step_token_budget"]
-                               if mode == "chunked" else 0))
+                               if mode != "unchunked" else 0))
         drive(eng, clock, trace, new_tokens, p["arrivals_per_step"],
               t_pf, t_dec)
         m = eng.metrics.as_dict()
@@ -209,34 +242,68 @@ def run(smoke: bool = False, plans_path: Optional[str] = None,
             mean=small.get("mean_s", 0.0),
             chunks=dict(eng.metrics.chunks_per_prefill),
         )
+        if mode == "packed":
+            packed_hist = {str(n): c for n, c in sorted(
+                eng.metrics.packed_chunks_per_step.items())}
         print_fn(f"{mode}: total={clock.t * 1e3:.2f}ms virtual, "
                  f"completed={eng.metrics.completed}, small-bucket TTFT "
                  f"mean={results[mode]['mean'] * 1e3:.2f}ms "
                  f"p50={results[mode]['p50'] * 1e3:.2f}ms "
                  f"p95={results[mode]['p95'] * 1e3:.2f}ms "
                  f"chunks/prefill={results[mode]['chunks']}")
+    print_fn(f"# packed chunks/step histogram: {packed_hist}")
+    if hist_out:
+        with open(hist_out, "w") as f:
+            json.dump({"packed_chunks_per_step": packed_hist,
+                       "trace": trace_lib.trace_summary(trace, edges),
+                       "family": trace_family or "head_of_line",
+                       "results": {m: {k: v for k, v in r.items()
+                                       if k != "tokens"}
+                                   for m, r in results.items()}},
+                      f, indent=1, sort_keys=True)
+        print_fn(f"# packed histogram written to {hist_out}")
 
-    # 1. tail TTFT of small requests improves.
-    if not results["chunked"]["p95"] < results["unchunked"]["p95"]:
+    # 1. tail TTFT of small requests: chunked beats unchunked, packed is
+    # no worse than one-chunk-per-step. The chunked-vs-unchunked win is
+    # the head-of-line effect — it only exists when long prompts block
+    # shorts, so it is asserted only on traces that contain longs
+    # (all_short has no head-of-line to cut; packing must still hold).
+    summary = trace_lib.trace_summary(trace, edges)
+    if summary["small"] > 0 and summary["long"] + summary["overflow"] > 0:
+        if not results["chunked"]["p95"] < results["unchunked"]["p95"]:
+            failures += 1
+            print_fn(f"FAIL: chunked small-request p95 TTFT "
+                     f"{results['chunked']['p95']:.4f}s not below unchunked "
+                     f"{results['unchunked']['p95']:.4f}s")
+    if results["packed"]["p95"] > results["chunked"]["p95"]:
         failures += 1
-        print_fn(f"FAIL: chunked small-request p95 TTFT "
-                 f"{results['chunked']['p95']:.4f}s not below unchunked "
-                 f"{results['unchunked']['p95']:.4f}s")
-    # 2. equal work: same completions and greedy tokens, bounded overhead.
-    if results["chunked"]["completed"] != results["unchunked"]["completed"]:
-        failures += 1
-        print_fn("FAIL: completion counts differ between arms")
-    if results["chunked"]["tokens"] != results["unchunked"]["tokens"]:
-        failures += 1
-        print_fn("FAIL: greedy outputs differ between arms (parity broken)")
+        print_fn(f"FAIL: packed small-request p95 TTFT "
+                 f"{results['packed']['p95']:.4f}s above one-chunk "
+                 f"{results['chunked']['p95']:.4f}s")
+    # 2. equal work: same completions and greedy tokens, bounded overhead;
+    # packing only removes steps, so packed virtual time <= one-chunk.
+    for mode in ("chunked", "packed"):
+        if results[mode]["completed"] != results["unchunked"]["completed"]:
+            failures += 1
+            print_fn(f"FAIL: {mode} completion count differs from unchunked")
+        if results[mode]["tokens"] != results["unchunked"]["tokens"]:
+            failures += 1
+            print_fn(f"FAIL: {mode} greedy outputs differ from unchunked "
+                     f"(parity broken)")
     if results["chunked"]["wall"] > MAX_SLOWDOWN * results["unchunked"]["wall"]:
         failures += 1
         print_fn(f"FAIL: chunked total virtual time "
                  f"{results['chunked']['wall']:.4f}s exceeds "
                  f"{MAX_SLOWDOWN}x unchunked "
                  f"{results['unchunked']['wall']:.4f}s")
+    if results["packed"]["wall"] > results["chunked"]["wall"]:
+        failures += 1
+        print_fn(f"FAIL: packed total virtual time "
+                 f"{results['packed']['wall']:.4f}s exceeds one-chunk "
+                 f"{results['chunked']['wall']:.4f}s (throughput regressed)")
 
-    # 3. per-hardware chunk-length divergence at the full-dims 32k cell.
+    # 3. per-hardware divergence at full dims: chunk length (32k prompt)
+    # and pack width (the 512-token small-request class).
     from repro.core import Autotuner
     from repro.core.plans import compile_entry
     from repro.launch.specs import kernel_problems
@@ -256,6 +323,20 @@ def run(smoke: bool = False, plans_path: Optional[str] = None,
         failures += 1
         print_fn(f"FAIL: chunk length does not diverge across "
                  f"{DIVERGENCE_HW}: {chunk_by_hw}")
+    pack_prob = kernel_problems(cfg_full, 1, 512,
+                                "packed_prefill")["packed_prefill"]
+    pack_by_hw = {}
+    for hw_name in DIVERGENCE_HW:
+        entry = compile_entry("packed_prefill", pack_prob, "float32",
+                              HARDWARE_REGISTRY[hw_name],
+                              autotuner=Autotuner())
+        pack_by_hw[hw_name] = entry.tile[0]
+        print_fn(f"# packed_prefill @ sq=512 on {hw_name}: "
+                 f"tile {entry.tile} ({entry.dominant}-bound)")
+    if len(set(pack_by_hw.values())) < 2:
+        failures += 1
+        print_fn(f"FAIL: pack width does not diverge across "
+                 f"{DIVERGENCE_HW}: {pack_by_hw}")
 
     # 4. overflow admission: longer than every edge, admitted via chunking.
     clock = VirtualClock()
@@ -290,8 +371,17 @@ def main():
     ap.add_argument("--plans", default=None,
                     help="compiled TilePlan artifact to reuse (falls back "
                          "to compiling the bench's own serving cells)")
+    ap.add_argument("--trace", default=None, choices=trace_lib.FAMILIES,
+                    help="replace the default head-of-line trace with a "
+                         "seed-pinned adversarial family (shared with the "
+                         "packing conformance suite)")
+    ap.add_argument("--hist-out", default=None,
+                    help="write the packed arm's chunks-per-step histogram "
+                         "to this JSON path (the CI artifact)")
     args = ap.parse_args()
-    sys.exit(1 if run(smoke=args.smoke, plans_path=args.plans) else 0)
+    sys.exit(1 if run(smoke=args.smoke, plans_path=args.plans,
+                      trace_family=args.trace, hist_out=args.hist_out)
+             else 0)
 
 
 if __name__ == "__main__":

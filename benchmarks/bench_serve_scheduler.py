@@ -35,6 +35,8 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
+import traces as trace_lib
+
 
 SMOKE = dict(
     edges=(16, 64, 256, 1024),
@@ -61,11 +63,8 @@ def make_trace(params: dict, rng: np.random.Generator,
                vocab: int) -> List[np.ndarray]:
     lengths = params["lengths"]
     if lengths is None:
-        bands = [(5, 30), (100, 450), (520, 1000)]
-        lengths = [int(rng.integers(*bands[i % len(bands)]))
-                   for i in range(24)]
-    return [rng.integers(2, vocab, size=int(l)).astype(np.int32)
-            for l in lengths]
+        lengths = trace_lib.banded_lengths(rng)
+    return trace_lib.prompts(lengths, rng, vocab)
 
 
 def compile_serving_plan(edges, slots: int, max_len: int,
@@ -101,7 +100,8 @@ def drive_open_loop(submit, step, trace, new_tokens: int,
     return time.perf_counter() - t0
 
 
-def run(smoke: bool = False, plans_path=None, print_fn=print) -> int:
+def run(smoke: bool = False, plans_path=None, trace_family=None,
+        print_fn=print) -> int:
     import jax
 
     from repro import configs, kernels
@@ -120,7 +120,14 @@ def run(smoke: bool = False, plans_path=None, print_fn=print) -> int:
     cfg = configs.get_smoke(ARCH)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    trace = make_trace(p, rng, cfg.vocab_size)
+    if trace_family:
+        # Seed-pinned adversarial family shared with the conformance suite
+        # (benchmarks/traces.py). Overflow lengths are clipped to the top
+        # edge: this bench's policies reject over-length prompts.
+        trace = [pr[:max(edges)] for pr in trace_lib.make_trace(
+            trace_family, seed=0, vocab=cfg.vocab_size, edges=edges)]
+    else:
+        trace = make_trace(p, rng, cfg.vocab_size)
     plan = compile_serving_plan(edges, slots, max_len,
                                 plans_path=plans_path, print_fn=print_fn)
     print_fn(f"# plan: {len(plan)} cells, hardware={plan.hardware_names()}, "
@@ -228,8 +235,13 @@ def main():
     ap.add_argument("--plans", default=None,
                     help="compiled TilePlan artifact to reuse (falls back "
                          "to compiling the bench's own serving cells)")
+    ap.add_argument("--trace", default=None, choices=trace_lib.FAMILIES,
+                    help="replace the default banded trace with a "
+                         "seed-pinned family from benchmarks/traces.py "
+                         "(shared with the packing conformance suite)")
     args = ap.parse_args()
-    sys.exit(1 if run(smoke=args.smoke, plans_path=args.plans) else 0)
+    sys.exit(1 if run(smoke=args.smoke, plans_path=args.plans,
+                      trace_family=args.trace) else 0)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,110 @@
+"""Seed-pinned request-trace generation shared by the serving benches and
+the packing conformance suite.
+
+``bench_chunked_prefill`` and ``bench_serve_scheduler`` used to each carry
+their own trace builder — a drift risk: the differential suites only prove
+anything when every arm (and every CI leg) replays the SAME trace. This
+module is the single source: the head-of-line pattern (long prompt admitted
+just before a burst of shorts), the mixed-shape banded trace, and the
+adversarial families the packing conformance suite sweeps
+(``all_long`` / ``all_short`` / ``bimodal`` / ``overflow_heavy``).
+
+Everything is a pure function of ``(family, seed, edges)`` — no module
+state — so a trace named on one bench's ``--trace`` flag is bit-identical
+to the same name in ``tests/test_serve_packing.py``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+# Adversarial length families, as fractions of the bucket-edge family:
+# values <= 1.0 scale the SMALLEST edge (single-chunk shorts), values
+# keyed "top" scale the LARGEST edge (multi-chunk longs / overflows).
+FAMILIES = ("head_of_line", "all_short", "all_long", "bimodal",
+            "overflow_heavy")
+
+
+def prompts(lengths: Sequence[int], rng: np.random.Generator,
+            vocab: int) -> List[np.ndarray]:
+    """Random-token prompts of the given lengths (ids 2..vocab-1; 0/1 are
+    reserved for pad/bos by convention)."""
+    return [rng.integers(2, vocab, size=int(n)).astype(np.int32)
+            for n in lengths]
+
+
+def head_of_line_lengths(small_lens: Sequence[int],
+                         long_lens: Sequence[int]) -> List[int]:
+    """The chunked-prefill bench's pattern: a long prompt first, then half
+    the small burst, the second long, then the rest — the head-of-line
+    scenario chunking (and packing) exists for."""
+    half = len(small_lens) // 2
+    return [long_lens[0], *small_lens[:half],
+            long_lens[1], *small_lens[half:]]
+
+
+def banded_lengths(rng: np.random.Generator, n: int = 24,
+                   bands: Sequence = ((5, 30), (100, 450), (520, 1000)),
+                   ) -> List[int]:
+    """The scheduler bench's mixed-shape trace: round-robin over length
+    bands so every bucket stays populated."""
+    return [int(rng.integers(*bands[i % len(bands)])) for i in range(n)]
+
+
+def adversarial_lengths(family: str, edges: Sequence[int], n: int,
+                        rng: np.random.Generator) -> List[int]:
+    """Length sequence for one adversarial family, scaled to ``edges``.
+
+    * ``all_short``     — everything fits the smallest bucket (the pure
+      packing regime: many single-chunk prefills compete for each step).
+    * ``all_long``      — everything lands in the top bucket (multi-chunk;
+      exercises the one-long-in-flight rule and aging under packing).
+    * ``bimodal``       — alternating short/long (the starvation trap:
+      shorts must overtake, longs must still progress).
+    * ``overflow_heavy``— mostly longer than the top edge (requires
+      ``allow_overflow``; overflow chunks must stay packable).
+    * ``head_of_line``  — the classic long-first-then-burst pattern at
+      edge-derived lengths.
+    """
+    lo, top = min(edges), max(edges)
+    if family == "all_short":
+        return [int(rng.integers(1, lo + 1)) for _ in range(n)]
+    if family == "all_long":
+        return [int(rng.integers(max(lo + 1, top // 2), top + 1))
+                for _ in range(n)]
+    if family == "bimodal":
+        return [int(rng.integers(1, lo + 1)) if i % 2 else
+                int(rng.integers(max(lo + 1, top // 2), top + 1))
+                for i in range(n)]
+    if family == "overflow_heavy":
+        return [int(rng.integers(top + 1, 2 * top + 1)) if i % 3 != 2 else
+                int(rng.integers(1, lo + 1)) for i in range(n)]
+    if family == "head_of_line":
+        smalls = [int(rng.integers(1, lo + 1)) for _ in range(max(2, n - 2))]
+        longs = [int(rng.integers(max(lo + 1, top // 2), top + 1))
+                 for _ in range(2)]
+        return head_of_line_lengths(smalls, longs)[:n]
+    raise ValueError(f"unknown trace family {family!r} (known: {FAMILIES})")
+
+
+def make_trace(family: str, seed: int, vocab: int, edges: Sequence[int],
+               n: int = 12) -> List[np.ndarray]:
+    """The seed-pinned named trace: same (family, seed, edges, n, vocab)
+    -> bit-identical prompts everywhere (benches' ``--trace`` mode and the
+    conformance suite both call this)."""
+    rng = np.random.default_rng(seed)
+    return prompts(adversarial_lengths(family, edges, n, rng), rng, vocab)
+
+
+def trace_summary(trace: Sequence[np.ndarray],
+                  edges: Sequence[int]) -> Dict[str, int]:
+    """Small/long/overflow composition of a trace (for bench logs)."""
+    lo, top = min(edges), max(edges)
+    lens = [len(p) for p in trace]
+    return {
+        "requests": len(lens),
+        "small": sum(l <= lo for l in lens),
+        "long": sum(lo < l <= top for l in lens),
+        "overflow": sum(l > top for l in lens),
+    }

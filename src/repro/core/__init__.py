@@ -29,6 +29,7 @@ from repro.core.plans import (
     PlanResolution,
     PlanSchemaError,
     PlanTransferWarning,
+    PlanVersionWarning,
     TilePlan,
     compile_plan,
 )
@@ -42,5 +43,6 @@ __all__ = [
     "TilingPolicy", "default_policy", "set_default_policy",
     "TileConstraints", "TileShape", "cdiv", "round_up",
     "PLAN_SCHEMA_VERSION", "PlanEntry", "PlanError", "PlanResolution",
-    "PlanSchemaError", "PlanTransferWarning", "TilePlan", "compile_plan",
+    "PlanSchemaError", "PlanTransferWarning", "PlanVersionWarning",
+    "TilePlan", "compile_plan",
 ]

@@ -46,9 +46,16 @@ from repro.core.tiling import TileShape
 
 log = logging.getLogger("repro.plans")
 
-# Bump on any incompatible change to the artifact layout. Loaders reject
-# mismatched versions (a stale artifact must not silently misconfigure tiles).
-PLAN_SCHEMA_VERSION = 1
+# Bump on any change to the artifact layout or to the cell families an
+# artifact is expected to cover. v1 -> v2: serving artifacts gained the
+# ``packed_prefill`` step-packing cells (compile_plans --serve-buckets).
+# Versions in COMPAT_SCHEMA_VERSIONS still load — their entry layout is
+# forward-compatible — but emit :class:`PlanVersionWarning` so operators
+# recompile (a v1 artifact cannot resolve pack widths and every packed
+# lookup degrades to the heuristic default). Anything else is rejected: a
+# stale artifact must not silently misconfigure tiles.
+PLAN_SCHEMA_VERSION = 2
+COMPAT_SCHEMA_VERSIONS = (1,)
 
 
 class PlanError(ValueError):
@@ -57,6 +64,16 @@ class PlanError(ValueError):
 
 class PlanSchemaError(PlanError):
     """Artifact exists but is not a valid plan (bad version / missing fields)."""
+
+
+class PlanVersionWarning(UserWarning):
+    """An artifact from an older (still-readable) schema version was loaded.
+
+    The entries resolve fine, but the artifact predates cell families the
+    current code expects (e.g. the packed_prefill serving cells), so those
+    lookups fall back to heuristics — recompile with
+    ``repro.launch.compile_plans`` to silence this.
+    """
 
 
 class PlanTransferWarning(UserWarning):
@@ -392,10 +409,21 @@ class TilePlan:
             raise PlanSchemaError(f"plan artifact must be an object, got "
                                   f"{type(d).__name__}")
         version = d.get("schema_version")
-        if version != PLAN_SCHEMA_VERSION:
+        if version in COMPAT_SCHEMA_VERSIONS:
+            msg = (
+                f"loading plan artifact with old schema version {version} "
+                f"(current {PLAN_SCHEMA_VERSION}): entries resolve, but "
+                f"cell families added since (e.g. packed_prefill serving "
+                f"cells) are missing and fall back to heuristics — "
+                f"recompile with repro.launch.compile_plans"
+            )
+            warnings.warn(PlanVersionWarning(msg), stacklevel=3)
+            log.warning("%s", msg)
+        elif version != PLAN_SCHEMA_VERSION:
             raise PlanSchemaError(
                 f"plan schema version {version!r} unsupported "
-                f"(expected {PLAN_SCHEMA_VERSION}); recompile with "
+                f"(expected {PLAN_SCHEMA_VERSION}, compat "
+                f"{COMPAT_SCHEMA_VERSIONS}); recompile with "
                 f"repro.launch.compile_plans"
             )
         entries = d.get("entries")

@@ -25,6 +25,18 @@ the chunk length (how much prompt one sub-launch covers — the resident
 query block) and the KV split streamed under it. The cell is registered in
 ``ops.py``; VMEM capacity bounds the resident chunk per hardware model, so
 the same prompt length compiles different chunk sizes on different models.
+
+**Step packing** (:func:`flash_prefill_packed_ref`) lifts the chunk
+continuation one level further: N independent requests' chunks are
+segment-concatenated into ONE launch — queries carry a per-token segment id
+next to their absolute position, keys carry the same pair, and visibility
+requires segment equality on top of the causal position rule, so one
+kernel invocation serves N requests without any cross-request attention.
+This is the Model-Based-Warp-Overlapped-Tiling move applied at the serving
+layer: independently-tiled work items overlap in one launch, and the
+tunable ``(pack, bkv)`` cell (``packed_prefill`` in ``ops.py``) makes the
+*pack width* — how many chunk tokens ride one step — a first-class
+per-hardware-model tile axis.
 """
 from __future__ import annotations
 
@@ -66,12 +78,54 @@ def flash_prefill_chunk_ref(
     divisor of ``Skv`` (``fit_bkv``).
 
     NOTE: ``flash_decode_ref`` (decode.py) is the ``Sq == 1`` special case
-    of this scan. The bodies are kept separate on purpose — each reference
-    mirrors the structure of its Pallas kernel (decode: resident grouped
-    rows; chunked: resident query block) — but a change to the masking or
+    of this scan. Those bodies are kept separate on purpose — each mirrors
+    the structure of its Pallas kernel (decode: resident grouped rows;
+    chunked: resident query block) — but a change to the masking or
     softmax-update rule in one almost certainly belongs in the other; the
     decode==prefill parity suites in tests/test_kernels_decode.py and
-    tests/test_serve_chunked.py pin both.
+    tests/test_serve_chunked.py pin both. This single-segment case, by
+    contrast, IS :func:`flash_prefill_packed_ref` with constant-zero
+    segment ids (segment equality is then vacuously true), so it delegates
+    rather than keeping a third hand-synced copy of the scan.
+    """
+    sq, skv = q.shape[2], k.shape[2]
+    if kv_pos is None:
+        kv_pos = jnp.arange(skv, dtype=jnp.int32)
+    return flash_prefill_packed_ref(
+        q, k, v, q_pos=q_pos, q_seg=jnp.zeros((sq,), jnp.int32),
+        kv_pos=kv_pos, kv_seg=jnp.zeros((skv,), jnp.int32),
+        window=window, softcap=softcap, scale=scale, bkv=bkv)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "scale", "bkv"),
+)
+def flash_prefill_packed_ref(
+    q, k, v, *, q_pos, q_seg, kv_pos, kv_seg,
+    window: Optional[int] = None, softcap: Optional[float] = None,
+    scale: Optional[float] = None, bkv: int = 512,
+):
+    """Segment-packed online-softmax attention: N requests, one launch.
+
+    q ``[B, Hq, Sq, D]`` concatenates the chunks of N independent requests
+    along the sequence axis; ``q_pos`` [Sq] carries each token's absolute
+    position *within its own request* and ``q_seg`` [Sq] tags which request
+    (segment) it belongs to. k/v ``[B, Hkv, Skv, D]`` concatenate each
+    segment's visible keys (its cache history ++ its own chunk keys), with
+    ``kv_pos`` / ``kv_seg`` the matching per-key position and segment maps
+    (``kv_pos == -1`` = never-written ring slot). A key is visible iff it
+    belongs to the SAME segment (``kv_seg == q_seg``) and the causal
+    continuation rule holds (``0 <= kv_pos <= q_pos``, plus the window
+    bound when given) — so request i's queries never attend request j's
+    keys, and within a segment the math is exactly
+    :func:`flash_prefill_chunk_ref`.
+
+    The scan streams KV in ``bkv`` splits like the single-segment reference
+    (a non-dividing ``bkv`` snaps to the largest divisor of ``Skv``); the
+    resident block is the whole packed query set — the ``pack`` axis of the
+    ``packed_prefill`` plan cell, which VMEM capacity bounds per hardware
+    model (wider packs on bigger-VMEM models; see ``ops.py``).
     """
     b, hq, sq, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
@@ -80,18 +134,18 @@ def flash_prefill_chunk_ref(
     scale = scale if scale is not None else d ** -0.5
     bkv = fit_bkv(bkv, skv)
     n_kv = skv // bkv
-    if kv_pos is None:
-        kv_pos = jnp.arange(skv, dtype=jnp.int32)
 
     qg = q.reshape(b, hkv, n_rep, sq, d).astype(jnp.float32) * scale
     qp = jnp.asarray(q_pos, jnp.int32)
+    qs = jnp.asarray(q_seg, jnp.int32)
     kc = k.reshape(b, hkv, n_kv, bkv, d).transpose(2, 0, 1, 3, 4)
     vc = v.reshape(b, hkv, n_kv, bkv, d).transpose(2, 0, 1, 3, 4)
     pc = jnp.asarray(kv_pos, jnp.int32).reshape(n_kv, bkv)
+    sc = jnp.asarray(kv_seg, jnp.int32).reshape(n_kv, bkv)
 
     def body(carry, xs):
         m_prev, l_prev, acc = carry
-        k_blk, v_blk, kp = xs
+        k_blk, v_blk, kp, ks = xs
         s_blk = jnp.einsum(
             "bgrqd,bgkd->bgrqk", qg, k_blk.astype(jnp.float32),
             preferred_element_type=jnp.float32,
@@ -99,6 +153,7 @@ def flash_prefill_chunk_ref(
         if softcap is not None:
             s_blk = softcap * jnp.tanh(s_blk / softcap)
         valid = jnp.logical_and(kp[None, :] >= 0, kp[None, :] <= qp[:, None])
+        valid = jnp.logical_and(valid, ks[None, :] == qs[:, None])
         if window is not None:
             valid = jnp.logical_and(valid, kp[None, :] > qp[:, None] - window)
         s_blk = jnp.where(valid[None, None, None], s_blk, NEG_INF)
@@ -117,6 +172,6 @@ def flash_prefill_chunk_ref(
     m0 = jnp.full((b, hkv, n_rep, sq), NEG_INF, jnp.float32)
     l0 = jnp.zeros((b, hkv, n_rep, sq), jnp.float32)
     acc0 = jnp.zeros((b, hkv, n_rep, sq, d), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kc, vc, pc))
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kc, vc, pc, sc))
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     return out.reshape(b, hq, sq, d).astype(q.dtype)

@@ -19,6 +19,18 @@
     model and the per-chunk fixed dispatch cost penalizes tiny chunks:
     different hardware models compile different chunk lengths for the same
     prompt.
+``packed_prefill`` (N requests' chunks segment-concatenated into ONE
+    launch — the step-packing unit; see flash_prefill_packed_ref):
+    problem dims {"sq", "skv", "d", "hq", "hkv", "window"(0=none)} where
+    ``sq`` is the segment class (the bucket edge the packed short prompts
+    belong to); tile rank 2 = (pack, bkv) — ``pack`` is the PACK WIDTH,
+    the total packed chunk tokens resident in one step, which may exceed
+    ``sq`` (that is the point: several sq-length segments ride one
+    launch). The cell models serving a fixed round of PACK_ROUND_SEGS
+    segments in ceil(round/pack) packed steps, each paying one fixed
+    dispatch cost, so wider packs amortize dispatch while VMEM capacity
+    bounds the resident pack per hardware model: different models compile
+    different pack widths for the same bucket set.
 """
 from __future__ import annotations
 
@@ -285,4 +297,96 @@ registry.register(registry.KernelSpec(
     workload=_chunked_workload,
     n_tiles=_chunked_n_tiles,
     default_tile=_chunked_default_tile,
+))
+
+
+# ---------------------------------------------------------------------------
+# packed_prefill: N requests' chunks segment-concatenated into one launch.
+# ---------------------------------------------------------------------------
+
+# The fixed workload one packed cell is scored against: a round of this many
+# sq-length segments (short prompts of the bucket class), served in
+# ceil(round/pack) packed steps. A fixed round makes scores comparable
+# across pack widths — the tile changes how the round is decomposed, not
+# how much work it is (mirroring chunked_prefill's whole-prompt scoring).
+PACK_ROUND_SEGS = 8
+
+# Fixed per-packed-step dispatch cost, in DRAM pages: one scheduler pick +
+# program re-entry + per-segment cache-pointer descriptors per step,
+# regardless of how many segments ride it. Packing exists to amortize this
+# over more chunk tokens per step.
+PACK_STEP_PAGES = 256
+
+
+def _packed_constraints(problem: Mapping[str, int]) -> TileConstraints:
+    # dim 0 = pack width (resident packed query tokens; sublane-tiled rows,
+    # MXU M dim) — bounded by the whole round, NOT by sq: pack > sq is the
+    # multi-segment case. dim 1 = bkv (lane dim / MXU N dim).
+    return TileConstraints(
+        rank=2,
+        max_dims=(PACK_ROUND_SEGS * problem["sq"], problem["skv"]),
+        mxu_dims=(0, 1), lane_dim=1, sublane_dim=0,
+    )
+
+
+def _packed_vmem_bytes(tile: TileShape, problem: Mapping[str, int],
+                       dtype: str) -> float:
+    pack, bkv = tile
+    d = problem["d"]
+    b = dtype_bytes(dtype)
+    resident = pack * d * b + pack * d * 4        # q block + f32 accumulator
+    kv_tiles = 2 * bkv * d * b                    # streamed K and V blocks
+    scratch = pack * 128 * 4 * 2                  # running max / denominator
+    logits = pack * bkv * 4
+    return resident + kv_tiles + scratch + logits
+
+
+def _packed_workload(tile: TileShape, problem: Mapping[str, int],
+                     dtype: str) -> TileWorkload:
+    pack, bkv = tile
+    sq, d = problem["sq"], problem["d"]
+    b = dtype_bytes(dtype)
+    window = problem.get("window", 0)
+    # Each packed token belongs to an sq-length segment and attends its own
+    # causal prefix (avg sq/2; window-bounded when set) — segment masking
+    # means packing never adds cross-segment MACs.
+    visible = float(min(window, sq)) if window else sq / 2.0
+    flops = 4.0 * pack * visible * d
+    # Per step: every resident segment streams its own visible KV prefix
+    # ((pack/sq) segments x avg prefix), the packed q/out block moves once,
+    # each KV split re-issues its stream descriptors, and ONE fixed
+    # dispatch cost covers the whole step — the term wider packs amortize.
+    n_segs = max(1.0, pack / sq)
+    hbm = (
+        n_segs * 2.0 * visible * d * b            # per-segment K/V streams
+        + 2 * pack * d * b                        # packed q in / out write
+        + 2 * DRAM_PAGE_BYTES * cdiv(problem["skv"], bkv)
+        + PACK_STEP_PAGES * DRAM_PAGE_BYTES       # per-step dispatch
+    )
+    return TileWorkload(
+        flops=flops,
+        hbm_bytes=hbm,
+        row_segments=bkv // 8,
+        row_stride_bytes=float(d * b),
+        pad_waste=max(1.0, 128 / d),
+    )
+
+
+def _packed_n_tiles(tile: TileShape, problem: Mapping[str, int]) -> int:
+    # Steps to serve the fixed round of segments, per query head.
+    return problem["hq"] * cdiv(PACK_ROUND_SEGS * problem["sq"], tile[0])
+
+
+def _packed_default_tile(problem: Mapping[str, int], dtype: str) -> TileShape:
+    pack = min(1024, PACK_ROUND_SEGS * problem["sq"])
+    return TileShape((pack, min(512, problem["skv"])))
+
+
+registry.register(registry.KernelSpec(
+    name="packed_prefill",
+    constraints=_packed_constraints,
+    vmem_bytes=_packed_vmem_bytes,
+    workload=_packed_workload,
+    n_tiles=_packed_n_tiles,
+    default_tile=_packed_default_tile,
 ))

@@ -65,15 +65,17 @@ def serve_bucket_cells(arch_names: Sequence[str], edges: Sequence[int],
                        slots: int, max_len: int, smoke: bool = False,
                        ) -> List[Tuple[str, Dict[str, int]]]:
     """The serving scheduler's shape family as deduped (kernel, problem)
-    cells: a (batch=1, seq=edge) prefill cell AND a chunked-prefill cell
-    (chunk length swept as a first-class tile axis) per bucket edge, plus
-    the engine's (slots, max_len) decode cell, per architecture."""
+    cells: a (batch=1, seq=edge) prefill cell, a chunked-prefill cell
+    (chunk length swept as a first-class tile axis) AND a packed-prefill
+    cell (pack width swept — how many chunk tokens ride one step) per
+    bucket edge, plus the engine's (slots, max_len) decode cell, per
+    architecture."""
     cells: Dict[Tuple[str, Tuple[Tuple[str, int], ...]], Dict[str, int]] = {}
     get_cfg = configs.get_smoke if smoke else configs.get_arch
     for arch in arch_names:
         cfg = get_cfg(arch)
         for edge in edges:
-            for kind in ("prefill", "chunked_prefill"):
+            for kind in ("prefill", "chunked_prefill", "packed_prefill"):
                 for kernel, problem in kernel_problems(
                         cfg, 1, edge, kind).items():
                     cells[(kernel, tuple(sorted(problem.items())))] = problem

@@ -21,6 +21,13 @@ length comes from the artifact's ``chunked_prefill`` cell for the target
 hardware, so different models prefill the same prompt in different chunk
 sizes. Prompts longer than the largest bucket edge are then admitted too
 (padded to a multiple of the top edge) instead of rejected.
+
+``--pack-prefill`` goes one step further (true batch mixing): each step
+packs SEVERAL in-flight prefills' chunks — segment-concatenated into one
+kernel launch — plus the decode batch, under the step budget and the
+artifact's ``packed_prefill`` pack width (VMEM-bounded per hardware model,
+so different models pack different widths). Token outputs are identical to
+one-chunk-per-step and unchunked service; only the schedule densifies.
 """
 from __future__ import annotations
 
@@ -84,6 +91,11 @@ def main():
     ap.add_argument("--prefill-slots", type=int, default=2,
                     help="concurrent partially-prefilled requests (chunked "
                          "mode; lets short prompts overtake long ones)")
+    ap.add_argument("--pack-prefill", action="store_true",
+                    help="pack MULTIPLE prefill chunks (plus the decode "
+                         "batch) into each step under --step-token-budget "
+                         "and the plan's per-hardware pack width, instead "
+                         "of one chunk per step (implies --chunk-prefill)")
     ap.add_argument("--fleet", default="",
                     help="comma list of hardware models; serve through the "
                          "fleet router with one engine per model "
@@ -106,7 +118,7 @@ def main():
         policy = build_policy(
             args.bucket_policy, plans,
             None if fleet_names else args.hardware, args.max_queue,
-            allow_overflow=args.chunk_prefill)
+            allow_overflow=args.chunk_prefill or args.pack_prefill)
 
     def make_engine(hw_name: str) -> ServeEngine:
         return ServeEngine(
@@ -115,7 +127,8 @@ def main():
             scheduler=make_scheduler(args.scheduler, policy),
             chunk_prefill=args.chunk_prefill,
             step_token_budget=args.step_token_budget,
-            prefill_slots=args.prefill_slots)
+            prefill_slots=args.prefill_slots,
+            pack_prefill=args.pack_prefill)
 
     router = None
     if fleet_names:

@@ -32,15 +32,20 @@ def kernel_problems(cfg: ArchConfig, batch: int, seq_len: int,
     """Per-kernel tile-tuning problems for one (config, geometry) cell.
 
     ``kind``: "train" | "prefill" (full-sequence), "decode" (one token per
-    sequence against a KV cache of ``seq_len``), or "chunked_prefill" (the
+    sequence against a KV cache of ``seq_len``), "chunked_prefill" (the
     full ``seq_len`` prompt prefilled in scheduler-sized chunks — same
     geometry as "prefill" but the attention cell is the ``chunked_prefill``
     kernel, whose tile ``(chunk, bkv)`` makes the chunk length a
-    first-class tuning axis). Pure config arithmetic — no jax, no sweeps —
-    so hot paths can call it at init time.
+    first-class tuning axis), or "packed_prefill" (N requests of the
+    ``seq_len`` bucket class segment-concatenated into one launch — the
+    attention cell is ``packed_prefill``, whose tile ``(pack, bkv)`` makes
+    the PACK WIDTH the tuning axis; see kernels/flash_attention/ops.py).
+    Pure config arithmetic — no jax, no sweeps — so hot paths can call it
+    at init time.
     """
     decode = kind == "decode"
     chunked = kind == "chunked_prefill"
+    packed = kind == "packed_prefill"
     tokens = batch if decode else min(batch * seq_len, MAX_PLAN_TOKENS)
     problems: Dict[str, Dict[str, int]] = {
         # The FF projection GEMM dominates per-layer step time.
@@ -65,7 +70,9 @@ def kernel_problems(cfg: ArchConfig, batch: int, seq_len: int,
                 window=window,
             )
         else:
-            attn_kernel = "chunked_prefill" if chunked else "flash_attention"
+            attn_kernel = ("packed_prefill" if packed
+                           else "chunked_prefill" if chunked
+                           else "flash_attention")
             problems[attn_kernel] = dict(
                 sq=seq_len,
                 skv=seq_len,

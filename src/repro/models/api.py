@@ -144,6 +144,30 @@ def prefill_chunk(
     return out.logits[:, -1], out.caches
 
 
+def prefill_packed(
+    params, cfg: ArchConfig, tokens: jnp.ndarray, states, layout,
+    ctx: Optional[DistContext] = None, tiles: Tiles = None,
+):
+    """One packed step of N independent requests' chunked prefills.
+
+    ``tokens`` [1, S_packed] segment-concatenates one chunk per request;
+    ``layout`` is the static tuple of per-segment ``(start, len)`` pairs
+    (each request's continuation offset and chunk length) and ``states``
+    the matching tuple of per-request serve states. Embedding/norm/FF work
+    runs once over the pack, attention runs one segment-masked launch per
+    layer, and each request's state advances exactly as if its chunk had
+    gone through :func:`prefill_chunk` alone — step packing changes the
+    schedule, not the math (tests/test_serve_packing.py pins parity).
+
+    Returns ``(per-segment last-position logits [N, Vpad], new states)``.
+    """
+    if is_encdec(cfg):
+        raise NotImplementedError(
+            "packed prefill is not supported for encoder-decoder models")
+    return T.forward_packed(params, cfg, tokens, states, layout, ctx=ctx,
+                            tiles=tiles)
+
+
 def decode_step(
     params, cfg: ArchConfig, token: jnp.ndarray, state,
     ctx: Optional[DistContext] = None, tiles: Tiles = None,

@@ -28,7 +28,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import flags
-from repro.kernels.flash_attention.chunked import flash_prefill_chunk_ref
+from repro.kernels.flash_attention.chunked import (
+    flash_prefill_chunk_ref, flash_prefill_packed_ref,
+)
 from repro.kernels.flash_attention.decode import (
     fit_bkv, flash_decode, flash_decode_ref,
 )
@@ -102,6 +104,35 @@ def make_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype,
     return cache
 
 
+def _ring_write(cache, k, v, positions_1d, end_pos):
+    """Write a chunk's K/V tail into a ring cache: the last
+    ``min(chunk, W)`` positions land at ``pos % W`` with their absolute
+    positions recorded in ``slot_pos``. ONE implementation shared by the
+    full-sequence, chunked, and packed prefill paths — ring wraparound
+    drift between them would break the chunk/pack parity suites."""
+    max_len = cache["k"].shape[2]
+    keep = min(k.shape[2], max_len)
+    kk = k[:, :, -keep:]
+    vv = v[:, :, -keep:]
+    pos_tail = positions_1d[-keep:]
+    slots = pos_tail % max_len
+    ck = cache["k"].at[:, :, slots].set(kk.astype(cache["k"].dtype))
+    cv = cache["v"].at[:, :, slots].set(vv.astype(cache["v"].dtype))
+    sp = cache["slot_pos"].at[slots].set(pos_tail)
+    return {"k": ck, "v": cv, "pos": jnp.asarray(end_pos, jnp.int32),
+            "slot_pos": sp}
+
+
+def _linear_write(cache, k, v, start, end_pos):
+    """Write a chunk's K/V into a linear cache at its static offset
+    (shared by the same three prefill paths as :func:`_ring_write`)."""
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, 0, start, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, 0, start, 0))
+    return {"k": ck, "v": cv, "pos": jnp.asarray(end_pos, jnp.int32)}
+
+
 def _project_qkv(p, cfg: ArchConfig, x, positions):
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
@@ -161,7 +192,8 @@ def attn_forward(
         impl = "pallas" if (flags.pallas_enabled() and divides) \
             else "reference"
     if impl == "pallas":
-        out = flash_attention(q, k, v, tile=t or (512, 512), **kwargs)
+        out = flash_attention(q, k, v, tile=t or (512, 512),
+                              interpret=flags.pallas_interpret(), **kwargs)
         if tile is not None:
             _emit_tile_event(kernel="flash_attention", phase="prefill",
                              impl="pallas", tile=tuple(tile),
@@ -185,27 +217,11 @@ def attn_forward(
     y = _out_proj(p, cfg, out, x.dtype)
     new_cache = None
     if cache is not None:
-        max_len = cache["k"].shape[2]
         if "slot_pos" in cache:
             # Ring prefill: keep the last ``max_len`` positions.
-            keep = min(s, max_len)
-            kk = k[:, :, -keep:]
-            vv = v[:, :, -keep:]
-            pos_tail = positions[0, -keep:]
-            slots = pos_tail % max_len
-            ck = cache["k"].at[:, :, slots].set(kk.astype(cache["k"].dtype))
-            cv = cache["v"].at[:, :, slots].set(vv.astype(cache["v"].dtype))
-            sp = cache["slot_pos"].at[slots].set(pos_tail)
-            new_cache = {"k": ck, "v": cv, "pos": jnp.asarray(s, jnp.int32),
-                         "slot_pos": sp}
+            new_cache = _ring_write(cache, k, v, positions[0], s)
         else:
-            ck = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)
-            )
-            cv = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)
-            )
-            new_cache = {"k": ck, "v": cv, "pos": jnp.asarray(s, jnp.int32)}
+            new_cache = _linear_write(cache, k, v, 0, s)
     return y, new_cache
 
 
@@ -266,16 +282,7 @@ def attn_prefill_chunk(
             q, k_all, v_all, q_pos=positions[0], kv_pos=kv_pos,
             window=window, softcap=softcap, scale=scale, bkv=bkv)
         # Write the chunk's tail into the ring (mirrors attn_forward).
-        keep = min(c, max_len)
-        kk = k[:, :, -keep:]
-        vv = v[:, :, -keep:]
-        pos_tail = positions[0, -keep:]
-        slots = pos_tail % max_len
-        ck = cache["k"].at[:, :, slots].set(kk.astype(cache["k"].dtype))
-        cv = cache["v"].at[:, :, slots].set(vv.astype(cache["v"].dtype))
-        sp = cache["slot_pos"].at[slots].set(pos_tail)
-        new_cache = {"k": ck, "v": cv,
-                     "pos": jnp.asarray(start + c, jnp.int32), "slot_pos": sp}
+        new_cache = _ring_write(cache, k, v, positions[0], start + c)
     else:
         # Linear cache: the written prefix is exactly positions 0..start-1,
         # so the existing q_offset continuation math applies directly.
@@ -297,6 +304,7 @@ def attn_prefill_chunk(
                       scale=scale, q_offset=start)
         if impl == "pallas":
             out = flash_attention(q, k_all, v_all, tile=t or (512, 512),
+                                  interpret=flags.pallas_interpret(),
                                   **kwargs)
             if tile is not None:
                 _emit_tile_event(kernel="chunked_prefill", phase="prefill",
@@ -316,14 +324,110 @@ def attn_prefill_chunk(
                 chunk_kv = 512
             out = flash_attention_ref(q, k_all, v_all,
                                       chunk=min(chunk_kv, skv), **kwargs)
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, 0, start, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, 0, start, 0))
-        new_cache = {"k": ck, "v": cv,
-                     "pos": jnp.asarray(start + c, jnp.int32)}
+        new_cache = _linear_write(cache, k, v, start, start + c)
     y = _out_proj(p, cfg, out, x.dtype)
     return y, new_cache
+
+
+def attn_prefill_packed(
+    p, cfg: ArchConfig, x, positions, *,
+    caches,
+    layout,
+    window: Optional[int] = None,
+    tile=None,
+):
+    """Packed continuation prefill: N requests' chunks, one attention call.
+
+    ``x`` [1, S_packed, D] segment-concatenates the chunks of N independent
+    requests; ``layout`` is the static tuple of per-segment ``(start, len)``
+    pairs (sum of lens = S_packed) and ``positions`` [1, S_packed] carries
+    each token's absolute position within its own request. ``caches`` is
+    the matching tuple of per-request layer caches (each batch=1). Every
+    segment attends causally over ITS OWN cache prefix plus its own chunk —
+    never another segment's keys: the packed lowering concatenates each
+    segment's visible KV with per-key segment tags and masks on segment
+    equality (:func:`flash_prefill_packed_ref`), so the math per request is
+    exactly :func:`attn_prefill_chunk` while the projections, the softmax
+    scan, and the surrounding FF GEMMs run once over the whole pack — the
+    occupancy win step packing exists for.
+
+    ``tile`` is the plan-resolved ``packed_prefill`` tile ``(pack, bkv)``;
+    ``bkv`` sets the packed KV stream split (the pack width itself is the
+    scheduler's knob — by the time this runs, the pack is already built).
+    Linear caches write each segment at its static start offset; ring
+    caches take the chunked ring-write path per segment. Returns
+    ``(y [1, S_packed, D], tuple of per-request new caches)``.
+    """
+    b, s_packed, _ = x.shape
+    assert b == 1, "packed prefill packs segments, not batch rows"
+    assert len(caches) == len(layout) and layout, (len(caches), len(layout))
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    scale = cfg.query_scale or cfg.head_dim_ ** -0.5
+    softcap = cfg.attn_softcap or None
+    ring = "slot_pos" in caches[0]
+
+    offs = [0]
+    for _, ln in layout:
+        offs.append(offs[-1] + ln)
+    assert offs[-1] == s_packed, (offs, s_packed)
+
+    k_parts, v_parts, kvp_parts, kvs_parts = [], [], [], []
+    for i, ((start, ln), cache) in enumerate(zip(layout, caches)):
+        k_seg = k[:, :, offs[i]:offs[i] + ln]
+        v_seg = v[:, :, offs[i]:offs[i] + ln]
+        seg_pos = positions[0, offs[i]:offs[i] + ln].astype(jnp.int32)
+        if ring:
+            # Ring prefix: the whole window buffer, slot_pos mapping each
+            # slot to its absolute position (-1 = never written).
+            k_parts += [cache["k"].astype(k.dtype), k_seg]
+            v_parts += [cache["v"].astype(v.dtype), v_seg]
+            kvp_parts += [cache["slot_pos"], seg_pos]
+            prefix_len = cache["k"].shape[2]
+        else:
+            # Linear prefix: exactly the positions 0..start-1 written by the
+            # segment's earlier chunks (static slice — layout is static).
+            k_parts += [cache["k"][:, :, :start].astype(k.dtype), k_seg]
+            v_parts += [cache["v"][:, :, :start].astype(v.dtype), v_seg]
+            kvp_parts += [jnp.arange(start, dtype=jnp.int32), seg_pos]
+            prefix_len = start
+        kvs_parts.append(jnp.full((prefix_len + ln,), i, jnp.int32))
+    k_all = jnp.concatenate(k_parts, axis=2)
+    v_all = jnp.concatenate(v_parts, axis=2)
+    kv_pos = jnp.concatenate(kvp_parts)
+    kv_seg = jnp.concatenate(kvs_parts)
+    q_seg = jnp.concatenate([
+        jnp.full((ln,), i, jnp.int32) for i, (_, ln) in enumerate(layout)
+    ])
+
+    skv = k_all.shape[2]
+    if tile is not None:
+        requested = min(int(tile[-1]), skv)
+        effective = fit_bkv(requested, skv)
+        _emit_tile_event(kernel="packed_prefill", phase="prefill",
+                         impl="reference", tile=tuple(tile),
+                         effective=effective,
+                         fallback=effective != requested)
+        bkv = requested
+    else:
+        bkv = 512
+    out = flash_prefill_packed_ref(
+        q, k_all, v_all, q_pos=positions[0], q_seg=q_seg,
+        kv_pos=kv_pos, kv_seg=kv_seg, window=window, softcap=softcap,
+        scale=scale, bkv=bkv)
+
+    new_caches = []
+    for i, ((start, ln), cache) in enumerate(zip(layout, caches)):
+        k_seg = k[:, :, offs[i]:offs[i] + ln]
+        v_seg = v[:, :, offs[i]:offs[i] + ln]
+        seg_pos = positions[0, offs[i]:offs[i] + ln]
+        if ring:
+            new_caches.append(
+                _ring_write(cache, k_seg, v_seg, seg_pos, start + ln))
+        else:
+            new_caches.append(
+                _linear_write(cache, k_seg, v_seg, start, start + ln))
+    y = _out_proj(p, cfg, out, x.dtype)
+    return y, tuple(new_caches)
 
 
 def _decode_attn_sharded(cfg: ArchConfig, ctx, qd, k_new, v_new, cache,
@@ -486,9 +590,11 @@ def attn_decode(
     softcap = cfg.attn_softcap or None
     if impl in ("pallas", "flash_ref"):
         fn = flash_decode if impl == "pallas" else flash_decode_ref
+        extra = ({"interpret": flags.pallas_interpret()}
+                 if impl == "pallas" else {})
         out = fn(
             q[:, :, 0], ck, cv, pos=pos, kv_pos=slot_pos, window=window,
-            softcap=softcap, scale=scale, bkv=clamped or 512,
+            softcap=softcap, scale=scale, bkv=clamped or 512, **extra,
         )[:, :, None]                                      # [B, Hq, 1, hd]
         out = out.astype(x.dtype)
     else:

@@ -52,12 +52,25 @@ def set_perf(attn_bf16=None, remat=None, ssd_chunk=None,
         DECODE_ATTN_SHARDED = bool(decode_sharded)
 
 
+def pallas_interpret() -> bool:
+    """Interpret-mode Pallas: REPRO_PALLAS_INTERPRET=1 runs the Pallas TPU
+    kernels through the Pallas interpreter on host backends. Orders of
+    magnitude slower than the reference lowerings — for conformance CI
+    only, where it exercises the exact kernel bodies (grid/BlockSpec/
+    masking logic) a TPU deployment would run, without TPU hardware."""
+    import os
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "") not in ("", "0")
+
+
 def pallas_enabled() -> bool:
     """Whether plan-resolved tiles may select Pallas TPU kernels in the
-    model stack. True only on a real TPU backend: the kernels cannot lower
-    to host HLO, so CPU/GPU backends keep the reference lowerings (tiles
-    still parameterize those — e.g. the flash reference's KV chunk)."""
+    model stack. True only on a real TPU backend — or under interpret-mode
+    Pallas (see :func:`pallas_interpret`): the kernels cannot lower to host
+    HLO, so CPU/GPU backends keep the reference lowerings (tiles still
+    parameterize those — e.g. the flash reference's KV chunk)."""
     import jax
+    if pallas_interpret():
+        return True
     try:
         return jax.default_backend() == "tpu"
     except RuntimeError:

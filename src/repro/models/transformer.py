@@ -182,8 +182,12 @@ def param_logical_axes(cfg: ArchConfig):
 # ---------------------------------------------------------------------------
 
 def _mixer(p, cfg: ArchConfig, spec: LayerSpec, x, positions, cache,
-           decode: bool, ctx=None, tiles=None, chunk_start=None):
+           decode: bool, ctx=None, tiles=None, chunk_start=None,
+           pack_layout=None):
     tiles = tiles or {}
+    if pack_layout is not None:
+        return _mixer_packed(p, cfg, spec, x, positions, cache, tiles,
+                             pack_layout)
     if spec.mixer in ("attn", "local_attn"):
         window = cfg.attn_window if spec.mixer == "local_attn" else None
         if decode:
@@ -207,6 +211,41 @@ def _mixer(p, cfg: ArchConfig, spec: LayerSpec, x, positions, cache,
     raise ValueError(spec.mixer)
 
 
+def _mixer_packed(p, cfg: ArchConfig, spec: LayerSpec, x, positions, caches,
+                  tiles, layout):
+    """One mixer over a packed (segment-concatenated) multi-request step.
+
+    ``caches`` is a TUPLE of per-request layer caches/states (one per
+    segment of the static ``layout``). Attention layers run the whole pack
+    as ONE segment-masked launch (``attn_prefill_packed``); recurrent/SSD
+    layers are sequence recurrences — a packed sequence would leak state
+    across segment boundaries — so they run per segment on static slices,
+    each continuing its own carried state (the surrounding norms/FF still
+    run packed, which is where their win lives anyway).
+    """
+    if spec.mixer in ("attn", "local_attn"):
+        window = cfg.attn_window if spec.mixer == "local_attn" else None
+        return attn_mod.attn_prefill_packed(
+            p["attn"], cfg, x, positions, caches=caches, layout=layout,
+            window=window, tile=tiles.get("packed_prefill"))
+    outs, news = [], []
+    off = 0
+    for (_, ln), cache in zip(layout, caches):
+        seg = x[:, off:off + ln]
+        if spec.mixer == "rglru":
+            y, nc = rglru_mod.rglru_forward(p["rglru"], cfg, seg, state=cache)
+        elif spec.mixer == "ssd":
+            ssd_tile = tiles.get("ssd")
+            y, nc = ssm_mod.ssm_forward(p["ssm"], cfg, seg, state=cache,
+                                        chunk=ssd_tile[0] if ssd_tile else 0)
+        else:
+            raise ValueError(spec.mixer)
+        outs.append(y)
+        news.append(nc)
+        off += ln
+    return jnp.concatenate(outs, axis=1), tuple(news)
+
+
 def _tile_fits(tile, m: int, k: int, n: int) -> bool:
     """True when the (clamped) tile divides the GEMM — pallas_call legality."""
     return all(dim % min(t, dim) == 0
@@ -228,9 +267,11 @@ def _dense_ff(p, cfg: ArchConfig, x, tile=None):
 
         xf = x.reshape(b * s, d)
         t = tuple(tile)
-        h = act(mm(xf, p["w1"].astype(x.dtype), tile=t))
-        h = h * mm(xf, p["w3"].astype(x.dtype), tile=t)
-        return mm(h, p["w2"].astype(x.dtype), tile=t).reshape(b, s, -1)
+        interp = flags.pallas_interpret()
+        h = act(mm(xf, p["w1"].astype(x.dtype), tile=t, interpret=interp))
+        h = h * mm(xf, p["w3"].astype(x.dtype), tile=t, interpret=interp)
+        return mm(h, p["w2"].astype(x.dtype), tile=t,
+                  interpret=interp).reshape(b, s, -1)
     h = act(jnp.einsum("bsd,df->bsf", x, p["w1"].astype(x.dtype)))
     h = h * jnp.einsum("bsd,df->bsf", x, p["w3"].astype(x.dtype))
     return jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(x.dtype))
@@ -239,14 +280,17 @@ def _dense_ff(p, cfg: ArchConfig, x, tile=None):
 def layer_forward(
     p, cfg: ArchConfig, spec: LayerSpec, x, positions, cache,
     ctx: Optional[DistContext], decode: bool = False, tiles=None,
-    chunk_start=None,
+    chunk_start=None, pack_layout=None,
 ):
-    """Returns (x_out, new_cache, aux)."""
+    """Returns (x_out, new_cache, aux). With ``pack_layout`` (a packed
+    multi-request step) ``cache`` is a tuple of per-request caches and the
+    returned new_cache matches."""
     aux = jnp.zeros((), jnp.float32)
     ff_tile = (tiles or {}).get("matmul")
     h = _apply_norm(p, cfg, x, "norm1")
     mix, new_cache = _mixer(p, cfg, spec, h, positions, cache, decode, ctx,
-                            tiles, chunk_start=chunk_start)
+                            tiles, chunk_start=chunk_start,
+                            pack_layout=pack_layout)
     if cfg.post_norms:
         mix = _apply_norm(p, cfg, mix, "post1")
 
@@ -276,9 +320,12 @@ def layer_forward(
 def _scan_unit(
     unit_params, cfg: ArchConfig, unit: Tuple[LayerSpec, ...], x, positions,
     unit_caches, ctx, decode: bool, remat: bool, tiles=None, chunk_start=None,
+    pack_layout=None,
 ):
     """Scan a repeat unit (tuple of per-position stacked params) ``reps``
-    times. unit_caches: matching list of stacked caches (or None)."""
+    times. unit_caches: matching list of stacked caches (or None); in a
+    packed step each element is a TUPLE of per-request stacked caches —
+    scan slices every leaf's rep axis, tuples included."""
 
     def body(carry, xs):
         xc, aux_sum = carry
@@ -287,7 +334,8 @@ def _scan_unit(
         for spec, lp, lc in zip(unit, lps, lcs):
             xc, nc, aux = layer_forward(lp, cfg, spec, xc, positions, lc,
                                         ctx, decode, tiles=tiles,
-                                        chunk_start=chunk_start)
+                                        chunk_start=chunk_start,
+                                        pack_layout=pack_layout)
             aux_sum = aux_sum + aux
             ncs.append(nc)
         return (xc, aux_sum), ncs
@@ -441,6 +489,85 @@ def forward(
         logits = ctx.constrain(logits, "batch", None, "vocab")
     return StackOutputs(logits=logits, aux_loss=aux_total, caches=new_caches,
                         hidden=x)
+
+
+def forward_packed(
+    params, cfg: ArchConfig, tokens: jnp.ndarray, states, layout,
+    ctx: Optional[DistContext] = None, tiles=None,
+) -> Tuple[jnp.ndarray, Tuple]:
+    """One packed multi-request prefill step over the whole stack.
+
+    ``tokens`` [1, S_packed] segment-concatenates N requests' chunks;
+    ``layout`` is the static tuple of per-segment ``(start, len)`` pairs
+    and ``states`` the matching tuple of per-request serve states (from
+    :func:`make_caches` / the previous chunk). Embedding, norms, and FF
+    GEMMs run once over the pack (the step-packing occupancy win);
+    attention runs one segment-masked launch per layer
+    (``attn_prefill_packed``); recurrent/SSD mixers continue each
+    request's carried state on per-segment slices. Per request the math is
+    exactly the chunked prefill of ``forward(chunked=True)``.
+
+    Returns ``(logits [N, Vpad], new_states)``: each segment's final-
+    position logits (a request's first sampled token when this was its
+    last chunk) and the tuple of per-request updated states.
+    """
+    b, s = tokens.shape
+    if b != 1:
+        raise ValueError("packed prefill packs segments, not batch rows")
+    if not layout or len(states) != len(layout):
+        raise ValueError(f"layout/state mismatch: {len(layout)} segments, "
+                         f"{len(states)} states")
+    if sum(ln for _, ln in layout) != s:
+        raise ValueError(f"layout {layout} does not cover {s} tokens")
+    n_req = len(states)
+    x = params["embed"][tokens]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    positions = jnp.concatenate([
+        start + jnp.arange(ln, dtype=jnp.int32) for start, ln in layout
+    ])[None]
+    if ctx is not None:
+        x = ctx.constrain(x, "batch", None, None)
+
+    # Per-request new states, mirroring each input state's segment layout.
+    new_states: List[List[Any]] = [[] for _ in range(n_req)]
+    for gi, seg in enumerate(decompose(cfg)):
+        gp = params["segments"][gi]
+        if seg[0] == "seq":
+            ncs = []
+            for li, spec in enumerate(seg[1]):
+                lc = tuple(st[gi][li] for st in states)
+                x, nc, _ = layer_forward(gp[li], cfg, spec, x, positions,
+                                         lc, ctx, False, tiles=tiles,
+                                         pack_layout=layout)
+                ncs.append(nc)                    # tuple over requests
+            for r in range(n_req):
+                new_states[r].append([nc[r] for nc in ncs])
+        else:
+            _, unit, reps = seg
+            gc = [tuple(st[gi][ui] for st in states)
+                  for ui in range(len(unit))]
+            x, ncs, _ = _scan_unit(
+                gp, cfg, unit, x, positions, gc, ctx, False, remat=False,
+                tiles=tiles, pack_layout=layout,
+            )
+            for r in range(n_req):
+                new_states[r].append([nc[r] for nc in ncs])
+
+    x = _apply_norm(params, cfg, x, "final_norm")
+    ends = []
+    off = 0
+    for _, ln in layout:
+        off += ln
+        ends.append(off - 1)
+    x_last = x[0, jnp.asarray(ends)]              # [N, D]
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    )
+    logits = jnp.einsum("nd,dv->nv", x_last, head.astype(x_last.dtype))
+    if cfg.final_softcap:
+        logits = softcap(logits, cfg.final_softcap)
+    return logits, tuple(new_states)
 
 
 def lm_loss(logits: jnp.ndarray, targets: jnp.ndarray, cfg: ArchConfig,

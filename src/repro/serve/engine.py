@@ -22,6 +22,20 @@ over its static start offset and replays the existing q_offset
 continuation math in kernels/flash_attention, so chunked and whole-prompt
 prefill match position by position (tests/test_serve_chunked.py).
 
+Step packing (``pack_prefill=True``, implies chunked prefill): instead of
+ONE chunk per mixed step, the engine packs MULTIPLE in-flight prefills'
+chunks — segment-concatenated into a single kernel launch with per-segment
+``q_offset``/``kv_pos`` masking (``api.prefill_packed``) — plus the decode
+batch, under the same ``step_token_budget``. The pack is chosen by the
+scheduler's knapsack (:func:`~repro.serve.scheduler.pick_chunks`): the
+SRPT/aging head always runs (progress guarantee), then further whole
+chunks greedily fill ``min(step budget - slots, pack width)``, where the
+PACK WIDTH is the plan's ``packed_prefill`` tile — VMEM-bounded per
+hardware model, so v5e and v6e pack different numbers of chunk tokens per
+step for the same bucket set. Per request the math is unchanged (token
+parity with one-chunk-per-step and unchunked service is pinned by
+``tests/test_serve_packing.py``); only the schedule gets denser.
+
 Admission is delegated to a scheduler (``repro.serve.scheduler``): the
 default :class:`~repro.serve.scheduler.FifoScheduler` preserves the naive
 raw-shape behavior; a :class:`~repro.serve.scheduler.ShapeBucketScheduler`
@@ -83,6 +97,7 @@ class _ChunkJob:
     state: Any = None             # serve caches, built chunk by chunk
     done: int = 0                 # prompt tokens prefilled so far
     chunks_run: int = 0
+    packed_runs: int = 0          # chunks that rode a multi-segment pack
     last_t: float = 0.0           # last prefill progress (chunk queue age)
     # Trace-time tile events from every chunk program this request ran,
     # deduped once at prefill completion so an N-chunk prefill counts each
@@ -104,7 +119,8 @@ class ServeEngine:
                  clock: Callable[[], float] = time.perf_counter,
                  chunk_prefill: bool = False,
                  step_token_budget: int = 0,
-                 prefill_slots: int = 2):
+                 prefill_slots: int = 2,
+                 pack_prefill: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -120,7 +136,9 @@ class ServeEngine:
         # bound, the plan's chunk length runs unclamped. ``prefill_slots``
         # bounds how many partially-prefilled caches are held at once (the
         # concurrency that lets a short prompt overtake a long one).
-        self.chunk_prefill = chunk_prefill
+        # ``pack_prefill`` packs several chunks per step (implies chunking).
+        self.pack_prefill = pack_prefill
+        self.chunk_prefill = chunk_prefill or pack_prefill
         self.step_token_budget = step_token_budget
         self.prefill_slots = max(1, prefill_slots)
         self._chunking: List[_ChunkJob] = []
@@ -135,9 +153,22 @@ class ServeEngine:
         self._chunk_plans: Dict[int, Any] = {}      # admit_len -> plan tuple
         self._chunk_fns: Dict[Any, Any] = {}        # (admit_len, start) -> fn
         self._chunk_tile_events: Dict[Any, List[Dict[str, Any]]] = {}
+        # Step packing: the plan-resolved pack width + tiles (lazy, per
+        # engine), one jitted packed program per static segment layout.
+        # Unlike _chunk_fns (whose (admit_len, start) key space is linear
+        # in buckets x chunks), layouts are cross-products of per-segment
+        # offsets — the cache is FIFO-bounded so a long-running server
+        # cannot accrete compiled programs without limit.
+        self._pack_plan_cache: Optional[Any] = None
+        self._pack_fns: Dict[Any, Any] = {}         # layout -> fn
+        self._pack_tile_events: Dict[Any, List[Dict[str, Any]]] = {}
         # Per-step mixed-token accounting (virtual-clock drivers read this).
-        self.last_step_stats: Dict[str, int] = {"prefill_tokens": 0,
-                                                "decode_tokens": 0}
+        # ``packed_chunks``/``packed_rids`` describe the step's prefill pack
+        # (conformance tests and the bench histogram read them).
+        self.last_step_stats: Dict[str, Any] = {"prefill_tokens": 0,
+                                                "decode_tokens": 0,
+                                                "packed_chunks": 0,
+                                                "packed_rids": ()}
         # kernel name -> resolved tile for the decode path; populated from
         # the AOT plan at init so serving never pays a sweep.
         self.tiles: Dict[str, TileShape] = {}
@@ -251,6 +282,68 @@ class ServeEngine:
         return fn
 
     # -- chunked prefill -----------------------------------------------------
+    def _resolve_serve_cell(self, kind: str, seq_len: int):
+        """Resolve one serving attention cell (``chunked_prefill`` or
+        ``packed_prefill``) from the plan store at one geometry; falls back
+        to the kernel's heuristic default tile, never a sweep. Returns
+        ``(problem | None, tile | None, source)`` — problem is None for
+        attention-free models (the cell never runs). ONE implementation for
+        both cell kinds so chunked and packed plan accounting cannot
+        drift."""
+        from repro import kernels as kernel_pkg
+        from repro.core import registry
+        from repro.launch.specs import kernel_problems
+
+        kernel_pkg.register_all()
+        dtype = jnp.dtype(self.dtype).name
+        problem = kernel_problems(self.cfg, 1, seq_len, kind).get(kind)
+        tile, source = None, "no_plan"
+        if problem is not None:
+            if self.plans is not None:
+                with warnings.catch_warnings():
+                    warnings.simplefilter("ignore", PlanTransferWarning)
+                    res = self.plans.resolve(kind, problem, dtype,
+                                             self.hardware)
+                if res is not None:
+                    tile, source = res.tile, res.source
+                else:
+                    source = "fallback"
+            if tile is None:
+                tile = registry.get(kind).default_tile(problem, dtype)
+        return problem, tile, source
+
+    def _model_tiles_for(self, seq_len: int):
+        """The surrounding (FF/recurrent) prefill kernel tiles at one
+        geometry, with their plan sources. The whole-sequence
+        flash_attention cell is dropped: chunk/pack programs consume the
+        chunked_prefill/packed_prefill cells instead, and plan counters
+        must reflect the cells the programs actually run."""
+        from repro.launch.specs import kernel_problems, resolve_model_tiles
+
+        dtype = jnp.dtype(self.dtype).name
+        tiles: Dict[str, TileShape] = {}
+        sources: Dict[str, str] = {}
+        if self.plans is not None:
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", PlanTransferWarning)
+                tiles, resolutions = resolve_model_tiles(
+                    self.plans, self.cfg, 1, seq_len, "prefill", dtype,
+                    self.hardware)
+            tiles.pop("flash_attention", None)
+            sources = {
+                kernel: (resolutions[kernel].source
+                         if kernel in resolutions else "fallback")
+                for kernel in tiles
+            }
+        else:
+            sources = {
+                kernel: "no_plan"
+                for kernel in kernel_problems(self.cfg, 1, seq_len,
+                                              "prefill")
+                if kernel != "flash_attention"
+            }
+        return tiles, sources
+
     def _chunk_plan(self, admit_len: int):
         """(chunk_len, tiles, sources) for prefilling one admitted length.
 
@@ -264,57 +357,15 @@ class ServeEngine:
         hit = self._chunk_plans.get(admit_len)
         if hit is not None:
             return hit
-        from repro import kernels as kernel_pkg
-        from repro.core import registry
-        from repro.launch.specs import kernel_problems, resolve_model_tiles
-
-        kernel_pkg.register_all()
-        dtype = jnp.dtype(self.dtype).name
-        problem = kernel_problems(
-            self.cfg, 1, admit_len, "chunked_prefill").get("chunked_prefill")
-        tile, source = None, "no_plan"
-        if problem is not None:
-            if self.plans is not None:
-                with warnings.catch_warnings():
-                    warnings.simplefilter("ignore", PlanTransferWarning)
-                    res = self.plans.resolve(
-                        "chunked_prefill", problem, dtype, self.hardware)
-                if res is not None:
-                    tile, source = res.tile, res.source
-                else:
-                    source = "fallback"
-            if tile is None:
-                tile = registry.get("chunked_prefill").default_tile(
-                    problem, dtype)
+        problem, tile, source = self._resolve_serve_cell(
+            "chunked_prefill", admit_len)
         chunk = int(tile[0]) if tile is not None else min(512, admit_len)
         if self.step_token_budget:
             # A mixed step must fit one chunk + the whole decode batch.
             chunk = min(chunk, max(1, self.step_token_budget - self.slots))
         chunk = max(1, min(chunk, admit_len))
 
-        tiles: Dict[str, TileShape] = {}
-        sources: Dict[str, str] = {}
-        if self.plans is not None:
-            with warnings.catch_warnings():
-                warnings.simplefilter("ignore", PlanTransferWarning)
-                tiles, resolutions = resolve_model_tiles(
-                    self.plans, self.cfg, 1, chunk, "prefill", dtype,
-                    self.hardware)
-            # The chunk's attention is the chunked_prefill cell, not a
-            # (chunk x chunk) flash_attention prefill — drop the latter so
-            # plan counters reflect the cells the programs consume.
-            tiles.pop("flash_attention", None)
-            sources = {
-                kernel: (resolutions[kernel].source
-                         if kernel in resolutions else "fallback")
-                for kernel in tiles
-            }
-        else:
-            sources = {
-                kernel: "no_plan"
-                for kernel in kernel_problems(self.cfg, 1, chunk, "prefill")
-                if kernel != "flash_attention"
-            }
+        tiles, sources = self._model_tiles_for(chunk)
         if tile is not None:
             tiles["chunked_prefill"] = tile
         if problem is not None:
@@ -352,6 +403,117 @@ class ServeEngine:
         )
         self._chunk_fns[key] = fn
         return fn
+
+    # -- step packing --------------------------------------------------------
+    def _pack_plan(self):
+        """(pack width, tiles, source) for packed multi-chunk steps.
+
+        The pack width — how many prefill-chunk tokens one packed step may
+        carry — is the plan-resolved ``packed_prefill`` tile's first dim,
+        chosen per hardware model (VMEM bounds the resident pack, so v5e
+        and v6e pack different widths for the same bucket set). The cell is
+        resolved at the single-chunk bucket bound: the segment class step
+        packing exists for is the short prompts that fit one chunk. The
+        remaining (FF/recurrent) tiles are resolved at the pack geometry —
+        the token count the packed programs actually run.
+        """
+        if self._pack_plan_cache is not None:
+            return self._pack_plan_cache
+        policy = getattr(self.scheduler, "policy", None)
+        edge = self._single_chunk_bound() or (
+            min(policy.edges) if policy is not None else 512)
+        problem, tile, source = self._resolve_serve_cell(
+            "packed_prefill", edge)
+        width = int(tile[0]) if tile is not None else max(512, edge)
+        tiles, _ = self._model_tiles_for(min(width, self.max_len))
+        if tile is not None:
+            tiles["packed_prefill"] = tile
+        self._pack_plan_cache = (width, tiles, source)
+        return self._pack_plan_cache
+
+    def _pack_budget(self) -> float:
+        """Max prefill-chunk tokens one packed step may carry: the plan's
+        pack width, clamped so pack + decode batch fits the step budget."""
+        width, _, _ = self._pack_plan()
+        if self.step_token_budget:
+            return min(width, max(1, self.step_token_budget - self.slots))
+        return width
+
+    # Bound on cached packed programs (and their tile events): beyond it
+    # the oldest layout is evicted and would retrace if seen again.
+    PACK_FN_CACHE_CAP = 256
+
+    def _pack_fn(self, layout):
+        """The jitted packed program for one static segment layout
+        (tuple of per-segment (start, len) pairs — the packed analogue of
+        the per-(admit_len, start) chunk programs)."""
+        fn = self._pack_fns.get(layout)
+        if fn is not None:
+            return fn
+        while len(self._pack_fns) >= self.PACK_FN_CACHE_CAP:
+            oldest = next(iter(self._pack_fns))
+            del self._pack_fns[oldest]
+            self._pack_tile_events.pop(oldest, None)
+        _, tiles, _ = self._pack_plan()
+        cfg = self.cfg
+        fn = jax.jit(
+            lambda p, toks, sts: api.prefill_packed(
+                p, cfg, toks, sts, layout, tiles=tiles or None)
+        )
+        self._pack_fns[layout] = fn
+        return fn
+
+    def _ensure_state(self, job: _ChunkJob) -> None:
+        if job.state is None:
+            job.state = api.make_serve_state(
+                self.cfg, 1, self.max_len, self.dtype,
+                ring_local=bool(self.cfg.attn_window))
+
+    def _advance_job(self, job: _ChunkJob, take: int, events, logits,
+                     packed: bool = False) -> None:
+        """Per-chunk bookkeeping shared by the one-chunk and packed paths:
+        tile events accrue, chunk telemetry ticks, progress advances, and a
+        completed prefill leaves the chunking set. One implementation on
+        purpose — packed and one-chunk accounting must never drift (the
+        conformance suite pins their observable equality)."""
+        job.events.extend(events)
+        now = self._clock()
+        self.metrics.record_chunk(job.req.bucket, now - job.last_t)
+        job.last_t = now
+        job.done += take
+        job.chunks_run += 1
+        job.packed_runs += packed
+        if job.done >= len(job.prompt):
+            self._chunking.remove(job)
+            self._finish_prefill(job, logits)
+
+    def _run_pack(self, picks) -> int:
+        """Advance every picked job by one chunk in ONE packed launch;
+        returns the pack's total token count."""
+        jobs = [job for job, _ in picks]
+        layout = tuple((job.done, take) for job, take in picks)
+        for job in jobs:
+            self._ensure_state(job)
+        toks = jnp.asarray(np.concatenate([
+            job.prompt[start:start + take]
+            for job, (start, take) in zip(jobs, layout)
+        ])[None])
+        fn = self._pack_fn(layout)
+        states = tuple(job.state for job in jobs)
+        events = self._pack_tile_events.get(layout)
+        if events is None:
+            captured: List[Dict[str, Any]] = []
+            with attn_mod.capture_tile_events(captured.append):
+                logits, new_states = fn(self.params, toks, states)
+            events = self._dedupe_events(captured)
+            self._pack_tile_events[layout] = events
+        else:
+            logits, new_states = fn(self.params, toks, states)
+        for i, (job, (start, take)) in enumerate(zip(jobs, layout)):
+            job.state = new_states[i]
+            self._advance_job(job, take, events, logits[i][None],
+                              packed=True)
+        return sum(take for _, take in layout)
 
     def _is_multi_chunk(self, req: Request) -> bool:
         """Will this request's prefill span more than one chunk?"""
@@ -460,10 +622,7 @@ class ServeEngine:
         """Advance one job by one chunk; returns the chunk's token count."""
         start = job.done
         length = min(job.chunk_len, len(job.prompt) - start)
-        if job.state is None:
-            job.state = api.make_serve_state(
-                self.cfg, 1, self.max_len, self.dtype,
-                ring_local=bool(self.cfg.attn_window))
+        self._ensure_state(job)
         fn = self._chunk_fn(len(job.prompt), start)
         toks = jnp.asarray(job.prompt[None, start:start + length])
         key = (len(job.prompt), start)
@@ -476,15 +635,7 @@ class ServeEngine:
             self._chunk_tile_events[key] = events
         else:
             logits, job.state = fn(self.params, toks, job.state)
-        job.events.extend(events)
-        now = self._clock()
-        self.metrics.record_chunk(job.req.bucket, now - job.last_t)
-        job.last_t = now
-        job.done += length
-        job.chunks_run += 1
-        if job.done >= len(job.prompt):
-            self._chunking.remove(job)
-            self._finish_prefill(job, logits)
+        self._advance_job(job, length, events, logits)
         return length
 
     def _finish_prefill(self, job: _ChunkJob, logits) -> None:
@@ -495,6 +646,13 @@ class ServeEngine:
         # per chunk: a 16-chunk prefill must not inflate tile_fallback 16x.
         for kernel, source in sources.items():
             self.metrics.record_plan("prefill", kernel, source)
+        if job.packed_runs:
+            # The request's chunks (also) rode packed launches: count the
+            # packed cell's resolution once per request, like every other
+            # prefill cell.
+            _, _, pack_source = self._pack_plan()
+            self.metrics.record_plan("prefill", "packed_prefill",
+                                     pack_source)
         for ev in self._dedupe_events(job.events):
             self._record_tile_event(ev)
         self.metrics.record_prefill_chunks(job.chunks_run)
@@ -627,7 +785,8 @@ class ServeEngine:
         self.metrics.record_queue_depth(self.scheduler.pending())
         n = self._decode_all()
         self.last_step_stats = {"prefill_tokens": prefill_tokens,
-                                "decode_tokens": n}
+                                "decode_tokens": n,
+                                "packed_chunks": 0, "packed_rids": ()}
         return n
 
     def _step_chunked(self) -> int:
@@ -636,17 +795,48 @@ class ServeEngine:
         self.metrics.record_queue_depth(
             self.scheduler.pending() + len(self._held))
         prefill_tokens = 0
-        job = self._next_chunk_job()
-        if job is not None:
-            prefill_tokens = self._run_chunk(job)
-            # A prefill finished by that chunk may start decoding this very
-            # step if a slot is free — its first decode token rides the
-            # same mixed step.
-            self._admit_chunked()
+        packed_rids: tuple = ()
+        if self.pack_prefill:
+            picks = self._next_pack()
+            if picks:
+                packed_rids = tuple(job.req.rid for job, _ in picks)
+                self.metrics.record_packed_step(len(picks))
+                if len(picks) == 1:
+                    # Singleton pack: reuse the per-(admit_len, start)
+                    # chunk program — same math, warmer jit cache.
+                    prefill_tokens = self._run_chunk(picks[0][0])
+                else:
+                    prefill_tokens = self._run_pack(picks)
+                self._admit_chunked()
+        else:
+            job = self._next_chunk_job()
+            if job is not None:
+                packed_rids = (job.req.rid,)
+                prefill_tokens = self._run_chunk(job)
+                # A prefill finished by that chunk may start decoding this
+                # very step if a slot is free — its first decode token
+                # rides the same mixed step.
+                self._admit_chunked()
         n = self._decode_all()
         self.last_step_stats = {"prefill_tokens": prefill_tokens,
-                                "decode_tokens": n}
+                                "decode_tokens": n,
+                                "packed_chunks": len(packed_rids),
+                                "packed_rids": packed_rids}
         return n + len(self._chunking) + len(self._ready) + len(self._held)
+
+    def _next_pack(self):
+        """The chunks this packed step runs: scheduler knapsack over the
+        in-flight prefills under min(step budget - decode batch, plan pack
+        width), at most ``prefill_slots`` segments, with the same
+        SRPT-plus-aging head rule as one-chunk-per-step service."""
+        from repro.serve.scheduler import pick_chunks
+
+        if not self._chunking:
+            return []
+        self._chunk_ticks += 1
+        aging = self._chunk_ticks % self.AGING_PERIOD == 0
+        return pick_chunks(self._chunking, self._pack_budget(),
+                           self.prefill_slots, aging=aging)
 
     def in_flight(self) -> int:
         """Requests holding engine state (decode slots + partial prefills +

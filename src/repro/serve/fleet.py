@@ -64,13 +64,20 @@ class FleetRouter:
     # -- cost model ----------------------------------------------------------
     def _phase_cost(self, name: str, kind: str, length: int) -> float:
         """Estimated seconds of one prefill (kind="prefill" for monolithic,
-        "chunked_prefill" for the chunk-decomposed cell, both batch 1) or
-        one decode step (kind="decode", the engine's slot batch) on
-        ``name``."""
+        "chunked_prefill" for the chunk-decomposed cell, "packed_prefill"
+        for the step-packed cell, all batch 1) or one decode step
+        (kind="decode", the engine's slot batch) on ``name``.
+
+        The packed cell is scored against a fixed round of
+        ``PACK_ROUND_SEGS`` segments (that is what makes pack widths
+        comparable in the sweep), so its score is divided back to ONE
+        request here — keeping every kind's cost in per-request seconds.
+        """
         key = (name, kind, length)
         hit = self._cell_cost.get(key)
         if hit is not None:
             return hit
+        from repro.kernels.flash_attention.ops import PACK_ROUND_SEGS
         from repro.launch.specs import kernel_problems
 
         eng = self.engines[name]
@@ -84,11 +91,14 @@ class FleetRouter:
                 res = (eng.plans.resolve(kernel, problem, dtype, eng.hardware)
                        if eng.plans is not None else None)
                 if res is not None:
-                    total += res.score_s
+                    score = res.score_s
                 else:
                     tile = registry.get(kernel).default_tile(problem, dtype)
-                    total += score_tile(kernel, tile, problem, dtype,
-                                        eng.hardware)
+                    score = score_tile(kernel, tile, problem, dtype,
+                                       eng.hardware)
+                if kernel == "packed_prefill":
+                    score /= PACK_ROUND_SEGS
+                total += score
         self._cell_cost[key] = total
         return total
 
@@ -99,10 +109,14 @@ class FleetRouter:
         Chunk-prefill engines price the prefill through the plan's
         ``chunked_prefill`` cell — the chunk-decomposed cost, including the
         per-chunk dispatch overhead the chunk length was tuned against —
-        so the estimate reflects how the engine will actually run it.
+        and step-packing engines through the ``packed_prefill`` cell,
+        whose per-step dispatch cost is amortized over the plan's pack
+        width — so the estimate reflects how each engine will actually run
+        the request.
         """
         eng = self.engines[name]
-        prefill_kind = ("chunked_prefill" if eng.chunk_prefill
+        prefill_kind = ("packed_prefill" if eng.pack_prefill
+                        else "chunked_prefill" if eng.chunk_prefill
                         else "prefill")
         return (self._phase_cost(name, prefill_kind, bucket)
                 + max_new_tokens

@@ -22,9 +22,11 @@ Measured quantities follow serving convention:
   (``prefill`` / ``decode``). ``plan_hit_rate()`` is the exact-hit fraction,
   the quantity the shape-bucketed scheduler exists to maximize.
 * **Chunked prefill**: per-chunk queue age (gap since the request last made
-  prefill progress), a chunks-per-prefill histogram, and per-step mixed
-  token counts. Rejections carry an explicit reason (``over_length`` /
-  ``queue_full`` / ``cache_overflow``) — admission never drops silently.
+  prefill progress), a chunks-per-prefill histogram, a packed-chunks-per-
+  step histogram (how many prefill chunks rode each packed step), and
+  per-step mixed token counts. Rejections carry an explicit reason
+  (``over_length`` / ``queue_full`` / ``cache_overflow``) — admission
+  never drops silently.
 """
 from __future__ import annotations
 
@@ -110,6 +112,9 @@ class ServeMetrics:
         self.chunks_run = 0
         self.chunk_age: Dict[object, _LatencyStat] = defaultdict(_LatencyStat)
         self.chunks_per_prefill: Counter = Counter()
+        # Step packing: how many prefill chunks rode each packed step — the
+        # occupancy histogram the packing bench uploads as a CI artifact.
+        self.packed_chunks_per_step: Counter = Counter()
 
     # -- request lifecycle ---------------------------------------------------
     def record_submit(self, rid: int) -> None:
@@ -158,6 +163,10 @@ class ServeMetrics:
     def record_prefill_chunks(self, n_chunks: int) -> None:
         """A request's prefill completed after ``n_chunks`` chunks."""
         self.chunks_per_prefill[n_chunks] += 1
+
+    def record_packed_step(self, n_chunks: int) -> None:
+        """A packed step ran ``n_chunks`` prefill chunks in one launch."""
+        self.packed_chunks_per_step[n_chunks] += 1
 
     def record_queue_depth(self, depth: int) -> None:
         self.queue_depth_max = max(self.queue_depth_max, depth)
@@ -212,6 +221,9 @@ class ServeMetrics:
                 "chunks_per_prefill": {
                     str(n): c for n, c in
                     sorted(self.chunks_per_prefill.items())},
+                "packed_chunks_per_step": {
+                    str(n): c for n, c in
+                    sorted(self.packed_chunks_per_step.items())},
                 "chunk_age_s": {str(b): s.as_dict() for b, s in sorted(
                     self.chunk_age.items(), key=lambda kv: str(kv[0]))},
             },
@@ -253,6 +265,10 @@ class ServeMetrics:
                 f"  chunked prefill: {self.chunks_run} chunks, "
                 f"chunks/prefill "
                 f"{d['chunked_prefill']['chunks_per_prefill']}")
+        if self.packed_chunks_per_step:
+            lines.append(
+                f"  step packing: chunks/step "
+                f"{d['chunked_prefill']['packed_chunks_per_step']}")
         for label, table in (("ttft", d["ttft_s"]), ("tpot", d["tpot_s"])):
             for bucket, stat in table.items():
                 lines.append(

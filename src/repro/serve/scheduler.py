@@ -271,6 +271,49 @@ class ShapeBucketScheduler:
         return [req.bucket for q in self._queues.values() for _, req in q]
 
 
+def pick_chunks(jobs: Sequence, budget: float, slots: int,
+                aging: bool = False) -> List[Tuple[object, int]]:
+    """Knapsack-style pick of the prefill chunks one packed step runs.
+
+    ``jobs`` are the in-flight chunk-resumable prefills (objects with
+    ``remaining``, ``chunk_len`` and a ``req`` carrying priority/deadline/
+    rid — the engine's ``_ChunkJob`` view). The head job is the most urgent
+    by SRPT order — priority, deadline, fewest remaining tokens — or, with
+    ``aging`` set (the engine raises it every AGING_PERIOD-th step), the
+    oldest by submit order, so a sustained stream of short prompts cannot
+    starve a long prefill. The head ALWAYS packs (progress guarantee, even
+    when the budget is smaller than its chunk); the remaining budget then
+    fills greedily with further jobs in SRPT order — each contributes
+    ``min(chunk_len, remaining)`` tokens and is skipped (not truncated)
+    when it no longer fits, so every packed segment is a whole plan-sized
+    chunk and the smaller-chunk jobs behind a skipped one stay reachable
+    (the greedy knapsack step). At most ``slots`` segments ride one step.
+
+    Returns ``[(job, take), ...]`` in pick order; ``sum(take)`` exceeds
+    ``budget`` only via the guaranteed head chunk.
+    """
+    if not jobs:
+        return []
+    srpt = sorted(jobs, key=lambda j: (j.req.priority, j.req.deadline,
+                                       j.remaining, j.req.rid))
+    if aging:
+        head = min(jobs, key=lambda j: (j.req.priority, j.req.deadline,
+                                        j.req.rid))
+        srpt.remove(head)
+        srpt.insert(0, head)
+    picks: List[Tuple[object, int]] = []
+    left = budget
+    for job in srpt:
+        if len(picks) >= max(1, slots):
+            break
+        take = min(job.chunk_len, job.remaining)
+        if picks and take > left:
+            continue
+        picks.append((job, take))
+        left -= take
+    return picks
+
+
 def make_scheduler(kind: str, policy: Optional[BucketPolicy] = None,
                    pad_id: int = 0):
     """CLI-facing factory: "fifo" or "bucket" (bucket requires a policy)."""

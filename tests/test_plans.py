@@ -22,7 +22,8 @@ from repro.core import (
 )
 from repro.core.autotuner import Autotuner as AutotunerClass
 from repro.core.plans import (
-    PlanSchemaError, PlanTransferWarning, TilePlan, compile_plan,
+    PlanSchemaError, PlanTransferWarning, PlanVersionWarning, TilePlan,
+    compile_plan,
 )
 from repro.core.tiling import TileShape
 from repro.data.pipeline import DataConfig
@@ -84,6 +85,25 @@ def test_schema_version_and_field_validation(tmp_path, plan):
     d["entries"][0]["tile"] = [0, -1]
     with pytest.raises(PlanSchemaError, match="bad tile"):
         TilePlan.from_dict(d)
+
+
+def test_old_schema_artifact_loads_with_warning(tmp_path, plan):
+    """The v1 -> v2 bump (packed_prefill serving cells) is clean: a v1
+    artifact still loads — entries intact, resolutions unchanged — but
+    emits PlanVersionWarning so operators recompile."""
+    path = tmp_path / "v1.json"
+    d = plan.to_dict()
+    assert d["schema_version"] == PLAN_SCHEMA_VERSION == 2
+    d["schema_version"] = 1
+    path.write_text(json.dumps(d))
+    with pytest.warns(PlanVersionWarning, match="old schema version 1"):
+        loaded = TilePlan.load(str(path))
+    assert len(loaded) == len(plan)
+    assert loaded.resolve("matmul", PROB, "bfloat16",
+                          TPU_V5E).source == "exact"
+    # load_or_none keeps the degrade-don't-crash contract for compat loads.
+    with pytest.warns(PlanVersionWarning):
+        assert TilePlan.load_or_none(str(path)) is not None
 
 
 def test_type_malformed_entries_degrade_not_crash(tmp_path, plan):
@@ -397,6 +417,82 @@ def test_decode_cells_resolve_for_serve_geometry():
                        PRODUCTION_TARGET)
     assert res is not None and res.source == "exact"
     assert 64 % res.tile[0] == 0               # legal split for the cache
+
+
+# -- packed-prefill cells: pack width diverges per hardware model ------------
+
+def _pack_prob(sq, d=128, hq=12, hkv=2, window=0):
+    return dict(sq=sq, skv=sq, d=d, hq=hq, hkv=hkv, window=window)
+
+
+PACK_BUCKET_EDGES = (512, 1024)
+
+
+def test_packed_cells_pick_different_pack_width_across_hardware():
+    """For the SAME bucket set, v5e and v6e compile different pack widths:
+    VMEM bounds the resident packed query block, and v6e carries 2x the
+    VMEM — the paper's per-model optimum on the pack-width tile axis."""
+    from repro.core.plans import compile_entry
+
+    best = {}
+    for hw in (TPU_V5E, TPU_V6E):
+        for sq in PACK_BUCKET_EDGES:
+            entry = compile_entry("packed_prefill", _pack_prob(sq),
+                                  "float32", hw)
+            best[(hw.name, sq)] = entry.tile[0]
+    diverged = [sq for sq in PACK_BUCKET_EDGES
+                if best[("tpu_v5e", sq)] != best[("tpu_v6e", sq)]]
+    assert diverged, f"no packed cell diverged across hardware: {best}"
+
+
+def test_packed_cell_goldens():
+    """Golden pack widths: the fixed per-step dispatch cost makes wider
+    packs strictly cheaper until the resident pack block exhausts VMEM, so
+    the optimum is the VMEM-bounded maximum — 2x wider on v6e (2x VMEM)
+    than v5e for the same bucket edge."""
+    from repro.core.plans import compile_entry
+
+    expect = {
+        ("tpu_v5e", 512): (2048, 256),
+        ("tpu_v6e", 512): (4096, 256),
+        ("tpu_v5e", 1024): (2048, 256),
+        ("tpu_v6e", 1024): (4096, 256),
+    }
+    for (hw_name, sq), tile in expect.items():
+        hw = TPU_V5E if hw_name == "tpu_v5e" else TPU_V6E
+        entry = compile_entry("packed_prefill", _pack_prob(sq), "float32",
+                              hw)
+        assert entry.tile.dims == tile, (
+            f"{hw_name} sq={sq}: got {entry.tile}, want {tile}")
+        assert entry.tile[0] > sq            # pack spans > 1 segment
+        assert entry.dominant == "memory"    # dispatch amortization regime
+        assert entry.sensitivity > 1.0       # the curve is not flat
+        assert entry.curve[0][0] == entry.tile.dims
+
+
+def test_kernel_problems_packed_kind():
+    """kind="packed_prefill" maps the attention cell onto the packed
+    kernel (and nothing else changes vs prefill)."""
+    cfg = configs.get_smoke("qwen2-1.5b")
+    packed = kernel_problems(cfg, 1, 64, "packed_prefill")
+    prefill = kernel_problems(cfg, 1, 64, "prefill")
+    assert "packed_prefill" in packed
+    assert "flash_attention" not in packed
+    assert packed["packed_prefill"] == prefill["flash_attention"]
+    assert packed["matmul"] == prefill["matmul"]
+
+
+def test_serve_bucket_cells_include_packed():
+    """compile_plans --serve-buckets sweeps a packed-prefill cell per
+    bucket edge, so serving artifacts can resolve pack widths exactly."""
+    from repro.launch.compile_plans import serve_bucket_cells
+
+    cells = serve_bucket_cells(["qwen2-1.5b"], (16, 32), slots=2,
+                               max_len=64, smoke=True)
+    packed_sqs = {dict(p)["sq"] for k, p in cells if k == "packed_prefill"}
+    assert packed_sqs == {16, 32}
+    chunked_sqs = {dict(p)["sq"] for k, p in cells if k == "chunked_prefill"}
+    assert chunked_sqs == {16, 32}
 
 
 # -- wall-clock measure path -------------------------------------------------

@@ -1,0 +1,407 @@
+"""Differential serving-conformance suite for multi-prefill step packing.
+
+The headline contract: a step-packed engine (N prefill chunks
+segment-concatenated into one launch per step) must be *observationally
+identical* to one-chunk-per-step and to unchunked service — same greedy
+tokens per request on the same trace — while only the schedule densifies.
+The suite replays the SAME seed-pinned traces (``benchmarks/traces.py``,
+shared with the benches' ``--trace`` mode) through all three engines and
+asserts:
+
+* **token parity** — every request's output tokens are identical across
+  unchunked / one-chunk / packed service, on every adversarial family
+  (all_short, all_long, bimodal, overflow_heavy, head_of_line);
+* **TTFT ordering** — per request, the packed engine produces the first
+  token no later (in engine steps) than the one-chunk engine: packing adds
+  prefill bandwidth per step and the knapsack head preserves the SRPT +
+  aging order, so no request can lose;
+* **no starvation** — every admitted request completes on every family
+  (including all-long streams under the one-multi-chunk rule and
+  overflow-heavy streams under top-edge-multiple admission);
+* **conservation** (property test, hypothesis with a fixed-sample fallback
+  like test_kernels_decode) — across random traces x budgets x slot
+  counts, every admitted prompt is prefilled exactly once (total prefill
+  tokens == total admitted padded lengths) and every step respects
+  ``step_token_budget`` (prefill chunk tokens + decode batch <= budget);
+* **reject/overflow coverage** — every ``admit()`` reject reason surfaces
+  under packing, and overflow prompts admitted at top-edge multiples are
+  packable (a packed step carries an overflow chunk next to a short's).
+
+Run on the reference lowerings by default; the CI ``packing-conformance``
+job adds an interpret-mode Pallas leg (REPRO_PALLAS_INTERPRET=1) so the
+same assertions cover the Pallas kernel bodies without TPU hardware.
+"""
+import pathlib
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                       / "benchmarks"))
+import traces as trace_lib  # noqa: E402  (benchmarks/traces.py)
+
+from repro import configs  # noqa: E402
+from repro.models import api  # noqa: E402
+from repro.serve import (  # noqa: E402
+    BucketPolicy, ServeEngine, ShapeBucketScheduler,
+)
+from repro.serve.scheduler import pick_chunks  # noqa: E402
+
+try:  # keep the rest of this module runnable without the dev dependency
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+EDGES = (8, 64)
+NEW_TOKENS = 3
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = configs.get_smoke("qwen2-1.5b")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(cfg, params, mode, budget=32, edges=EDGES, slots=2,
+            prefill_slots=3, allow_overflow=False, max_len=None,
+            max_queue=99):
+    top = max(edges)
+    if max_len is None:
+        max_len = (2 * top + 16) if allow_overflow else top + 16
+    return ServeEngine(
+        cfg, params, max_len=max_len, slots=slots,
+        scheduler=ShapeBucketScheduler(
+            BucketPolicy(edges, max_queue=max_queue,
+                         allow_overflow=allow_overflow)),
+        chunk_prefill=(mode != "unchunked"),
+        pack_prefill=(mode == "packed"),
+        prefill_slots=prefill_slots,
+        step_token_budget=(budget if mode != "unchunked" else 0))
+
+
+def _serve(eng, trace, max_new_tokens=NEW_TOKENS, max_steps=2000):
+    """Drive to drain; returns ({rid: tokens}, {rid: first-token step})."""
+    rids = [eng.add_request(p, max_new_tokens=max_new_tokens) for p in trace]
+    assert all(r is not None for r in rids), "pinned trace request rejected"
+    first = {}
+    for step in range(1, max_steps):
+        eng.step()
+        live = (eng._finished
+                + [r for r in eng._active if r is not None]
+                + [j.req for j in eng._chunking]
+                + [pair[0] for pair in eng._ready])
+        for r in live:
+            if r.out_tokens and r.rid not in first:
+                first[r.rid] = step
+        if not eng.in_flight() and not eng.scheduler.pending():
+            break
+    else:
+        pytest.fail("engine did not drain (starvation?)")
+    return {r.rid: tuple(r.out_tokens) for r in eng._finished}, first
+
+
+# ---------------------------------------------------------------------------
+# The differential suite: unchunked vs one-chunk vs packed on shared traces
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("family", trace_lib.FAMILIES)
+def test_differential_conformance(family, smoke_model):
+    """Token parity + per-request TTFT ordering + no starvation, per
+    adversarial family, across the three service modes."""
+    cfg, params = smoke_model
+    overflow = family == "overflow_heavy"
+    trace = trace_lib.make_trace(family, seed=0, vocab=cfg.vocab_size,
+                                 edges=EDGES, n=8)
+    results = {}
+    for mode in ("unchunked", "chunked", "packed"):
+        eng = _engine(cfg, params, mode, allow_overflow=overflow)
+        results[mode] = _serve(eng, trace)
+    ref_tokens = results["unchunked"][0]
+    # No starvation: every admitted request completed in every mode.
+    assert len(ref_tokens) == len(trace)
+    # Token parity: bit-identical greedy outputs across all three engines.
+    assert results["chunked"][0] == ref_tokens, \
+        f"{family}: one-chunk-per-step diverged from unchunked"
+    assert results["packed"][0] == ref_tokens, \
+        f"{family}: packed diverged from unchunked"
+    # TTFT ordering: packing only adds per-step prefill bandwidth and the
+    # knapsack head preserves SRPT+aging order — per request, the packed
+    # engine's first token arrives no later (in steps) than one-chunk's.
+    first_c, first_p = results["chunked"][1], results["packed"][1]
+    assert set(first_c) == set(first_p)
+    late = {r: (first_p[r], first_c[r]) for r in first_c
+            if first_p[r] > first_c[r]}
+    assert not late, f"{family}: packed TTFT later than one-chunk: {late}"
+
+
+@pytest.mark.slow
+def test_packed_steps_actually_pack(smoke_model):
+    """The conformance result is vacuous if the packed engine never packs:
+    on the short-burst family, steps with >= 2 chunks must occur."""
+    cfg, params = smoke_model
+    trace = trace_lib.make_trace("all_short", seed=0, vocab=cfg.vocab_size,
+                                 edges=EDGES, n=8)
+    eng = _engine(cfg, params, "packed")
+    _serve(eng, trace)
+    hist = eng.metrics.packed_chunks_per_step
+    assert max(hist) >= 2, f"no multi-chunk packs: {dict(hist)}"
+    assert ("packed_chunks_per_step"
+            in eng.metrics.as_dict()["chunked_prefill"])
+
+
+@pytest.mark.slow
+def test_overflow_chunks_are_packable(smoke_model):
+    """An over-length prompt admitted at a top-edge multiple rides packed
+    steps next to short prompts — overflow admission and packing compose
+    (the satellite-4 acceptance case)."""
+    cfg, params = smoke_model
+    rng = np.random.default_rng(3)
+    top = max(EDGES)
+    overflow = rng.integers(2, cfg.vocab_size, size=top + 9).astype(np.int32)
+    # Budget leaves headroom beyond the overflow bucket's chunk (128), so
+    # the knapsack can seat short chunks next to it in one packed step.
+    eng = _engine(cfg, params, "packed", allow_overflow=True, budget=160)
+    rid_over = eng.add_request(overflow, max_new_tokens=2)
+    assert rid_over is not None
+    shorts = [eng.add_request(
+        rng.integers(2, cfg.vocab_size, size=5).astype(np.int32),
+        max_new_tokens=2) for _ in range(4)]
+    assert all(r is not None for r in shorts)
+    saw_overflow_in_pack = False
+    for _ in range(300):
+        eng.step()
+        rids = eng.last_step_stats["packed_rids"]
+        if rid_over in rids and len(rids) >= 2:
+            saw_overflow_in_pack = True
+        if not eng.in_flight() and not eng.scheduler.pending():
+            break
+    assert eng.metrics.completed == 5
+    done = {r.rid: r for r in eng._finished}
+    assert done[rid_over].bucket == 2 * top   # top-edge multiple admission
+    assert saw_overflow_in_pack, \
+        "overflow prompt's chunks never rode a multi-chunk packed step"
+
+
+# ---------------------------------------------------------------------------
+# Model-level packed parity across mixer families (ring caches, recurrent
+# and SSD state — the branches the qwen2 engine tests never instantiate)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", [
+    "gemma2-9b",           # local_attn ring cache + softcap (packed ring
+    #                        prefix/tail-write path, window masking)
+    "recurrentgemma-9b",   # rglru per-segment state slices in _mixer_packed
+    "mamba2-2.7b",         # ssd per-segment state slices
+])
+def test_packed_matches_sequential_chunks_across_mixers(arch):
+    """api.prefill_packed over interleaved multi-request chunks must equal
+    each request's sequential api.prefill_chunk service — per family."""
+    import jax.numpy as jnp
+
+    cfg = configs.get_smoke(arch)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    ring = bool(cfg.attn_window)
+    max_len, chunk = 48, 4
+    prompts = [rng.integers(2, cfg.vocab_size, size=(1, s)).astype(np.int32)
+               for s in (13, 7, 5)]
+
+    def fresh():
+        return [api.make_serve_state(cfg, 1, max_len, jnp.float32,
+                                     ring_local=ring) for _ in prompts]
+
+    ref_states, ref_logits = fresh(), [None] * len(prompts)
+    for i, p in enumerate(prompts):
+        pos, st = 0, ref_states[i]
+        while pos < p.shape[1]:
+            c = min(chunk, p.shape[1] - pos)
+            lg, st = api.prefill_chunk(
+                params, cfg, jnp.asarray(p[:, pos:pos + c]), st, pos)
+            pos += c
+        ref_states[i], ref_logits[i] = st, np.asarray(lg[0])
+
+    states, done = fresh(), [0] * len(prompts)
+    out_logits = [None] * len(prompts)
+    while any(done[i] < prompts[i].shape[1] for i in range(len(prompts))):
+        segs = [i for i in range(len(prompts))
+                if done[i] < prompts[i].shape[1]]
+        layout = tuple((done[i], min(chunk, prompts[i].shape[1] - done[i]))
+                       for i in segs)
+        toks = np.concatenate([prompts[i][0, s:s + ln]
+                               for i, (s, ln) in zip(segs, layout)])
+        lg, new = api.prefill_packed(params, cfg, jnp.asarray(toks[None]),
+                                     tuple(states[i] for i in segs), layout)
+        for j, i in enumerate(segs):
+            states[i] = new[j]
+            done[i] += layout[j][1]
+            if done[i] >= prompts[i].shape[1]:
+                out_logits[i] = np.asarray(lg[j])
+
+    for i in range(len(prompts)):
+        np.testing.assert_allclose(out_logits[i], ref_logits[i],
+                                   rtol=2e-5, atol=2e-5)
+        for a, b in zip(jax.tree.leaves(states[i]),
+                        jax.tree.leaves(ref_states[i])):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# Property: conservation + budget, random traces x budgets x slot counts
+# ---------------------------------------------------------------------------
+
+def _conservation_property(smoke, seed, budget, slots, prefill_slots):
+    cfg, params = smoke
+    rng = np.random.default_rng(seed)
+    edges = (4, 8)
+    lens = [int(rng.integers(1, 9)) for _ in range(5)]
+    trace = trace_lib.prompts(lens, rng, cfg.vocab_size)
+    eng = _engine(cfg, params, "packed", budget=budget, edges=edges,
+                  slots=slots, prefill_slots=prefill_slots, max_len=24)
+    rids = [eng.add_request(p, max_new_tokens=2) for p in trace]
+    admitted = [len(p) for p, r in zip(trace, rids) if r is not None]
+    padded = [eng.scheduler.admit_length(n) for n in admitted]
+    total_prefill = 0
+    for _ in range(500):
+        if not eng.in_flight() and not eng.scheduler.pending():
+            break
+        eng.step()
+        stats = eng.last_step_stats
+        total_prefill += stats["prefill_tokens"]
+        # Budget respected EVERY step: the packed prefill chunks plus the
+        # decode batch never exceed the step token budget.
+        assert stats["prefill_tokens"] + stats["decode_tokens"] <= budget, \
+            (seed, budget, slots, stats)
+    # Conservation: every admitted prompt prefilled exactly once — the
+    # packed steps' chunk tokens sum to exactly the admitted padded work.
+    assert total_prefill == sum(padded), (seed, budget, slots,
+                                          total_prefill, padded)
+    assert eng.metrics.completed == len(admitted)
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.slow
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 4), budget=st.integers(8, 24),
+           slots=st.integers(1, 3), prefill_slots=st.integers(1, 4))
+    def test_packed_conservation_property(smoke_model, seed, budget, slots,
+                                          prefill_slots):
+        _conservation_property(smoke_model, seed, budget, slots,
+                               prefill_slots)
+else:
+    @pytest.mark.slow
+    @pytest.mark.parametrize("seed,budget,slots,prefill_slots", [
+        (0, 12, 2, 3), (1, 8, 1, 1), (2, 24, 3, 4), (3, 10, 2, 2),
+    ])
+    def test_packed_conservation_property(smoke_model, seed, budget, slots,
+                                          prefill_slots):
+        # hypothesis unavailable: run a fixed sample of the property grid.
+        _conservation_property(smoke_model, seed, budget, slots,
+                               prefill_slots)
+
+
+# ---------------------------------------------------------------------------
+# Reject/overflow reasons under packing (every admit() reason asserted)
+# ---------------------------------------------------------------------------
+
+def test_packed_engine_reject_reasons(smoke_model):
+    """All three admit() reject reasons surface in metrics with packing on:
+    over_length (no-overflow policy), cache_overflow (generation would
+    overrun the KV cache), queue_full (admission bound)."""
+    cfg, params = smoke_model
+    eng = ServeEngine(
+        cfg, params, max_len=16, slots=1,
+        scheduler=ShapeBucketScheduler(BucketPolicy((8,), max_queue=1)),
+        pack_prefill=True, step_token_budget=12)
+    assert eng.pack_prefill and eng.chunk_prefill   # packing implies chunking
+    assert eng.add_request(np.arange(50, dtype=np.int32)) is None
+    assert eng.add_request(np.arange(5, dtype=np.int32),
+                           max_new_tokens=99) is None
+    assert eng.add_request(np.arange(5, dtype=np.int32),
+                           max_new_tokens=2) is not None
+    assert eng.add_request(np.arange(5, dtype=np.int32),
+                           max_new_tokens=2) is None       # queue full
+    assert eng.metrics.as_dict()["rejects"] == {
+        "cache_overflow": 1, "over_length": 1, "queue_full": 1}
+
+
+def test_overflow_reject_becomes_admission_under_packing(smoke_model):
+    """The same over-length prompt: rejected without allow_overflow,
+    admitted at a top-edge multiple with it — never silently dropped."""
+    cfg, params = smoke_model
+    prompt = np.arange(2, 90, dtype=np.int32)           # > top edge 64
+    strict = _engine(cfg, params, "packed", allow_overflow=False)
+    assert strict.add_request(prompt, max_new_tokens=2) is None
+    assert strict.metrics.reject_reasons["over_length"] == 1
+    lax = _engine(cfg, params, "packed", allow_overflow=True)
+    rid = lax.add_request(prompt, max_new_tokens=2)
+    assert rid is not None
+    assert lax.scheduler.admit_length(len(prompt)) == 128  # 2 x top edge
+
+
+# ---------------------------------------------------------------------------
+# pick_chunks: the scheduler's knapsack (pure unit tests)
+# ---------------------------------------------------------------------------
+
+class _Req:
+    def __init__(self, rid, priority=0, deadline=float("inf")):
+        self.rid, self.priority, self.deadline = rid, priority, deadline
+
+
+class _Job:
+    def __init__(self, rid, remaining, chunk_len, **kw):
+        self.req = _Req(rid, **kw)
+        self.remaining = remaining
+        self.chunk_len = chunk_len
+
+
+def test_pick_chunks_srpt_order_and_budget():
+    jobs = [_Job(0, remaining=40, chunk_len=8),
+            _Job(1, remaining=4, chunk_len=8),
+            _Job(2, remaining=8, chunk_len=8)]
+    picks = pick_chunks(jobs, budget=12, slots=4)
+    # SRPT head = rid 1 (4 remaining), then rid 2's whole chunk fits.
+    assert [(j.req.rid, take) for j, take in picks] == [(1, 4), (2, 8)]
+
+
+def test_pick_chunks_head_always_packs_over_budget():
+    jobs = [_Job(0, remaining=40, chunk_len=16)]
+    picks = pick_chunks(jobs, budget=4, slots=4)
+    assert [(j.req.rid, t) for j, t in picks] == [(0, 16)]  # progress floor
+
+
+def test_pick_chunks_knapsack_skips_then_fills():
+    # rid 1's chunk does not fit after the head; the smaller rid 2 does —
+    # a skipped job must not block the jobs behind it.
+    jobs = [_Job(0, remaining=8, chunk_len=8),
+            _Job(1, remaining=16, chunk_len=16),
+            _Job(2, remaining=30, chunk_len=4)]
+    picks = pick_chunks(jobs, budget=13, slots=4)
+    assert [(j.req.rid, t) for j, t in picks] == [(0, 8), (2, 4)]
+
+
+def test_pick_chunks_slot_cap_and_aging():
+    jobs = [_Job(0, remaining=40, chunk_len=4),
+            _Job(1, remaining=4, chunk_len=4),
+            _Job(2, remaining=8, chunk_len=4)]
+    picks = pick_chunks(jobs, budget=100, slots=2)
+    assert len(picks) == 2
+    assert picks[0][0].req.rid == 1                    # SRPT head
+    aged = pick_chunks(jobs, budget=100, slots=2, aging=True)
+    assert aged[0][0].req.rid == 0     # oldest (submit order) leads the pack
+    # Priority outranks both orders.
+    jobs[2].req.priority = -1
+    assert pick_chunks(jobs, budget=100, slots=2)[0][0].req.rid == 2
+    assert pick_chunks(jobs, budget=100, slots=2,
+                       aging=True)[0][0].req.rid == 2
+
+
+def test_pick_chunks_empty():
+    assert pick_chunks([], budget=10, slots=2) == []
