@@ -38,21 +38,31 @@ FULL = dict(
 )
 
 
-def compile_decode_cells(p: dict) -> Dict[Tuple[str, int], int]:
-    """(hardware, cache_len) -> plan-chosen bkv, via the AOT sweep."""
+def compile_decode_cells(p: dict, plans_path=None,
+                         print_fn=print) -> Dict[Tuple[str, int], int]:
+    """(hardware, cache_len) -> plan-chosen bkv.
+
+    With ``plans_path``, reuses a compiled artifact (CI passes the
+    compile-plans job's upload) when it covers every decode cell on both
+    hardware models, recompiling exactly these cells otherwise — the same
+    reuse-with-fallback path the other serving benches take.
+    """
     from repro import kernels
-    from repro.core import HARDWARE_REGISTRY
-    from repro.core.plans import compile_entry
+    from repro.launch.compile_plans import load_or_compile_cells
 
     kernels.register_all()
+    cells = [
+        ("flash_decode", dict(b=p["b"], skv=skv, d=p["d"], hq=p["hq"],
+                              hkv=p["hkv"], window=0))
+        for skv in sorted(set(p["plan_lens"]) | set(p["timed_lens"]))
+    ]
+    plan = load_or_compile_cells(plans_path, cells, HARDWARE,
+                                 print_fn=print_fn)
     chosen = {}
     for hw_name in HARDWARE:
-        hw = HARDWARE_REGISTRY[hw_name]
-        for skv in sorted(set(p["plan_lens"]) | set(p["timed_lens"])):
-            problem = dict(b=p["b"], skv=skv, d=p["d"], hq=p["hq"],
-                           hkv=p["hkv"], window=0)
-            entry = compile_entry("flash_decode", problem, "float32", hw)
-            chosen[(hw_name, skv)] = int(entry.tile[0])
+        for kernel, problem in cells:
+            entry = plan.lookup(kernel, problem, "float32", hw_name)
+            chosen[(hw_name, problem["skv"])] = int(entry.tile[0])
     return chosen
 
 
@@ -68,7 +78,7 @@ def _time(fn, *args, iters: int) -> float:
     return (time.perf_counter() - t0) / iters
 
 
-def run(smoke: bool = False, print_fn=print) -> int:
+def run(smoke: bool = False, plans_path=None, print_fn=print) -> int:
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -79,7 +89,8 @@ def run(smoke: bool = False, print_fn=print) -> int:
     p = SMOKE if smoke else FULL
     failures = 0
 
-    chosen = compile_decode_cells(p)
+    chosen = compile_decode_cells(p, plans_path=plans_path,
+                                  print_fn=print_fn)
     print_fn("# decode-cell plan tiles (bkv) per hardware model:")
     for skv in sorted({s for _, s in chosen}):
         row = {hw: chosen[(hw, skv)] for hw in HARDWARE}
@@ -144,8 +155,11 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="small cells for CI (short traces, tiny geometry)")
+    ap.add_argument("--plans", default=None,
+                    help="compiled tile-plan artifact to reuse; recompiles "
+                         "these cells when missing or non-covering")
     args = ap.parse_args()
-    sys.exit(1 if run(smoke=args.smoke) else 0)
+    sys.exit(1 if run(smoke=args.smoke, plans_path=args.plans) else 0)
 
 
 if __name__ == "__main__":

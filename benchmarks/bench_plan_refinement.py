@@ -1,0 +1,566 @@
+"""Live plan refinement: a wrongly-planned fleet recovers native p95 TTFT.
+
+The closed-loop scenario the refinement subsystem (``repro.serve.refine``)
+exists for: a serving fleet starts on a plan artifact compiled for the
+WRONG hardware model (every resolution is a cross-hardware transfer —
+``PlanTransferWarning`` — re-ranked by an analytic model that no longer
+matches reality), while the *measured truth* on the floor has shifted: this
+bench models changed conditions as a VMEM-contention penalty on top of the
+analytic cost (``+ vmem_bytes / CONTENTION_BW``), which reorders every
+cell's optimum toward smaller tiles. The fleet then:
+
+1. **shadow-measures** candidate tiles from the plan's stored sensitivity
+   curves during live service (``shadow_fraction=1`` here so CI converges
+   in seconds; production uses ~1/32) — served tokens untouched;
+2. **re-ranks** confidently-better cells through the shared
+   :class:`~repro.serve.refine.PlanRefiner` into a schema-v3 artifact with
+   full provenance;
+3. **rolls** the refined artifact across the fleet one instance at a time
+   through ``FleetRouter.roll_plans``'s p95-TTFT rollback guard.
+
+All arms drive real ``ServeEngine``s on a **cost-model virtual clock**
+priced by the same measured-truth function the shadow path samples, so the
+TTFT comparison is deterministic and hardware-independent: each lockstep
+round advances the clock by the max per-engine step cost (prefill segments
+x the engine's *resolved-tile* truth cost + one decode-batch step).
+
+Asserted invariants (exit 1 on violation; CI runs ``--smoke``):
+  1. the wrong-plan fleet resolves via cross-hardware transfer
+     (``PlanTransferWarning`` fires) and the refined artifact resolves
+     every re-ranked cell EXACTLY on the believed hardware (no transfer);
+  2. refinement finds re-ranked cells, the refined artifact round-trips
+     through save/load at schema v3 with its provenance intact;
+  3. rollout guard: rolling the refined artifact onto the wrong fleet does
+     NOT roll back (it is genuinely better), and rolling a sabotaged
+     artifact (worst-truth tiles injected for the small-bucket prefill
+     cells) DOES roll back on every instance, leaving the fleet on the
+     refined artifact;
+  4. recovery: the refined fleet's small-bucket p95 TTFT is within
+     ``RECOVERY_TOL`` of a natively-tuned fleet (plan compiled for the
+     believed hardware with the truth as its measure hook) and strictly
+     better than the wrong-plan fleet;
+  5. token parity: all three arms emit identical greedy tokens per trace
+     position — refinement changes the schedule's cost, never the math.
+
+``--plans plans.json`` reuses a compiled artifact (CI passes the
+compile-plans job's upload), filtered to the donor hardware's entries so a
+multi-hardware artifact still yields a genuinely wrong starting plan.
+``--refined-out``/``--drift-out`` write the refined artifact and the
+incumbent-vs-refined drift report (the CI ``plan-drift-report`` artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+import warnings
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import traces as trace_lib
+
+SMOKE = dict(
+    edges=(64, 1024),
+    small_lens=(10, 24, 40, 60, 18, 33, 51, 12, 45, 28),
+    long_lens=(900, 980),
+    new_tokens=3,
+    slots=2,
+    arrivals_per_step=3,
+    max_rounds=60,
+)
+FULL = dict(
+    edges=(64, 1024),
+    small_lens=(10, 24, 40, 60, 18, 33, 51, 12, 45, 28,
+                55, 21, 37, 48, 15, 30, 62, 26, 42, 19),
+    long_lens=(900, 980, 1010),
+    new_tokens=4,
+    slots=2,
+    arrivals_per_step=3,
+    max_rounds=80,
+)
+ARCH = "qwen2-1.5b"
+BELIEVED_HW = "tpu_v5e"      # what every fleet engine believes it runs on
+DONOR_HW = "tpu_v6e"         # the wrong plan's only hardware model
+STEP_OVERHEAD_S = 20e-6
+CONTENTION_BW = 2e9          # B/s: the VMEM-contention truth penalty
+RECOVERY_TOL = 1.25          # refined p95 TTFT vs natively-tuned p95
+ROLL_TOLERANCE = 1.10        # roll_plans p95 regression guard
+MIN_SAMPLES = 3              # refiner confidence gate
+
+
+class VirtualClock:
+    """Injectable engine clock; the driver advances it between steps."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def make_truth():
+    """The measured truth: analytic cost on the believed hardware plus a
+    VMEM-contention penalty. The penalty is what "conditions changed"
+    means here — it reorders each cell's optimum toward smaller tiles, so
+    neither the donor plan's ranking nor the believed-hardware analytic
+    re-ranking matches what shadow measurement observes."""
+    from repro.core import HARDWARE_REGISTRY, registry
+    from repro.core.plans import score_tile
+    from repro.core.tiling import TileShape
+
+    hw = HARDWARE_REGISTRY[BELIEVED_HW]
+
+    def truth(kernel: str, problem, dtype: str, tile) -> float:
+        t = TileShape(tuple(int(x) for x in tile))
+        base = score_tile(kernel, t, dict(problem), dtype, hw)
+        vmem = registry.get(kernel).vmem_bytes(t, dict(problem), dtype)
+        return base + vmem / CONTENTION_BW
+
+    return truth
+
+
+def build_plans(plans_path: Optional[str], edges, slots: int, max_len: int,
+                truth, print_fn):
+    """(wrong plan, natively-tuned plan) for the bench's serving cells.
+
+    The wrong plan holds ONLY the donor hardware's entries (a reused CI
+    artifact is filtered down to them), so every resolution on the
+    believed hardware is a cross-hardware transfer. The native plan is
+    compiled for the believed hardware with the truth as its measurement
+    hook — the paper-faithful re-tune the refinement loop is measured
+    against.
+    """
+    from repro.core import HARDWARE_REGISTRY, Autotuner
+    from repro.core.plans import TilePlan, compile_plan
+    from repro.launch.compile_plans import (
+        load_or_compile_cells, serve_bucket_cells,
+    )
+
+    cells = serve_bucket_cells([ARCH], edges, slots, max_len, smoke=True)
+    donor = load_or_compile_cells(
+        plans_path, cells, (DONOR_HW,),
+        meta={"generated_by": "bench_plan_refinement"}, print_fn=print_fn)
+    wrong = TilePlan(
+        entries=[e for e in donor.entries() if e.hardware == DONOR_HW],
+        meta={"generated_by": "bench_plan_refinement:wrong"})
+
+    jobs = [(k, p, "float32", HARDWARE_REGISTRY[BELIEVED_HW])
+            for k, p in cells]
+    native = compile_plan(
+        jobs, autotuner=Autotuner(),
+        measure_fn_factory=lambda kernel, problem, dtype, hw: (
+            lambda tile: truth(kernel, problem, dtype, tuple(tile))),
+        meta={"generated_by": "bench_plan_refinement:native"})
+    return wrong, native
+
+
+class TruthPricer:
+    """Virtual-clock step pricing from the measured truth of the tiles an
+    engine actually resolved — so a plan swap changes the price."""
+
+    def __init__(self, cfg, slots: int, max_len: int, truth):
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.truth = truth
+        self._cache: Dict[Tuple, float] = {}
+
+    def _resolved_cost(self, eng, kind: str, batch: int, length: int
+                       ) -> float:
+        key = (id(eng.plans), kind, length)
+        hit = self._cache.get(key)
+        if hit is not None:
+            return hit
+        from repro.core import registry
+        from repro.core.plans import PlanTransferWarning
+        from repro.launch.specs import kernel_problems
+
+        total = 0.0
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", PlanTransferWarning)
+            for kernel, problem in kernel_problems(
+                    self.cfg, batch, length, kind).items():
+                res = (eng.plans.resolve(kernel, problem, "float32",
+                                         eng.hardware)
+                       if eng.plans is not None else None)
+                tile = (res.tile if res is not None
+                        else registry.get(kernel).default_tile(problem,
+                                                               "float32"))
+                total += self.truth(kernel, problem, "float32",
+                                    tuple(tile))
+        self._cache[key] = total
+        return total
+
+    def step_cost(self, eng) -> float:
+        stats = eng.last_step_stats
+        cost = STEP_OVERHEAD_S
+        for length, take in stats.get("prefill_segments", ()):
+            cost += (self._resolved_cost(eng, "prefill", 1, length)
+                     * take / length)
+        if stats["decode_tokens"]:
+            cost += self._resolved_cost(eng, "decode", self.slots,
+                                        self.max_len)
+        return cost
+
+
+def make_fleet(plan, cfg, params, policy, slots: int, max_len: int,
+               clock: VirtualClock, shadow_fraction: float = 0.0,
+               shadow_measure=None, refiner=None):
+    from repro.core import HARDWARE_REGISTRY
+    from repro.serve import FleetRouter, ServeEngine, ShapeBucketScheduler
+
+    hw = HARDWARE_REGISTRY[BELIEVED_HW]
+    engines = {
+        name: ServeEngine(
+            cfg, params, max_len=max_len, slots=slots, plans=plan,
+            hardware=hw, scheduler=ShapeBucketScheduler(policy),
+            clock=clock, shadow_fraction=shadow_fraction,
+            shadow_measure=shadow_measure, refiner=refiner)
+        for name in ("v5e-a", "v5e-b")
+    }
+    return FleetRouter(engines, policy)
+
+
+def drive_fleet(router, clock: VirtualClock, pricer: TruthPricer, trace,
+                new_tokens: int, arrivals_per_step: int,
+                max_steps: int = 50000) -> List[Tuple[str, int]]:
+    """Open-loop lockstep drive on the shared virtual clock; each round
+    advances by the max per-engine step cost (engines run in parallel).
+    Returns the (instance, rid) placement per trace position."""
+    placed: List[Tuple[str, int]] = []
+    i = 0
+    for tick in range(max_steps):
+        while i < len(trace) and i < arrivals_per_step * (tick + 1):
+            decision = router.route(trace[i], max_new_tokens=new_tokens)
+            assert decision is not None, f"trace request {i} rejected"
+            placed.append((decision.instance, decision.rid))
+            i += 1
+        active = 0
+        round_cost = 0.0
+        for name in sorted(router.engines):
+            eng = router.engines[name]
+            active += eng.step()
+            round_cost = max(round_cost, pricer.step_cost(eng))
+        clock.t += round_cost
+        if not active and not router.pending() and i >= len(trace):
+            break
+    return placed
+
+
+def fleet_tokens(router, placed) -> Dict[int, Tuple[int, ...]]:
+    """trace position -> greedy output tokens (parity unit across arms —
+    placements may differ between arms, tokens must not)."""
+    by_engine = {
+        name: {r.rid: tuple(r.out_tokens) for r in eng._finished}
+        for name, eng in router.engines.items()
+    }
+    return {i: by_engine[name][rid]
+            for i, (name, rid) in enumerate(placed)}
+
+
+def small_p95(router, edge: int) -> float:
+    """Nearest-rank p95 TTFT over the small bucket, pooled fleet-wide."""
+    xs: List[float] = []
+    for eng in router.engines.values():
+        stat = eng.metrics.ttft.get(edge)
+        if stat is not None:
+            xs.extend(stat.recent(stat.count))
+    xs.sort()
+    if not xs:
+        return 0.0
+    return xs[max(0, math.ceil(0.95 * len(xs)) - 1)]
+
+
+def shadow_ticks_needed(router) -> int:
+    """Diverted steps needed fleet-wide so every candidate of every shadow
+    cell reaches the refiner's ``MIN_SAMPLES``: the round-robin gives each
+    cell an equal share of the ticks, and each cell needs a full candidate
+    cycle per sample."""
+    needed = 0
+    for eng in router.engines.values():
+        n_cells, max_cands = 0, 0
+        for key in eng._shadow_order:
+            view = eng._shadow_view(key)
+            if view is None:
+                continue
+            n_cells += 1
+            max_cands = max(max_cands, len(view[1]))
+        needed = max(needed, n_cells * max_cands * MIN_SAMPLES)
+    return needed
+
+
+def make_probe(router, clock: VirtualClock, pricer: TruthPricer, cfg,
+               n_prompts: int = 6):
+    """Rollout probe traffic for ``roll_plans``: a fixed burst of
+    small-bucket prompts pushed through ONE instance, priced on the
+    virtual clock — enough first-token samples to arm the p95 guard."""
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(2, cfg.vocab_size,
+                            size=int(length)).astype(np.int32)
+               for length in np.linspace(10, 40, n_prompts)]
+
+    def probe(name: str) -> None:
+        eng = router.engines[name]
+        for prompt in prompts:
+            rid = eng.add_request(prompt, max_new_tokens=2)
+            assert rid is not None, "probe request rejected"
+        for _ in range(5000):
+            if not (eng.step() or eng.scheduler.pending()):
+                break
+            clock.t += pricer.step_cost(eng)
+
+    return probe
+
+
+def sabotage_plan(refined, truth, cfg, small_edge: int):
+    """The rollback-guard scenario: the refined artifact with the
+    small-bucket prefill cells' tiles replaced by their WORST measured
+    candidates (exact believed-hardware entries, so they win resolution).
+    Rolling this must regress the probe p95 and trip the guard."""
+    from repro.core import HARDWARE_REGISTRY
+    from repro.core.plans import PlanEntry, PlanTransferWarning, TilePlan
+    from repro.core.tiling import TileShape
+    from repro.launch.specs import kernel_problems
+
+    hw = HARDWARE_REGISTRY[BELIEVED_HW]
+    bad_cells = kernel_problems(cfg, 1, small_edge, "prefill")
+    bad_keys = {(kernel, tuple(sorted(problem.items())))
+                for kernel, problem in bad_cells.items()}
+    entries = [e for e in refined.entries()
+               if not (e.hardware == BELIEVED_HW
+                       and (e.kernel, tuple(e.problem)) in bad_keys)]
+    sabotaged = TilePlan(
+        entries=entries,
+        meta={"generated_by": "bench_plan_refinement:sabotaged"})
+    for kernel, problem in bad_cells.items():
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", PlanTransferWarning)
+            res = refined.resolve(kernel, problem, "float32", hw)
+        assert res is not None
+        worst = max((tuple(int(x) for x in dims) for dims, _ in
+                     res.entry.curve),
+                    key=lambda d: truth(kernel, problem, "float32", d))
+        worst_s = truth(kernel, problem, "float32", worst)
+        sabotaged.add(PlanEntry(
+            kernel=kernel, hardware=BELIEVED_HW, dtype="float32",
+            problem=tuple(sorted(problem.items())),
+            tile=TileShape(worst), score_s=worst_s, dominant="measured",
+            sensitivity=1.0, curve=((worst, worst_s),)))
+    return sabotaged
+
+
+def run(smoke: bool = False, plans_path: Optional[str] = None,
+        refined_out: Optional[str] = None, drift_out: Optional[str] = None,
+        print_fn=print) -> int:
+    import jax
+
+    from repro import configs, kernels
+    from repro.core.plans import (
+        PLAN_SCHEMA_VERSION, PlanTransferWarning, TilePlan,
+    )
+    from repro.serve import BucketPolicy, PlanRefiner, drift_report
+
+    kernels.register_all()
+    p = SMOKE if smoke else FULL
+    edges, slots = p["edges"], p["slots"]
+    new_tokens = p["new_tokens"]
+    small_edge, top = min(edges), max(edges)
+    max_len = top + new_tokens + 8
+    cfg = configs.get_smoke(ARCH)
+    from repro.models import api
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    lens = trace_lib.head_of_line_lengths(p["small_lens"], p["long_lens"])
+    trace = trace_lib.prompts(lens, rng, cfg.vocab_size)
+
+    truth = make_truth()
+    wrong, native = build_plans(plans_path, edges, slots, max_len, truth,
+                                print_fn)
+    pricer = TruthPricer(cfg, slots, max_len, truth)
+    print_fn(f"# trace: {trace_lib.trace_summary(trace, edges)}; wrong plan "
+             f"= {len(wrong)} {DONOR_HW} cells, believed hw {BELIEVED_HW}, "
+             f"truth = analytic + vmem/{CONTENTION_BW:.0e}")
+
+    failures = 0
+
+    def policy():
+        return BucketPolicy(edges, max_queue=len(trace) + 16)
+
+    # -- phase 1: shadow measurement on the wrongly-planned live fleet -----
+    refiner = PlanRefiner(min_samples=MIN_SAMPLES)
+    clock = VirtualClock()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        fleet = make_fleet(
+            wrong, cfg, params, policy(), slots, max_len, clock,
+            shadow_fraction=1.0,
+            shadow_measure=lambda kernel, problem, dtype, tile: truth(
+                kernel, problem, dtype, tile),
+            refiner=refiner)
+    n_transfer = sum(issubclass(w.category, PlanTransferWarning)
+                     for w in caught)
+    if not n_transfer:
+        failures += 1
+        print_fn("FAIL: wrong-plan fleet resolved without a single "
+                 "PlanTransferWarning — the starting plan is not wrong")
+
+    needed = shadow_ticks_needed(fleet)
+    rounds = 0
+    for rounds in range(1, p["max_rounds"] + 1):
+        drive_fleet(fleet, clock, pricer, trace, new_tokens,
+                    p["arrivals_per_step"])
+        ticks = sum(eng.metrics.shadow_steps
+                    for eng in fleet.engines.values())
+        needed = shadow_ticks_needed(fleet)   # prefill cells appear lazily
+        if ticks >= needed:
+            break
+    ticks = sum(eng.metrics.shadow_steps for eng in fleet.engines.values())
+    print_fn(f"# shadow: {ticks} diverted steps over {rounds} trace "
+             f"round(s) (target {needed}), {refiner.n_samples()} samples "
+             f"across {len(refiner.cells())} cells")
+    if ticks < needed:
+        failures += 1
+        print_fn(f"FAIL: shadow sampling did not reach the confidence "
+                 f"target in {p['max_rounds']} rounds ({ticks}/{needed})")
+
+    # -- phase 2: re-rank + provenance round-trip --------------------------
+    refined = refiner.refine(wrong)
+    report = drift_report(refined)
+    print_fn(f"# refined {report['n_refined']} cell(s):")
+    for cell in report["cells"]:
+        print_fn(f"#   {cell['cell']}: {cell['incumbent']} -> "
+                 f"{cell['refined']} ({cell['speedup']:.2f}x over the "
+                 f"measured incumbent, n={cell['samples']})")
+    if report["n_refined"] < 3:
+        failures += 1
+        print_fn(f"FAIL: expected >= 3 confidently re-ranked cells, got "
+                 f"{report['n_refined']}")
+
+    import os
+    import tempfile
+
+    out_path = refined_out
+    if out_path is None:
+        fd, out_path = tempfile.mkstemp(suffix=".json")
+        os.close(fd)
+    refined.save(out_path)
+    reloaded = TilePlan.load(out_path)
+    if refined_out is None:
+        os.unlink(out_path)
+    if reloaded.meta.get("refined_from", {}).get(
+            "schema_version") != PLAN_SCHEMA_VERSION:
+        failures += 1
+        print_fn("FAIL: refinement provenance did not survive the "
+                 "schema-v3 save/load round-trip")
+    if len(reloaded.meta.get("measurements", ())) != report["n_refined"]:
+        failures += 1
+        print_fn("FAIL: measurement provenance lost in save/load")
+    from repro.core import HARDWARE_REGISTRY
+    hw = HARDWARE_REGISTRY[BELIEVED_HW]
+    for m in refined.meta["measurements"]:
+        res = reloaded.resolve(m["kernel"], m["problem"], m["dtype"], hw)
+        if res is None or res.source != "exact":
+            failures += 1
+            print_fn(f"FAIL: refined cell {m['kernel']} does not resolve "
+                     f"exactly on {BELIEVED_HW} after reload "
+                     f"(source={getattr(res, 'source', None)})")
+    if drift_out:
+        with open(drift_out, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+        print_fn(f"# drift report written to {drift_out}")
+    if refined_out:
+        print_fn(f"# refined artifact written to {refined_out}")
+
+    # -- phase 3: guarded rollout across the live fleet --------------------
+    probe = make_probe(fleet, clock, pricer, cfg)
+    decisions = fleet.roll_plans(refined, drive_fn=probe,
+                                 tolerance=ROLL_TOLERANCE)
+    for d in decisions:
+        print_fn(f"# roll {d.instance}: pre p95 {d.pre_p95 * 1e3:.3f}ms -> "
+                 f"post {d.post_p95 * 1e3:.3f}ms "
+                 f"{'ROLLED BACK' if d.rolled_back else 'kept'}")
+        if d.rolled_back:
+            failures += 1
+            print_fn(f"FAIL: refined artifact rolled back on {d.instance} "
+                     f"— refinement should improve the probe p95")
+    if any(eng.plans is not refined for eng in fleet.engines.values()):
+        failures += 1
+        print_fn("FAIL: fleet is not on the refined artifact after rollout")
+
+    # -- phase 4: clean-fleet TTFT comparison (wrong / native / refined) ---
+    results = {}
+    for arm, plan in (("wrong", wrong), ("native", native),
+                      ("refined", refined)):
+        clock_a = VirtualClock()
+        fleet_a = make_fleet(plan, cfg, params, policy(), slots, max_len,
+                             clock_a)
+        placed = drive_fleet(fleet_a, clock_a, pricer, trace, new_tokens,
+                             p["arrivals_per_step"])
+        results[arm] = dict(
+            p95=small_p95(fleet_a, small_edge),
+            tokens=fleet_tokens(fleet_a, placed),
+            wall=clock_a.t,
+        )
+        print_fn(f"{arm}: small-bucket p95 TTFT "
+                 f"{results[arm]['p95'] * 1e3:.3f}ms, total "
+                 f"{clock_a.t * 1e3:.2f}ms virtual")
+    if results["refined"]["p95"] > RECOVERY_TOL * results["native"]["p95"]:
+        failures += 1
+        print_fn(f"FAIL: refined p95 {results['refined']['p95']:.6f}s not "
+                 f"within {RECOVERY_TOL}x of natively-tuned "
+                 f"{results['native']['p95']:.6f}s")
+    if not results["refined"]["p95"] < results["wrong"]["p95"]:
+        failures += 1
+        print_fn(f"FAIL: refined p95 {results['refined']['p95']:.6f}s not "
+                 f"below the wrong plan's {results['wrong']['p95']:.6f}s")
+    for arm in ("native", "refined"):
+        if results[arm]["tokens"] != results["wrong"]["tokens"]:
+            failures += 1
+            print_fn(f"FAIL: {arm} greedy outputs differ from the wrong "
+                     f"arm (token parity broken)")
+
+    # -- phase 5: the rollback guard actually guards -----------------------
+    sabotaged = sabotage_plan(refined, truth, cfg, small_edge)
+    decisions = fleet.roll_plans(sabotaged, drive_fn=probe,
+                                 tolerance=ROLL_TOLERANCE)
+    for d in decisions:
+        print_fn(f"# sabotage roll {d.instance}: pre p95 "
+                 f"{d.pre_p95 * 1e3:.3f}ms -> post "
+                 f"{d.post_p95 * 1e3:.3f}ms "
+                 f"{'ROLLED BACK' if d.rolled_back else 'kept'}")
+        if not d.rolled_back:
+            failures += 1
+            print_fn(f"FAIL: sabotaged artifact NOT rolled back on "
+                     f"{d.instance} — the p95 guard is not guarding")
+    if any(eng.plans is not refined for eng in fleet.engines.values()):
+        failures += 1
+        print_fn("FAIL: fleet did not revert to the refined artifact "
+                 "after the sabotaged roll")
+
+    print_fn("PASS" if not failures else f"{failures} FAILURES")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="scaled trace for CI (seconds, not minutes)")
+    ap.add_argument("--plans", default=None,
+                    help="compiled TilePlan artifact to reuse for the "
+                         "donor cells (falls back to compiling them)")
+    ap.add_argument("--refined-out", default=None,
+                    help="write the refined schema-v3 artifact here")
+    ap.add_argument("--drift-out", default=None,
+                    help="write the incumbent-vs-refined drift report "
+                         "(JSON) here — the CI plan-drift artifact")
+    args = ap.parse_args()
+    sys.exit(1 if run(smoke=args.smoke, plans_path=args.plans,
+                      refined_out=args.refined_out,
+                      drift_out=args.drift_out)
+             else 0)
+
+
+if __name__ == "__main__":
+    main()

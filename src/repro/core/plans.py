@@ -49,13 +49,17 @@ log = logging.getLogger("repro.plans")
 # Bump on any change to the artifact layout or to the cell families an
 # artifact is expected to cover. v1 -> v2: serving artifacts gained the
 # ``packed_prefill`` step-packing cells (compile_plans --serve-buckets).
+# v2 -> v3: artifacts may carry live-refinement provenance
+# (``meta["refined_from"]`` / ``meta["measurements"]``, written by
+# ``repro.serve.refine.PlanRefiner``) and measured per-cell entries whose
+# scores came from shadow execution rather than the analytic model.
 # Versions in COMPAT_SCHEMA_VERSIONS still load — their entry layout is
 # forward-compatible — but emit :class:`PlanVersionWarning` so operators
-# recompile (a v1 artifact cannot resolve pack widths and every packed
-# lookup degrades to the heuristic default). Anything else is rejected: a
-# stale artifact must not silently misconfigure tiles.
-PLAN_SCHEMA_VERSION = 2
-COMPAT_SCHEMA_VERSIONS = (1,)
+# recompile (a v1 artifact cannot resolve pack widths, and neither v1 nor
+# v2 carries refinement provenance). Anything else is rejected: a stale
+# artifact must not silently misconfigure tiles.
+PLAN_SCHEMA_VERSION = 3
+COMPAT_SCHEMA_VERSIONS = (1, 2)
 
 
 class PlanError(ValueError):
@@ -413,9 +417,9 @@ class TilePlan:
             msg = (
                 f"loading plan artifact with old schema version {version} "
                 f"(current {PLAN_SCHEMA_VERSION}): entries resolve, but "
-                f"cell families added since (e.g. packed_prefill serving "
-                f"cells) are missing and fall back to heuristics — "
-                f"recompile with repro.launch.compile_plans"
+                f"features added since (packed_prefill serving cells in v2, "
+                f"refinement provenance in v3) are missing and degrade to "
+                f"heuristics — recompile with repro.launch.compile_plans"
             )
             warnings.warn(PlanVersionWarning(msg), stacklevel=3)
             log.warning("%s", msg)

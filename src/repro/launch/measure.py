@@ -12,6 +12,11 @@ Gating: measurement requires the running jax backend to be a TPU *and* the
 target hardware descriptor to be TPU-family (we cannot wall-clock a GTX260
 descriptor on a TPU). Anything else returns None and the caller falls back
 to the analytic model — the compile never fails for lack of hardware.
+
+``make_cell_timer`` wraps the same machinery as the *always-available*
+timing path shared by plan compilation and the serving engines' shadow
+execution (``repro.serve.refine``): wall-clock when hardware is present,
+the analytic cost-model score otherwise.
 """
 from __future__ import annotations
 
@@ -195,3 +200,31 @@ def make_measure_fn(
         return (time.perf_counter() - t0) / iters
 
     return measure
+
+
+def make_cell_timer(
+    kernel: str,
+    problem: Mapping[str, int],
+    dtype: str,
+    hw: HardwareModel,
+    warmup: int = 1,
+    iters: int = 3,
+) -> MeasureFn:
+    """The shared timing path for plan compilation AND shadow execution.
+
+    Wall-clock via :func:`make_measure_fn` when the running backend can
+    execute kernels for ``hw``; the analytic cost-model score otherwise.
+    Unlike ``make_measure_fn`` (which returns None off-hardware so the
+    compiler can distinguish measured from analytic artifacts), this always
+    returns a callable — shadow steps must produce *a* comparable number on
+    every backend, and on modelled-only targets that number is the same
+    analytic score the plan was ranked by.
+    """
+    fn = make_measure_fn(kernel, problem, dtype, hw,
+                         warmup=warmup, iters=iters)
+    if fn is not None:
+        return lambda tile: fn(TileShape(tuple(tile)))
+    from repro.core.plans import score_tile
+
+    return lambda tile: score_tile(kernel, TileShape(tuple(tile)),
+                                   dict(problem), dtype, hw)

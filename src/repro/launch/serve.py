@@ -28,6 +28,14 @@ kernel launch — plus the decode batch, under the step budget and the
 artifact's ``packed_prefill`` pack width (VMEM-bounded per hardware model,
 so different models pack different widths). Token outputs are identical to
 one-chunk-per-step and unchunked service; only the schedule densifies.
+
+``--refine`` closes the loop from telemetry back to the plan: engines divert
+``--shadow-fraction`` of their steps to shadow-measuring candidate tiles
+from the artifact's sensitivity curves (served tokens are untouched), the
+shared :class:`~repro.serve.refine.PlanRefiner` re-ranks confidently-better
+cells at exit, the refined artifact is written to ``--refine-out``, and the
+deployment rolls onto it (one instance at a time through the fleet router's
+rollback guard).
 """
 from __future__ import annotations
 
@@ -100,6 +108,17 @@ def main():
                     help="comma list of hardware models; serve through the "
                          "fleet router with one engine per model "
                          "(overrides --hardware)")
+    ap.add_argument("--refine", action="store_true",
+                    help="shadow-measure candidate tiles during service and "
+                         "emit a refined (re-ranked) plan artifact at exit; "
+                         "requires --tile-plans")
+    ap.add_argument("--shadow-fraction", type=float, default=1 / 32,
+                    help="fraction of steps diverted to shadow measurement "
+                         "when --refine is on (deterministic counter-based "
+                         "sampling; default 1/32)")
+    ap.add_argument("--refine-out", default=None,
+                    help="write the refined plan artifact here (with "
+                         "--refine; default: print the drift summary only)")
     ap.add_argument("--metrics-json", action="store_true",
                     help="dump full metrics as JSON instead of the summary")
     args = ap.parse_args()
@@ -109,6 +128,16 @@ def main():
     cfg = configs.get_smoke(args.arch)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     plans = TilePlan.load_or_none(args.tile_plans)
+
+    refiner = None
+    if args.refine:
+        if plans is None:
+            raise SystemExit("--refine requires a loadable --tile-plans "
+                             "artifact (shadow candidates come from its "
+                             "sensitivity curves)")
+        from repro.serve import PlanRefiner
+
+        refiner = PlanRefiner()
 
     fleet_names = [h for h in args.fleet.split(",") if h]
     policy = None
@@ -128,7 +157,9 @@ def main():
             chunk_prefill=args.chunk_prefill,
             step_token_budget=args.step_token_budget,
             prefill_slots=args.prefill_slots,
-            pack_prefill=args.pack_prefill)
+            pack_prefill=args.pack_prefill,
+            shadow_fraction=args.shadow_fraction if args.refine else 0.0,
+            refiner=refiner)
 
     router = None
     if fleet_names:
@@ -169,6 +200,32 @@ def main():
     toks = sum(len(r.out_tokens) for r in done)
     print(f"{len(done)} requests ({rejected} rejected), {toks} tokens in "
           f"{dt:.2f}s ({toks / dt:.1f} tok/s)")
+
+    if refiner is not None:
+        from repro.serve import drift_report
+
+        refined = refiner.refine(plans)
+        report = drift_report(refined)
+        print(f"refined {report['n_refined']} cell(s) from "
+              f"{report['shadow_samples']} shadow sample(s)")
+        for cell in report["cells"]:
+            print(f"  {cell['cell']}: {cell['incumbent']} -> "
+                  f"{cell['refined']} ({cell['speedup']:.2f}x, "
+                  f"{cell['samples']} samples)")
+        if args.refine_out:
+            refined.save(args.refine_out)
+            print(f"refined plan artifact -> {args.refine_out}")
+        # Versioned rollout: the fleet rolls one instance at a time via the
+        # p95-TTFT guard (unguarded here — the demo has no probe traffic);
+        # a single engine just swaps.
+        if router is not None:
+            for decision in router.roll_plans(refined):
+                print(f"rolled {decision.instance}: "
+                      f"rolled_back={decision.rolled_back}")
+        else:
+            engine.set_plans(refined)
+            print("engine rolled onto the refined artifact")
+
     if args.metrics_json:
         print(json.dumps(metrics, indent=1, sort_keys=True, default=str))
     elif router is not None:

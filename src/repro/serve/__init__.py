@@ -1,8 +1,11 @@
 """Serving subsystem: engine, shape-bucketed scheduler, fleet router,
-runtime telemetry. See ``repro.serve.scheduler`` for the admission story."""
+runtime telemetry, online plan refinement. See ``repro.serve.scheduler``
+for the admission story and ``repro.serve.refine`` for the telemetry ->
+plan feedback loop."""
 from repro.serve.engine import Request, ServeEngine
-from repro.serve.fleet import FleetRouter, RouteDecision
+from repro.serve.fleet import FleetRouter, RollDecision, RouteDecision
 from repro.serve.metrics import ServeMetrics
+from repro.serve.refine import PlanRefiner, drift_report, make_shadow_measure
 from repro.serve.scheduler import (
     BucketPolicy,
     FifoScheduler,
@@ -11,6 +14,7 @@ from repro.serve.scheduler import (
 )
 
 __all__ = [
-    "Request", "ServeEngine", "FleetRouter", "RouteDecision", "ServeMetrics",
+    "Request", "ServeEngine", "FleetRouter", "RouteDecision", "RollDecision",
+    "ServeMetrics", "PlanRefiner", "make_shadow_measure", "drift_report",
     "BucketPolicy", "FifoScheduler", "ShapeBucketScheduler", "make_scheduler",
 ]

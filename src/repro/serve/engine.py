@@ -120,7 +120,10 @@ class ServeEngine:
                  chunk_prefill: bool = False,
                  step_token_budget: int = 0,
                  prefill_slots: int = 2,
-                 pack_prefill: bool = False):
+                 pack_prefill: bool = False,
+                 shadow_fraction: float = 0.0,
+                 shadow_measure=None,
+                 refiner=None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -168,7 +171,30 @@ class ServeEngine:
         self.last_step_stats: Dict[str, Any] = {"prefill_tokens": 0,
                                                 "decode_tokens": 0,
                                                 "packed_chunks": 0,
-                                                "packed_rids": ()}
+                                                "packed_rids": (),
+                                                "prefill_segments": ()}
+        # Shadow execution (repro.serve.refine): divert a deterministic
+        # fraction of steps to measuring one candidate tile from the plan's
+        # sensitivity curve next to the incumbent. Counter-based sampling
+        # (fractional accumulator), so tests and CI see the exact same
+        # shadow schedule every run — no wall-clock randomness. Shadowing
+        # is measurement-only: it never touches the serving math.
+        self.shadow_fraction = float(shadow_fraction)
+        if not 0.0 <= self.shadow_fraction <= 1.0:
+            raise ValueError(
+                f"shadow_fraction must be in [0, 1]: {shadow_fraction}")
+        self.refiner = refiner
+        self._shadow_measure = shadow_measure
+        self._shadow_acc = 0.0
+        self._shadow_rr = 0                       # round-robin cell cursor
+        self._shadow_idx: Dict[str, int] = {}     # cell -> candidate cursor
+        # cell key -> (kernel, problem): every plan cell this engine has
+        # resolved so far — the shadow candidates' universe.
+        self._shadow_cell_map: Dict[str, Any] = {}
+        self._shadow_order: List[str] = []
+        # cell key -> (incumbent dims, candidate dims tuple) | None.
+        self._shadow_views: Dict[str, Any] = {}
+        self.steps_run = 0
         # kernel name -> resolved tile for the decode path; populated from
         # the AOT plan at init so serving never pays a sweep.
         self.tiles: Dict[str, TileShape] = {}
@@ -227,7 +253,7 @@ class ServeEngine:
 
     def _resolve_tiles(self, plans: TilePlan) -> None:
         """Resolve decode-path kernel tiles from the plan store. No sweeps."""
-        from repro.launch.specs import resolve_model_tiles
+        from repro.launch.specs import kernel_problems, resolve_model_tiles
 
         self.tiles, self.tile_resolutions = resolve_model_tiles(
             plans, self.cfg, self.slots, self.max_len, "decode",
@@ -236,6 +262,130 @@ class ServeEngine:
             res = self.tile_resolutions.get(kernel)
             self.metrics.record_plan(
                 "decode", kernel, res.source if res else "fallback")
+        self._note_shadow_cells(
+            kernel_problems(self.cfg, self.slots, self.max_len, "decode"))
+
+    # -- live plan refinement ------------------------------------------------
+    def _note_shadow_cells(self, problems: Dict[str, Dict[str, int]]) -> None:
+        """Register plan cells this engine resolved as shadow targets."""
+        from repro.core.plans import problem_key
+
+        for kernel, problem in problems.items():
+            key = f"{kernel}|{problem_key(problem)}"
+            if key not in self._shadow_cell_map:
+                self._shadow_cell_map[key] = (kernel, dict(problem))
+                self._shadow_order.append(key)
+
+    def _shadow_view(self, key: str):
+        """(incumbent dims, candidate dims tuple) for one cell, or None.
+
+        The incumbent is the plan-resolved serving tile; the candidates are
+        every other tile on the resolved entry's stored sensitivity curve —
+        the ranking the paper says cannot be trusted once hardware or
+        conditions change, which is exactly why shadow steps re-measure it.
+        """
+        if key in self._shadow_views:
+            return self._shadow_views[key]
+        kernel, problem = self._shadow_cell_map[key]
+        view = None
+        if self.plans is not None:
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", PlanTransferWarning)
+                res = self.plans.resolve(kernel, problem,
+                                         jnp.dtype(self.dtype).name,
+                                         self.hardware)
+            if res is not None:
+                inc = tuple(int(x) for x in res.tile.dims)
+                cands, seen = [], {inc}
+                for dims, _score in res.entry.curve:
+                    dims = tuple(int(x) for x in dims)
+                    if dims not in seen:
+                        seen.add(dims)
+                        cands.append(dims)
+                if cands:
+                    view = (inc, tuple(cands))
+        self._shadow_views[key] = view
+        return view
+
+    def _shadow_measure_fn(self):
+        if self._shadow_measure is None:
+            from repro.serve.refine import make_shadow_measure
+
+            self._shadow_measure = make_shadow_measure(self.hardware)
+        return self._shadow_measure
+
+    def _maybe_shadow(self) -> None:
+        """Divert this step to shadow measurement when the deterministic
+        fractional accumulator crosses 1: measure ONE candidate tile (and
+        the incumbent, for a like-for-like baseline) for the next cell in
+        round-robin order, record both, and feed the refiner. Serving state
+        is untouched — tokens are identical with shadowing on or off."""
+        if not self.shadow_fraction or self.plans is None:
+            return
+        self._shadow_acc += self.shadow_fraction
+        if self._shadow_acc < 1.0:
+            return
+        self._shadow_acc -= 1.0
+        if not self._shadow_order:
+            return
+        measure = self._shadow_measure_fn()
+        dtype = jnp.dtype(self.dtype).name
+        for _ in range(len(self._shadow_order)):
+            key = self._shadow_order[self._shadow_rr
+                                     % len(self._shadow_order)]
+            self._shadow_rr += 1
+            view = self._shadow_view(key)
+            if view is None:
+                continue
+            inc, cands = view
+            kernel, problem = self._shadow_cell_map[key]
+            idx = self._shadow_idx.get(key, 0)
+            self._shadow_idx[key] = idx + 1
+            cand = cands[idx % len(cands)]
+            dt_inc = float(measure(kernel, problem, dtype, inc))
+            dt_cand = float(measure(kernel, problem, dtype, cand))
+            self.metrics.record_shadow(kernel, inc, dt_inc, incumbent=True)
+            self.metrics.record_shadow(kernel, cand, dt_cand)
+            if self.refiner is not None:
+                self.refiner.observe(kernel, problem, dtype,
+                                     self.hardware.name, inc, dt_inc,
+                                     incumbent=True)
+                self.refiner.observe(kernel, problem, dtype,
+                                     self.hardware.name, cand, dt_cand)
+            self.metrics.record_shadow_step()
+            return
+
+    def set_plans(self, plans: Optional[TilePlan]) -> None:
+        """Swap this engine onto a (refined) plan artifact, live.
+
+        Every plan-derived cache is dropped — prefill/chunk/pack programs,
+        chunk plans, tile events, shadow views — and the decode program is
+        REBUILT (jax.jit caches the traced graph, so a closure over the old
+        tiles would keep serving them). In-flight requests keep their
+        states and chunk progress: tiles never change the math (the repo's
+        pinned invariant), so a mid-prefill swap is token-transparent.
+        """
+        self.plans = plans
+        self._prefill_fns.clear()
+        self._prefill_sources.clear()
+        self._prefill_tile_events.clear()
+        self._chunk_plans.clear()
+        self._chunk_fns.clear()
+        self._chunk_tile_events.clear()
+        self._pack_plan_cache = None
+        self._pack_fns.clear()
+        self._pack_tile_events.clear()
+        self._single_chunk_edge = None
+        self._decode_tile_events = None
+        self._shadow_views.clear()
+        self.tiles, self.tile_resolutions = {}, {}
+        if plans is not None:
+            self._resolve_tiles(plans)
+        cfg = self.cfg
+        self._decode = jax.jit(
+            lambda p, tok, st: api.decode_step(p, cfg, tok, st,
+                                               tiles=self.tiles or None)
+        )
 
     def _prefill_fn(self, length: int):
         """The jitted prefill program for one admitted prompt length.
@@ -279,6 +429,11 @@ class ServeEngine:
         )
         self._prefill_fns[length] = fn
         self._prefill_sources[length] = sources
+        if self.plans is not None:
+            from repro.launch.specs import kernel_problems
+
+            self._note_shadow_cells(
+                kernel_problems(self.cfg, 1, length, "prefill"))
         return fn
 
     # -- chunked prefill -----------------------------------------------------
@@ -374,6 +529,15 @@ class ServeEngine:
             sources["chunked_prefill"] = source
         entry = (chunk, tiles, sources)
         self._chunk_plans[admit_len] = entry
+        if self.plans is not None:
+            from repro.launch.specs import kernel_problems
+
+            cells = {k: v for k, v in kernel_problems(
+                self.cfg, 1, chunk, "prefill").items()
+                if k != "flash_attention"}
+            if problem is not None:
+                cells["chunked_prefill"] = problem
+            self._note_shadow_cells(cells)
         return entry
 
     def chunk_len_for(self, admit_len: int) -> int:
@@ -429,6 +593,8 @@ class ServeEngine:
         if tile is not None:
             tiles["packed_prefill"] = tile
         self._pack_plan_cache = (width, tiles, source)
+        if self.plans is not None and problem is not None:
+            self._note_shadow_cells({"packed_prefill": problem})
         return self._pack_plan_cache
 
     def _pack_budget(self) -> float:
@@ -695,10 +861,12 @@ class ServeEngine:
         self.metrics.record_submit(rid)
         return rid
 
-    def _admit(self) -> int:
-        """Admit into free slots, running each whole prefill. Returns the
-        total prompt tokens prefilled (mixed-step accounting)."""
+    def _admit(self):
+        """Admit into free slots, running each whole prefill. Returns
+        (total prompt tokens prefilled, per-prefill (admit_len, tokens)
+        segments) — mixed-step accounting for virtual-clock drivers."""
         prefill_tokens = 0
+        segments: List[Any] = []
         free = [i for i, r in enumerate(self._active) if r is None]
         while free:
             req = self.scheduler.next_request()
@@ -706,6 +874,7 @@ class ServeEngine:
                 break
             prompt = self.scheduler.prepare(req)
             prefill_tokens += len(prompt)
+            segments.append((len(prompt), len(prompt)))
             prefill = self._prefill_fn(len(prompt))
             for kernel, source in self._prefill_sources[len(prompt)].items():
                 self.metrics.record_plan("prefill", kernel, source)
@@ -735,7 +904,7 @@ class ServeEngine:
             i = free.pop(0)
             self._active[i] = req
             self._states[i] = state
-        return prefill_tokens
+        return prefill_tokens, tuple(segments)
 
     def _decode_all(self) -> int:
         """One decode step for every active slot. Returns #active."""
@@ -781,12 +950,15 @@ class ServeEngine:
         """
         if self.chunk_prefill:
             return self._step_chunked()
-        prefill_tokens = self._admit()
+        prefill_tokens, segments = self._admit()
         self.metrics.record_queue_depth(self.scheduler.pending())
         n = self._decode_all()
         self.last_step_stats = {"prefill_tokens": prefill_tokens,
                                 "decode_tokens": n,
-                                "packed_chunks": 0, "packed_rids": ()}
+                                "packed_chunks": 0, "packed_rids": (),
+                                "prefill_segments": segments}
+        self._maybe_shadow()
+        self.steps_run += 1
         return n
 
     def _step_chunked(self) -> int:
@@ -796,10 +968,13 @@ class ServeEngine:
             self.scheduler.pending() + len(self._held))
         prefill_tokens = 0
         packed_rids: tuple = ()
+        segments: tuple = ()
         if self.pack_prefill:
             picks = self._next_pack()
             if picks:
                 packed_rids = tuple(job.req.rid for job, _ in picks)
+                segments = tuple((len(job.prompt), take)
+                                 for job, take in picks)
                 self.metrics.record_packed_step(len(picks))
                 if len(picks) == 1:
                     # Singleton pack: reuse the per-(admit_len, start)
@@ -812,6 +987,8 @@ class ServeEngine:
             job = self._next_chunk_job()
             if job is not None:
                 packed_rids = (job.req.rid,)
+                segments = ((len(job.prompt),
+                             min(job.chunk_len, job.remaining)),)
                 prefill_tokens = self._run_chunk(job)
                 # A prefill finished by that chunk may start decoding this
                 # very step if a slot is free — its first decode token
@@ -821,7 +998,10 @@ class ServeEngine:
         self.last_step_stats = {"prefill_tokens": prefill_tokens,
                                 "decode_tokens": n,
                                 "packed_chunks": len(packed_rids),
-                                "packed_rids": packed_rids}
+                                "packed_rids": packed_rids,
+                                "prefill_segments": segments}
+        self._maybe_shadow()
+        self.steps_run += 1
         return n + len(self._chunking) + len(self._ready) + len(self._held)
 
     def _next_pack(self):

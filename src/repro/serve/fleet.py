@@ -45,6 +45,16 @@ class RouteDecision:
     scores: Tuple[Tuple[str, float], ...]  # all (instance, loaded score)
 
 
+@dataclasses.dataclass(frozen=True)
+class RollDecision:
+    """One instance's plan-rollout outcome (``FleetRouter.roll_plans``)."""
+
+    instance: str
+    pre_p95: float                    # probe p95 TTFT before the swap (s)
+    post_p95: float                   # probe p95 TTFT after the swap (s)
+    rolled_back: bool
+
+
 class FleetRouter:
     """Route requests across per-hardware engines by plan-resolved cost."""
 
@@ -57,6 +67,9 @@ class FleetRouter:
         self.decisions: List[RouteDecision] = []
         # Router-level rejections (no engine was ever asked): reason -> n.
         self.rejects: Dict[str, int] = {}
+        # Plan-rollout audit trail (roll_plans appends one entry per
+        # instance swapped or reverted).
+        self.roll_history: List[RollDecision] = []
         # (instance, kind, length) -> estimated seconds; pure function of
         # the plan + cost model, so cache freely.
         self._cell_cost: Dict[Tuple[str, str, int], float] = {}
@@ -230,6 +243,56 @@ class FleetRouter:
                 break
         return {name: list(eng._finished)
                 for name, eng in self.engines.items()}
+
+    # -- versioned plan rollout ----------------------------------------------
+    def roll_plans(self, artifact, drive_fn=None, tolerance: float = 1.10,
+                   min_window: int = 4) -> List[RollDecision]:
+        """Roll a (refined) plan artifact across the fleet, one instance at
+        a time, with a p95-TTFT rollback guard.
+
+        Per instance: ``drive_fn(name)`` (when given) pushes probe traffic
+        through that engine BEFORE the swap — the pre-swap p95-TTFT window —
+        then the engine is swapped via :meth:`ServeEngine.set_plans` and the
+        SAME probe runs again. If the post-swap window regresses past
+        ``tolerance`` x the pre-swap p95 (both windows holding at least
+        ``min_window`` first-token samples — a thin window must never
+        trigger a revert), the instance rolls back to its old artifact.
+        Either way the outcome lands in ``self.roll_history`` and the
+        per-instance cost cache is invalidated (costs are a function of the
+        plan). Without a ``drive_fn`` the swap is unguarded — every
+        instance just moves to the new artifact.
+        """
+        decisions: List[RollDecision] = []
+        for name in sorted(self.engines):
+            eng = self.engines[name]
+            old = eng.plans
+            pre_p95, n_pre = 0.0, 0
+            if drive_fn is not None:
+                mark = eng.metrics.ttft_counts()
+                drive_fn(name)
+                pre_p95 = eng.metrics.ttft_p95(mark)
+                n_pre = len(eng.metrics.ttft_since(mark))
+            mark = eng.metrics.ttft_counts()
+            eng.set_plans(artifact)
+            self._cell_cost.clear()
+            post_p95, n_post = 0.0, 0
+            if drive_fn is not None:
+                drive_fn(name)
+                post_p95 = eng.metrics.ttft_p95(mark)
+                n_post = len(eng.metrics.ttft_since(mark))
+            rolled_back = (drive_fn is not None
+                           and n_pre >= min_window and n_post >= min_window
+                           and pre_p95 > 0.0
+                           and post_p95 > tolerance * pre_p95)
+            if rolled_back:
+                eng.set_plans(old)
+                self._cell_cost.clear()
+            decision = RollDecision(instance=name, pre_p95=pre_p95,
+                                    post_p95=post_p95,
+                                    rolled_back=rolled_back)
+            self.roll_history.append(decision)
+            decisions.append(decision)
+        return decisions
 
     def metrics(self) -> Dict[str, dict]:
         out = {name: eng.metrics.as_dict()

@@ -27,6 +27,12 @@ Measured quantities follow serving convention:
   per-step mixed token counts. Rejections carry an explicit reason
   (``over_length`` / ``queue_full`` / ``cache_overflow``) — admission
   never drops silently.
+* **Shadow execution**: ``record_shadow`` keeps per-(kernel, tile) timing
+  stats for the candidate tiles the engine measures on diverted steps (see
+  ``repro.serve.refine``) next to the incumbent's, so the telemetry export
+  carries the raw material the :class:`~repro.serve.refine.PlanRefiner`
+  re-ranks from. ``ttft_counts``/``ttft_p95`` support windowed p95 reads
+  (samples since a marked count), the rollback guard's regression signal.
 """
 from __future__ import annotations
 
@@ -81,6 +87,17 @@ class _LatencyStat:
         rank = max(0, math.ceil(q / 100.0 * len(ordered)) - 1)
         return ordered[rank]
 
+    def recent(self, n: int) -> List[float]:
+        """The newest ``n`` samples, oldest first (bounded by the window)."""
+        n = min(n, len(self.samples))
+        if n <= 0:
+            return []
+        if len(self.samples) < self.sample_cap:
+            return self.samples[-n:]
+        # Circular: the newest sample lives at (count - 1) % cap.
+        return [self.samples[(self.count - n + i) % self.sample_cap]
+                for i in range(n)]
+
     def as_dict(self) -> Dict[str, float]:
         return {"count": self.count, "mean_s": self.mean_s,
                 "max_s": self.max_s,
@@ -115,6 +132,12 @@ class ServeMetrics:
         # Step packing: how many prefill chunks rode each packed step — the
         # occupancy histogram the packing bench uploads as a CI artifact.
         self.packed_chunks_per_step: Counter = Counter()
+        # Shadow execution: per-(kernel, tile) measured timings from the
+        # engine's diverted steps, plus which tile was the incumbent when
+        # last measured. Keys are str(tile) so the export is JSON-clean.
+        self.shadow_steps = 0
+        self.shadow_time: Dict[tuple, _LatencyStat] = defaultdict(_LatencyStat)
+        self.shadow_incumbents: Dict[str, str] = {}
 
     # -- request lifecycle ---------------------------------------------------
     def record_submit(self, rid: int) -> None:
@@ -167,6 +190,45 @@ class ServeMetrics:
     def record_packed_step(self, n_chunks: int) -> None:
         """A packed step ran ``n_chunks`` prefill chunks in one launch."""
         self.packed_chunks_per_step[n_chunks] += 1
+
+    # -- shadow execution ----------------------------------------------------
+    def record_shadow_step(self) -> None:
+        """One engine step was diverted to shadow measurement."""
+        self.shadow_steps += 1
+
+    def record_shadow(self, kernel: str, tile, dt: float,
+                      incumbent: bool = False) -> None:
+        """One shadow measurement: ``tile`` (a dims tuple/TileShape) ran the
+        ``kernel`` cell in ``dt`` measured seconds. ``incumbent`` marks the
+        serving tile's own measurement, recorded next to each candidate's so
+        the refiner's speedup gate compares like with like."""
+        key = str(tuple(tile))
+        self.shadow_time[(kernel, key)].record(dt)
+        if incumbent:
+            self.shadow_incumbents[kernel] = key
+
+    # -- TTFT windows (rollout guard) ----------------------------------------
+    def ttft_counts(self) -> Dict[object, int]:
+        """Per-bucket TTFT sample counts — a mark for windowed reads."""
+        return {b: s.count for b, s in self.ttft.items()}
+
+    def ttft_since(self, marks: Optional[Dict[object, int]] = None
+                   ) -> List[float]:
+        """All TTFT samples recorded after ``marks`` (every bucket pooled);
+        with no marks, every retained sample. Bounded by the per-bucket
+        sliding sample window."""
+        out: List[float] = []
+        for b, s in self.ttft.items():
+            n_new = s.count - (marks.get(b, 0) if marks else 0)
+            out.extend(s.recent(n_new))
+        return out
+
+    def ttft_p95(self, marks: Optional[Dict[object, int]] = None) -> float:
+        """Nearest-rank p95 over the (windowed) pooled TTFT samples."""
+        xs = sorted(self.ttft_since(marks))
+        if not xs:
+            return 0.0
+        return xs[max(0, math.ceil(0.95 * len(xs)) - 1)]
 
     def record_queue_depth(self, depth: int) -> None:
         self.queue_depth_max = max(self.queue_depth_max, depth)
@@ -227,6 +289,19 @@ class ServeMetrics:
                 "chunk_age_s": {str(b): s.as_dict() for b, s in sorted(
                     self.chunk_age.items(), key=lambda kv: str(kv[0]))},
             },
+            "shadow": {
+                "steps": self.shadow_steps,
+                "incumbents": dict(sorted(self.shadow_incumbents.items())),
+                "samples": {
+                    kernel: {
+                        tile: stat.as_dict()
+                        for (k, tile), stat in sorted(
+                            self.shadow_time.items(),
+                            key=lambda kv: kv[0]) if k == kernel
+                    }
+                    for kernel in sorted({k for k, _ in self.shadow_time})
+                },
+            },
             "ttft_s": {str(b): s.as_dict() for b, s in sorted(
                 self.ttft.items(), key=lambda kv: str(kv[0]))},
             "tpot_s": {str(b): s.as_dict() for b, s in sorted(
@@ -269,6 +344,10 @@ class ServeMetrics:
             lines.append(
                 f"  step packing: chunks/step "
                 f"{d['chunked_prefill']['packed_chunks_per_step']}")
+        if self.shadow_steps:
+            lines.append(
+                f"  shadow: {self.shadow_steps} diverted steps, "
+                f"{len(self.shadow_time)} (kernel, tile) cells measured")
         for label, table in (("ttft", d["ttft_s"]), ("tpot", d["tpot_s"])):
             for bucket, stat in table.items():
                 lines.append(

@@ -87,16 +87,19 @@ def test_schema_version_and_field_validation(tmp_path, plan):
         TilePlan.from_dict(d)
 
 
-def test_old_schema_artifact_loads_with_warning(tmp_path, plan):
-    """The v1 -> v2 bump (packed_prefill serving cells) is clean: a v1
-    artifact still loads — entries intact, resolutions unchanged — but
-    emits PlanVersionWarning so operators recompile."""
-    path = tmp_path / "v1.json"
+@pytest.mark.parametrize("old_version", [1, 2])
+def test_old_schema_artifact_loads_with_warning(tmp_path, plan, old_version):
+    """The v1 -> v2 (packed_prefill serving cells) and v2 -> v3 (refinement
+    provenance) bumps are clean: old artifacts still load — entries intact,
+    resolutions unchanged — but emit PlanVersionWarning so operators
+    recompile."""
+    path = tmp_path / f"v{old_version}.json"
     d = plan.to_dict()
-    assert d["schema_version"] == PLAN_SCHEMA_VERSION == 2
-    d["schema_version"] = 1
+    assert d["schema_version"] == PLAN_SCHEMA_VERSION == 3
+    d["schema_version"] = old_version
     path.write_text(json.dumps(d))
-    with pytest.warns(PlanVersionWarning, match="old schema version 1"):
+    with pytest.warns(PlanVersionWarning,
+                      match=f"old schema version {old_version}"):
         loaded = TilePlan.load(str(path))
     assert len(loaded) == len(plan)
     assert loaded.resolve("matmul", PROB, "bfloat16",

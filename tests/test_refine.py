@@ -1,0 +1,508 @@
+"""Refinement-conformance suite: shadow execution, re-ranking, rollout.
+
+The live-refinement loop (``repro.serve.refine``) closes plan artifacts
+over fleet telemetry: engines divert a deterministic fraction of steps to
+shadow-measuring candidate tiles from the plan's sensitivity curves, a
+shared :class:`PlanRefiner` re-ranks confidently-better cells into a
+schema-v3 artifact, and ``FleetRouter.roll_plans`` rolls it out behind a
+p95-TTFT rollback guard. This suite pins the contracts the bench
+(``benchmarks/bench_plan_refinement.py``) builds on:
+
+* **token parity** — served tokens are bit-identical with shadowing on or
+  off, in every service mode (unchunked / chunked / packed): shadow
+  measurement never touches the serving math;
+* **determinism** — counter-based sampling: the shadow schedule is an
+  exact function of the step count (no wall-clock randomness), and two
+  identical runs produce identical shadow telemetry;
+* **confidence gate** — the refiner re-ranks only with >= min_samples on
+  both the winner AND the measured incumbent, and only past min_speedup;
+* **provenance** — refined artifacts round-trip through save/load at
+  schema v3 with ``refined_from``/``measurements`` intact, and refined
+  cells resolve EXACTLY on the observing hardware (transfer warnings stop);
+* **live swap** — ``ServeEngine.set_plans`` drops every plan-derived cache
+  and rebuilds the decode program; a mid-flight swap is token-transparent;
+* **rollback guard** — ``roll_plans`` reverts an instance whose post-swap
+  probe p95 regresses past tolerance, never reverts on a thin window, and
+  swaps unguarded without a probe.
+
+Run on the reference lowerings by default; the CI ``refinement-
+conformance`` job adds an interpret-mode Pallas leg
+(REPRO_PALLAS_INTERPRET=1) so the same assertions cover the Pallas kernel
+bodies without TPU hardware.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+import repro.kernels  # noqa: F401
+from repro import configs
+from repro.core import PLAN_SCHEMA_VERSION, TPU_V5E, TPU_V6E, registry
+from repro.core.plans import (
+    PlanTransferWarning, TilePlan, compile_plan, score_tile,
+)
+from repro.launch.compile_plans import serve_bucket_cells
+from repro.models import api
+from repro.serve import (
+    BucketPolicy, FleetRouter, PlanRefiner, ServeEngine, ServeMetrics,
+    ShapeBucketScheduler, drift_report,
+)
+
+EDGES = (8, 64)
+MAX_LEN = 80
+SLOTS = 2
+PROB = dict(m=64, k=64, n=128)
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    from repro import kernels
+
+    kernels.register_all()
+    cfg = configs.get_smoke("qwen2-1.5b")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _serve_jobs(hw):
+    cells = serve_bucket_cells(["qwen2-1.5b"], EDGES, slots=SLOTS,
+                               max_len=MAX_LEN, smoke=True)
+    return [(k, p, "float32", hw) for k, p in cells]
+
+
+@pytest.fixture(scope="module")
+def donor_plan(smoke_model):
+    """A plan holding ONLY tpu_v6e entries: on a tpu_v5e engine every
+    resolution is a cross-hardware transfer — the wrong-plan start state
+    the refinement loop exists to recover from."""
+    return compile_plan(_serve_jobs(TPU_V6E))
+
+
+@pytest.fixture(scope="module")
+def native_plan(smoke_model):
+    return compile_plan(_serve_jobs(TPU_V5E))
+
+
+def fake_measure(kernel, problem, dtype, tile):
+    """Deterministic stand-in for the shadow timing path: a pure function
+    of the cell and tile, so two runs agree sample for sample."""
+    return 1e-6 * (1 + sum(int(x) for x in tile) % 7) + 1e-9 * len(kernel)
+
+
+def _engine(cfg, params, mode="unchunked", plans=None, shadow=0.0,
+            refiner=None, measure=fake_measure):
+    return ServeEngine(
+        cfg, params, max_len=MAX_LEN, slots=SLOTS,
+        plans=plans, hardware=TPU_V5E,
+        scheduler=ShapeBucketScheduler(BucketPolicy(EDGES, max_queue=99)),
+        chunk_prefill=(mode != "unchunked"),
+        pack_prefill=(mode == "packed"),
+        prefill_slots=2,
+        step_token_budget=(32 if mode != "unchunked" else 0),
+        shadow_fraction=shadow, shadow_measure=measure, refiner=refiner)
+
+
+def _trace(cfg, seed=0, lens=(3, 10, 30, 5, 50, 12)):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(2, cfg.vocab_size, size=n).astype(np.int32)
+            for n in lens]
+
+
+def _run(eng, trace, new_tokens=3):
+    rids = [eng.add_request(p, max_new_tokens=new_tokens) for p in trace]
+    assert all(r is not None for r in rids)
+    done = eng.run_until_done()
+    return {r.rid: tuple(r.out_tokens) for r in done}
+
+
+# ---------------------------------------------------------------------------
+# Shadow execution: token parity + deterministic scheduling
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["unchunked", "chunked", "packed"])
+def test_shadow_token_parity(mode, smoke_model, donor_plan):
+    """Shadowing on (every step diverted) vs off: bit-identical tokens in
+    every service mode — and the shadow run is non-vacuous (steps diverted,
+    samples recorded, refiner fed)."""
+    cfg, params = smoke_model
+    trace = _trace(cfg)
+    off = _engine(cfg, params, mode, plans=donor_plan, shadow=0.0)
+    ref = _run(off, trace)
+    refiner = PlanRefiner()
+    on = _engine(cfg, params, mode, plans=donor_plan, shadow=1.0,
+                 refiner=refiner)
+    got = _run(on, trace)
+    assert got == ref, f"{mode}: shadow execution changed served tokens"
+    assert off.metrics.shadow_steps == 0
+    assert on.metrics.shadow_steps > 0
+    assert on.metrics.shadow_time           # (kernel, tile) stats recorded
+    assert refiner.n_samples() > 0
+    assert on.metrics.as_dict()["shadow"]["samples"]
+
+
+def test_shadow_schedule_is_counter_based(smoke_model, donor_plan):
+    """shadow_fraction=0.5 diverts exactly every second step — the schedule
+    is a pure function of the step count — and two identical runs emit
+    identical shadow telemetry (no wall-clock in the loop)."""
+    cfg, params = smoke_model
+
+    def one_run():
+        refiner = PlanRefiner()
+        eng = _engine(cfg, params, plans=donor_plan, shadow=0.5,
+                      refiner=refiner)
+        _run(eng, _trace(cfg, lens=(5, 20)), new_tokens=8)
+        return eng, refiner
+
+    eng_a, ref_a = one_run()
+    assert eng_a.steps_run > 2
+    assert eng_a.metrics.shadow_steps == eng_a.steps_run // 2
+    eng_b, ref_b = one_run()
+    assert eng_b.steps_run == eng_a.steps_run
+    assert (eng_b.metrics.as_dict()["shadow"]
+            == eng_a.metrics.as_dict()["shadow"])
+    assert ref_b.n_samples() == ref_a.n_samples()
+    assert ref_b.cells() == ref_a.cells()
+
+
+def test_shadow_fraction_validation(smoke_model):
+    cfg, params = smoke_model
+    for bad in (-0.1, 1.5):
+        with pytest.raises(ValueError, match="shadow_fraction"):
+            _engine(cfg, params, shadow=bad)
+
+
+# ---------------------------------------------------------------------------
+# ServeMetrics.as_dict golden (shadow counters included)
+# ---------------------------------------------------------------------------
+
+def test_metrics_as_dict_golden():
+    """The full telemetry export, pinned — downstream consumers (launcher,
+    CI artifacts, the refiner's drift report) parse this shape. All values
+    chosen binary-exact so the golden holds without approx."""
+    times = iter([0.0, 0.5])
+    m = ServeMetrics(clock=lambda: next(times))
+    m.record_submit(7)
+    m.record_first_token(7, 64)
+    m.record_queue_depth(2)
+    m.record_shadow_step()
+    m.record_shadow("matmul", (8, 64), 0.75, incumbent=True)
+    m.record_shadow("matmul", (8, 64), 0.25, incumbent=True)
+    m.record_shadow("matmul", (16, 64), 0.25)
+    point5 = {"count": 1, "mean_s": 0.5, "max_s": 0.5,
+              "p50_s": 0.5, "p95_s": 0.5, "p99_s": 0.5}
+    d = m.as_dict()
+    assert d == {
+        "requests": {"submitted": 1, "rejected": 0, "completed": 0,
+                     "tokens_out": 1},
+        "rejects": {},
+        "queue_depth": {"max": 2, "mean": 2.0},
+        "chunked_prefill": {"chunks_run": 0, "chunks_per_prefill": {},
+                            "packed_chunks_per_step": {}, "chunk_age_s": {}},
+        "shadow": {
+            "steps": 1,
+            "incumbents": {"matmul": "(8, 64)"},
+            "samples": {"matmul": {
+                "(8, 64)": {"count": 2, "mean_s": 0.5, "max_s": 0.75,
+                            "p50_s": 0.25, "p95_s": 0.75, "p99_s": 0.75},
+                "(16, 64)": {"count": 1, "mean_s": 0.25, "max_s": 0.25,
+                             "p50_s": 0.25, "p95_s": 0.25, "p99_s": 0.25},
+            }},
+        },
+        "ttft_s": {"64": point5},
+        "tpot_s": {},
+        "plan": {
+            "counts": {"exact": 0, "nearest_shape": 0, "cross_hardware": 0,
+                       "fallback": 0, "tile_fallback": 0, "no_plan": 0},
+            "by_phase": {},
+            "hit_rate": 0.0, "hit_rate_prefill": 0.0, "hit_rate_decode": 0.0,
+            "by_kernel": {},
+        },
+    }
+    json.dumps(d)   # the export must stay JSON-clean
+
+
+def test_metrics_ttft_windows():
+    """ttft_counts/ttft_since/ttft_p95: the rollback guard's windowed p95
+    reads samples recorded after a mark, pooled across buckets."""
+    m = ServeMetrics(clock=lambda: 0.0)
+    for v in (1.0, 2.0):
+        m.ttft[8].record(v)
+    mark = m.ttft_counts()
+    assert mark == {8: 2}
+    for v in (4.0, 8.0):
+        m.ttft[8].record(v)
+    m.ttft[64].record(16.0)
+    assert sorted(m.ttft_since(mark)) == [4.0, 8.0, 16.0]
+    assert m.ttft_p95(mark) == 16.0
+    assert m.ttft_p95() == 16.0
+    assert ServeMetrics().ttft_p95() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# PlanRefiner: the confidence gate and re-ranking provenance
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def matmul_donor():
+    return compile_plan([("matmul", PROB, "float32", TPU_V6E)])
+
+
+def _observe(refiner, tile, dt, n, incumbent=False):
+    for _ in range(n):
+        refiner.observe("matmul", PROB, "float32", "tpu_v5e", tile, dt,
+                        incumbent=incumbent)
+
+
+def test_refiner_param_validation():
+    with pytest.raises(ValueError, match="min_samples"):
+        PlanRefiner(min_samples=0)
+    with pytest.raises(ValueError, match="min_speedup"):
+        PlanRefiner(min_speedup=0.9)
+
+
+def test_refiner_gate_needs_incumbent(matmul_donor):
+    refiner = PlanRefiner()
+    _observe(refiner, (8, 64, 128), 0.5, n=5)        # candidates only
+    refined = refiner.refine(matmul_donor)
+    assert refined.meta["measurements"] == []
+    assert len(refined) == len(matmul_donor)
+
+
+def test_refiner_gate_min_samples(matmul_donor):
+    # Incumbent confident, candidate one sample short: no re-rank — and
+    # vice versa (a thinly-measured incumbent must not anchor a speedup).
+    refiner = PlanRefiner(min_samples=3)
+    _observe(refiner, (64, 64, 128), 1.0, n=3, incumbent=True)
+    _observe(refiner, (8, 64, 128), 0.5, n=2)
+    assert refiner.refine(matmul_donor).meta["measurements"] == []
+    refiner = PlanRefiner(min_samples=3)
+    _observe(refiner, (64, 64, 128), 1.0, n=2, incumbent=True)
+    _observe(refiner, (8, 64, 128), 0.5, n=3)
+    assert refiner.refine(matmul_donor).meta["measurements"] == []
+
+
+def test_refiner_gate_min_speedup(matmul_donor):
+    # 1.02x measured speedup < the 1.05 gate: noise must not flip a tile.
+    refiner = PlanRefiner(min_samples=3, min_speedup=1.05)
+    _observe(refiner, (64, 64, 128), 1.02, n=3, incumbent=True)
+    _observe(refiner, (8, 64, 128), 1.0, n=3)
+    assert refiner.refine(matmul_donor).meta["measurements"] == []
+
+
+def test_refiner_confident_rerank(matmul_donor):
+    """Past the gate: the refined artifact carries a measured entry keyed
+    to the OBSERVING hardware — resolution flips from cross-hardware
+    transfer to exact — with full provenance and a drift report."""
+    refiner = PlanRefiner(min_samples=3, min_speedup=1.05)
+    _observe(refiner, (64, 64, 128), 1.0, n=3, incumbent=True)
+    _observe(refiner, (8, 64, 128), 0.5, n=4)
+    with pytest.warns(PlanTransferWarning):
+        assert matmul_donor.resolve("matmul", PROB, "float32",
+                                    TPU_V5E).source == "cross_hardware"
+    refined = refiner.refine(matmul_donor)
+    entry = refined.lookup("matmul", PROB, "float32", "tpu_v5e")
+    assert entry is not None
+    assert entry.tile.dims == (8, 64, 128)
+    assert entry.dominant == "measured"
+    assert entry.score_s == 0.5
+    assert entry.curve[0][0] == (8, 64, 128)     # measured curve, re-sorted
+    res = refined.resolve("matmul", PROB, "float32", TPU_V5E)
+    assert res.source == "exact"                 # transfer warnings stop
+    assert refined.meta["refined_from"]["schema_version"] \
+        == PLAN_SCHEMA_VERSION
+    assert refined.meta["refined_from"]["entries"] == len(matmul_donor)
+    assert refined.meta["shadow_samples"] == refiner.n_samples() == 7
+    report = drift_report(refined)
+    assert report["n_refined"] == 1
+    cell = report["cells"][0]
+    assert cell["incumbent"] == [64, 64, 128]
+    assert cell["refined"] == [8, 64, 128]
+    assert cell["speedup"] == 2.0
+    assert cell["samples"] == 4
+    assert cell["cell"].endswith("|float32|tpu_v5e")
+
+
+def test_refined_artifact_roundtrip(tmp_path, matmul_donor):
+    """Schema-v3 provenance survives save/load: the drift report can be
+    regenerated from the artifact alone."""
+    refiner = PlanRefiner()
+    _observe(refiner, (64, 64, 128), 1.0, n=3, incumbent=True)
+    _observe(refiner, (8, 64, 128), 0.5, n=3)
+    refined = refiner.refine(matmul_donor)
+    path = str(tmp_path / "refined.json")
+    refined.save(path)
+    assert json.load(open(path))["schema_version"] == PLAN_SCHEMA_VERSION == 3
+    loaded = TilePlan.load(path)
+    assert len(loaded) == len(refined) == 2
+    assert loaded.meta["refined_from"] == refined.meta["refined_from"]
+    assert drift_report(loaded) == drift_report(refined)
+    assert loaded.resolve("matmul", PROB, "float32",
+                          TPU_V5E).source == "exact"
+
+
+# ---------------------------------------------------------------------------
+# Live swap: ServeEngine.set_plans
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_set_plans_live_swap(smoke_model, donor_plan, native_plan):
+    """set_plans drops every plan-derived cache, rebuilds the decode
+    program, flips resolutions from transfer to exact — and the swap is
+    token-transparent (tiles never change the math)."""
+    cfg, params = smoke_model
+    trace = _trace(cfg, lens=(5, 30))
+    eng = _engine(cfg, params, plans=donor_plan)
+    assert any(r.source == "cross_hardware"
+               for r in eng.tile_resolutions.values())
+    ref = _run(eng, trace)
+    assert eng._prefill_fns                      # programs were compiled
+    old_decode = eng._decode
+    eng.set_plans(native_plan)
+    assert eng._decode is not old_decode         # jit closure rebuilt
+    assert not eng._prefill_fns                  # plan-derived caches gone
+    assert not eng._shadow_views
+    assert eng.tile_resolutions
+    assert all(r.source == "exact" for r in eng.tile_resolutions.values())
+    # Same trace on the swapped engine: identical greedy tokens (fresh
+    # rids continue the engine's counter, so compare token tuples).
+    again = _run(eng, trace)
+    assert sorted(again.values()) == sorted(ref.values())
+
+
+@pytest.mark.slow
+def test_set_plans_mid_flight_token_parity(smoke_model, donor_plan,
+                                           native_plan):
+    """Swapping artifacts with requests in flight (prefill done, decode
+    pending) leaves served tokens identical to an unswapped engine."""
+    cfg, params = smoke_model
+    trace = _trace(cfg, lens=(5, 30, 12))
+    ref = _run(_engine(cfg, params, plans=donor_plan), trace, new_tokens=6)
+    eng = _engine(cfg, params, plans=donor_plan)
+    rids = [eng.add_request(p, max_new_tokens=6) for p in trace]
+    assert all(r is not None for r in rids)
+    eng.step()
+    eng.step()
+    assert eng.in_flight()
+    eng.set_plans(native_plan)
+    done = eng.run_until_done()
+    assert {r.rid: tuple(r.out_tokens) for r in done} == ref
+
+
+# ---------------------------------------------------------------------------
+# Versioned rollout: FleetRouter.roll_plans' p95-TTFT guard
+# ---------------------------------------------------------------------------
+
+def _fleet(cfg, params, plans):
+    policy = BucketPolicy(EDGES, max_queue=99)
+    eng = ServeEngine(cfg, params, max_len=MAX_LEN, slots=SLOTS, plans=plans,
+                      hardware=TPU_V5E,
+                      scheduler=ShapeBucketScheduler(policy))
+    return FleetRouter({"a": eng}, policy)
+
+
+def _probe(router, artifact, on_artifact_s, otherwise_s, n=5):
+    """A synthetic probe: records ``n`` TTFT samples whose value depends on
+    which plan the engine currently serves — a deterministic stand-in for
+    probe traffic on a virtual clock."""
+    def drive(name):
+        eng = router.engines[name]
+        val = on_artifact_s if eng.plans is artifact else otherwise_s
+        for _ in range(n):
+            eng.metrics.ttft[64].record(val)
+    return drive
+
+
+@pytest.mark.slow
+def test_roll_plans_keeps_a_better_artifact(smoke_model, donor_plan,
+                                            native_plan):
+    cfg, params = smoke_model
+    router = _fleet(cfg, params, donor_plan)
+    drive = _probe(router, native_plan, on_artifact_s=0.5, otherwise_s=1.0)
+    (decision,) = router.roll_plans(native_plan, drive_fn=drive)
+    assert not decision.rolled_back
+    assert decision.pre_p95 == 1.0 and decision.post_p95 == 0.5
+    assert router.engines["a"].plans is native_plan
+    assert router.roll_history == [decision]
+
+
+@pytest.mark.slow
+def test_roll_plans_reverts_a_regression(smoke_model, donor_plan,
+                                         native_plan):
+    cfg, params = smoke_model
+    router = _fleet(cfg, params, donor_plan)
+    drive = _probe(router, native_plan, on_artifact_s=5.0, otherwise_s=1.0)
+    (decision,) = router.roll_plans(native_plan, drive_fn=drive,
+                                    tolerance=1.10)
+    assert decision.rolled_back
+    assert decision.post_p95 == 5.0
+    assert router.engines["a"].plans is donor_plan   # reverted
+    assert router.roll_history[-1].rolled_back
+
+
+@pytest.mark.slow
+def test_roll_plans_thin_window_never_reverts(smoke_model, donor_plan,
+                                              native_plan):
+    """Fewer than min_window first-token samples on either side: the guard
+    must not trigger — a thin probe is evidence of nothing."""
+    cfg, params = smoke_model
+    router = _fleet(cfg, params, donor_plan)
+    drive = _probe(router, native_plan, on_artifact_s=5.0, otherwise_s=1.0,
+                   n=2)
+    (decision,) = router.roll_plans(native_plan, drive_fn=drive,
+                                    min_window=4)
+    assert not decision.rolled_back
+    assert router.engines["a"].plans is native_plan
+
+
+@pytest.mark.slow
+def test_roll_plans_unguarded_without_probe(smoke_model, donor_plan,
+                                            native_plan):
+    cfg, params = smoke_model
+    router = _fleet(cfg, params, donor_plan)
+    (decision,) = router.roll_plans(native_plan)
+    assert not decision.rolled_back
+    assert decision.pre_p95 == 0.0 and decision.post_p95 == 0.0
+    assert router.engines["a"].plans is native_plan
+
+
+# ---------------------------------------------------------------------------
+# End to end: wrong plan -> shadow evidence -> exact refined resolution
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_refinement_recovers_from_wrong_plan(smoke_model, donor_plan):
+    """The bench's loop in miniature: an engine believing tpu_v5e starts on
+    a tpu_v6e-only artifact under a measured truth the analytic ranking
+    does not match (VMEM-contention penalty); shadow evidence re-ranks at
+    least one cell, and the refined cell resolves exactly — no transfer."""
+    cfg, params = smoke_model
+
+    def truth(kernel, problem, dtype, tile):
+        from repro.core.tiling import TileShape
+
+        t = TileShape(tuple(int(x) for x in tile))
+        base = score_tile(kernel, t, dict(problem), dtype, TPU_V5E)
+        return base + registry.get(kernel).vmem_bytes(
+            t, dict(problem), dtype) / 2e9
+
+    refiner = PlanRefiner(min_samples=3, min_speedup=1.05)
+    eng = _engine(cfg, params, plans=donor_plan, shadow=1.0,
+                  refiner=refiner, measure=truth)
+    refined = None
+    for round_ in range(12):
+        _run(eng, _trace(cfg, seed=round_), new_tokens=4)
+        refined = refiner.refine(donor_plan)
+        if refined.meta["measurements"]:
+            break
+    assert refined is not None and refined.meta["measurements"], \
+        f"no cell re-ranked after {eng.metrics.shadow_steps} shadow steps"
+    for m in refined.meta["measurements"]:
+        res = refined.resolve(m["kernel"], m["problem"], m["dtype"], TPU_V5E)
+        assert res.source == "exact"
+        assert m["speedup"] >= 1.05
+        with pytest.warns(PlanTransferWarning):
+            donor = donor_plan.resolve(m["kernel"], m["problem"], m["dtype"],
+                                       TPU_V5E)
+        assert donor.source == "cross_hardware"
