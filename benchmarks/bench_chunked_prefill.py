@@ -39,7 +39,10 @@ FAMILY`` swaps the default head-of-line trace for a seed-pinned
 adversarial family (``all_short`` / ``all_long`` / ``bimodal`` /
 ``overflow_heavy``) — the exact prompts the conformance suite replays.
 ``--hist-out packing_hist.json`` dumps the packed arm's
-chunks-per-step histogram (the CI artifact).
+chunks-per-step histogram (the CI artifact). ``--trace-out trace.json``
+records all three arms into one deterministic virtual-clock lifecycle
+trace (one Perfetto process per arm, see ``repro.obs``) and asserts the
+trace's per-arm ``ttft`` spans reproduce the reported p95 TTFTs.
 
 ``--plans plans.json`` reuses a compiled artifact (the CI workflow passes
 the compile-plans job's artifact) instead of recompiling; the bench falls
@@ -177,7 +180,7 @@ def drive(engine, clock: VirtualClock, trace, new_tokens: int,
 
 def run(smoke: bool = False, plans_path: Optional[str] = None,
         trace_family: Optional[str] = None, hist_out: Optional[str] = None,
-        print_fn=print) -> int:
+        trace_out: Optional[str] = None, print_fn=print) -> int:
     import jax
 
     from repro import configs, kernels
@@ -209,11 +212,23 @@ def run(smoke: bool = False, plans_path: Optional[str] = None,
              f"(family={trace_family or 'head_of_line (default)'}); "
              f"virtual clock t_pf={t_pf:.2e}s/tok t_dec={t_dec:.2e}s/step")
 
+    # One tracer spans all three arms; each arm attaches as its own
+    # Perfetto process and the tracer's clock follows the arm currently
+    # driving (virtual clocks -> the exported trace is deterministic).
+    tracer = None
+    clock_box: Dict[str, Optional[VirtualClock]] = {"clock": None}
+    if trace_out:
+        from repro.obs import Tracer
+
+        tracer = Tracer(clock=lambda: clock_box["clock"].t
+                        if clock_box["clock"] is not None else 0.0)
+
     failures = 0
     results = {}
     packed_hist: Dict[str, int] = {}
     for mode in ("unchunked", "chunked", "packed"):
         clock = VirtualClock()
+        clock_box["clock"] = clock
         eng = ServeEngine(
             cfg, params,
             max_len=(max_len if not allow_overflow
@@ -228,9 +243,12 @@ def run(smoke: bool = False, plans_path: Optional[str] = None,
             pack_prefill=(mode == "packed"),
             prefill_slots=p["prefill_slots"],
             step_token_budget=(p["step_token_budget"]
-                               if mode != "unchunked" else 0))
+                               if mode != "unchunked" else 0),
+            tracer=tracer, instance=mode)
         drive(eng, clock, trace, new_tokens, p["arrivals_per_step"],
               t_pf, t_dec)
+        if tracer is not None:
+            tracer.flush()  # close this arm's deferred step span on its clock
         m = eng.metrics.as_dict()
         small = m["ttft_s"].get(str(small_edge), {})
         results[mode] = dict(
@@ -262,6 +280,30 @@ def run(smoke: bool = False, plans_path: Optional[str] = None,
                                    for m, r in results.items()}},
                       f, indent=1, sort_keys=True)
         print_fn(f"# packed histogram written to {hist_out}")
+
+    if tracer is not None:
+        # Export, reload, and check the trace against the metrics it rode
+        # along with: nearest-rank p95 over each arm's small-bucket ``ttft``
+        # span durations must reproduce the arm's reported p95 exactly.
+        from repro.obs import load_trace, write_trace
+        from repro.serve.metrics import nearest_rank
+
+        write_trace(tracer, trace_out)
+        reloaded = load_trace(trace_out)
+        pid_by_mode = {pr["name"]: pr["pid"] for pr in reloaded["procs"]}
+        for mode in ("unchunked", "chunked", "packed"):
+            durs = [ev.get("dur", 0.0) for ev in reloaded["events"]
+                    if ev.get("name") == "ttft"
+                    and ev["pid"] == pid_by_mode[mode]
+                    and (ev.get("args") or {}).get("bucket") == small_edge]
+            trace_p95 = nearest_rank(durs, 0.95)
+            if not np.isclose(trace_p95, results[mode]["p95"], rtol=1e-9,
+                              atol=0.0):
+                failures += 1
+                print_fn(f"FAIL: {mode} trace ttft p95 {trace_p95:.6e}s "
+                         f"!= metrics p95 {results[mode]['p95']:.6e}s")
+        print_fn(f"# trace written to {trace_out} ({len(tracer.events)} "
+                 f"events; per-arm trace p95 TTFT matches ServeMetrics)")
 
     # 1. tail TTFT of small requests: chunked beats unchunked, packed is
     # no worse than one-chunk-per-step. The chunked-vs-unchunked win is
@@ -378,9 +420,15 @@ def main():
     ap.add_argument("--hist-out", default=None,
                     help="write the packed arm's chunks-per-step histogram "
                          "to this JSON path (the CI artifact)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a deterministic (virtual-clock) lifecycle "
+                         "trace of all three arms to this path — one "
+                         "Perfetto process per arm; the bench asserts the "
+                         "trace reproduces its reported p95 TTFTs")
     args = ap.parse_args()
     sys.exit(1 if run(smoke=args.smoke, plans_path=args.plans,
-                      trace_family=args.trace, hist_out=args.hist_out)
+                      trace_family=args.trace, hist_out=args.hist_out,
+                      trace_out=args.trace_out)
              else 0)
 
 

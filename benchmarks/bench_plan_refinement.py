@@ -207,7 +207,7 @@ class TruthPricer:
 
 def make_fleet(plan, cfg, params, policy, slots: int, max_len: int,
                clock: VirtualClock, shadow_fraction: float = 0.0,
-               shadow_measure=None, refiner=None):
+               shadow_measure=None, refiner=None, tracer=None):
     from repro.core import HARDWARE_REGISTRY
     from repro.serve import FleetRouter, ServeEngine, ShapeBucketScheduler
 
@@ -217,10 +217,11 @@ def make_fleet(plan, cfg, params, policy, slots: int, max_len: int,
             cfg, params, max_len=max_len, slots=slots, plans=plan,
             hardware=hw, scheduler=ShapeBucketScheduler(policy),
             clock=clock, shadow_fraction=shadow_fraction,
-            shadow_measure=shadow_measure, refiner=refiner)
+            shadow_measure=shadow_measure, refiner=refiner,
+            tracer=tracer, instance=name)
         for name in ("v5e-a", "v5e-b")
     }
-    return FleetRouter(engines, policy)
+    return FleetRouter(engines, policy, tracer=tracer)
 
 
 def drive_fleet(router, clock: VirtualClock, pricer: TruthPricer, trace,
@@ -353,7 +354,7 @@ def sabotage_plan(refined, truth, cfg, small_edge: int):
 
 def run(smoke: bool = False, plans_path: Optional[str] = None,
         refined_out: Optional[str] = None, drift_out: Optional[str] = None,
-        print_fn=print) -> int:
+        trace_out: Optional[str] = None, print_fn=print) -> int:
     import jax
 
     from repro import configs, kernels
@@ -389,8 +390,16 @@ def run(smoke: bool = False, plans_path: Optional[str] = None,
         return BucketPolicy(edges, max_queue=len(trace) + 16)
 
     # -- phase 1: shadow measurement on the wrongly-planned live fleet -----
+    # The main trace records the whole closed loop on the live fleet's
+    # virtual clock: transfer-sourced resolutions, every shadow sample,
+    # the refine decisions, and both roll_plans passes (kept + reverted).
     refiner = PlanRefiner(min_samples=MIN_SAMPLES)
     clock = VirtualClock()
+    tracer = None
+    if trace_out:
+        from repro.obs import Tracer
+
+        tracer = Tracer(clock=clock)
     with warnings.catch_warnings(record=True) as caught:
         warnings.simplefilter("always")
         fleet = make_fleet(
@@ -398,7 +407,7 @@ def run(smoke: bool = False, plans_path: Optional[str] = None,
             shadow_fraction=1.0,
             shadow_measure=lambda kernel, problem, dtype, tile: truth(
                 kernel, problem, dtype, tile),
-            refiner=refiner)
+            refiner=refiner, tracer=tracer)
     n_transfer = sum(issubclass(w.category, PlanTransferWarning)
                      for w in caught)
     if not n_transfer:
@@ -426,7 +435,9 @@ def run(smoke: bool = False, plans_path: Optional[str] = None,
                  f"target in {p['max_rounds']} rounds ({ticks}/{needed})")
 
     # -- phase 2: re-rank + provenance round-trip --------------------------
-    refined = refiner.refine(wrong)
+    refined = refiner.refine(
+        wrong, trace=(tracer.attach("refiner", kind="refiner")
+                      if tracer is not None else None))
     report = drift_report(refined)
     print_fn(f"# refined {report['n_refined']} cell(s):")
     for cell in report["cells"]:
@@ -490,14 +501,31 @@ def run(smoke: bool = False, plans_path: Optional[str] = None,
         print_fn("FAIL: fleet is not on the refined artifact after rollout")
 
     # -- phase 4: clean-fleet TTFT comparison (wrong / native / refined) ---
+    # Each arm writes its own deterministic trace file next to --trace-out
+    # ({stem}.{arm}{suffix}); CI diffs the refined arm against the wrong
+    # arm through trace_report, which must flag the TTFT regression.
     results = {}
+    arm_traces = {}
     for arm, plan in (("wrong", wrong), ("native", native),
                       ("refined", refined)):
         clock_a = VirtualClock()
+        tracer_a = None
+        if trace_out:
+            from repro.obs import Tracer
+
+            tracer_a = Tracer(clock=clock_a)
         fleet_a = make_fleet(plan, cfg, params, policy(), slots, max_len,
-                             clock_a)
+                             clock_a, tracer=tracer_a)
         placed = drive_fleet(fleet_a, clock_a, pricer, trace, new_tokens,
                              p["arrivals_per_step"])
+        if tracer_a is not None:
+            import os
+
+            from repro.obs import write_trace
+
+            stem, suffix = os.path.splitext(trace_out)
+            arm_traces[arm] = f"{stem}.{arm}{suffix or '.json'}"
+            write_trace(tracer_a, arm_traces[arm])
         results[arm] = dict(
             p95=small_p95(fleet_a, small_edge),
             tokens=fleet_tokens(fleet_a, placed),
@@ -539,6 +567,15 @@ def run(smoke: bool = False, plans_path: Optional[str] = None,
         print_fn("FAIL: fleet did not revert to the refined artifact "
                  "after the sabotaged roll")
 
+    if tracer is not None:
+        from repro.obs import write_trace
+
+        write_trace(tracer, trace_out)
+        print_fn(f"# trace written to {trace_out} "
+                 f"({len(tracer.events)} events); per-arm traces: "
+                 + ", ".join(f"{a}={arm_traces[a]}" for a in
+                             sorted(arm_traces)))
+
     print_fn("PASS" if not failures else f"{failures} FAILURES")
     return failures
 
@@ -555,10 +592,15 @@ def main():
     ap.add_argument("--drift-out", default=None,
                     help="write the incumbent-vs-refined drift report "
                          "(JSON) here — the CI plan-drift artifact")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the live fleet's closed-loop trace here, "
+                         "plus one clean-arm trace per phase-4 arm at "
+                         "{stem}.{wrong|native|refined}{suffix} — CI diffs "
+                         "refined vs wrong through trace_report")
     args = ap.parse_args()
     sys.exit(1 if run(smoke=args.smoke, plans_path=args.plans,
                       refined_out=args.refined_out,
-                      drift_out=args.drift_out)
+                      drift_out=args.drift_out, trace_out=args.trace_out)
              else 0)
 
 

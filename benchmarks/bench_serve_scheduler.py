@@ -101,7 +101,7 @@ def drive_open_loop(submit, step, trace, new_tokens: int,
 
 
 def run(smoke: bool = False, plans_path=None, trace_family=None,
-        print_fn=print) -> int:
+        trace_out=None, print_fn=print) -> int:
     import jax
 
     from repro import configs, kernels
@@ -133,6 +133,12 @@ def run(smoke: bool = False, plans_path=None, trace_family=None,
     print_fn(f"# plan: {len(plan)} cells, hardware={plan.hardware_names()}, "
              f"buckets={list(edges)}, trace={len(trace)} requests")
 
+    tracer = None
+    if trace_out:
+        from repro.obs import Tracer
+
+        tracer = Tracer()  # wall clock, same as drive_open_loop's timing
+
     failures = 0
     hit_rates: Dict[Tuple[str, str], float] = {}
     print_fn("scheduler,hardware,requests,tokens,wall_s,tok_per_s,"
@@ -146,7 +152,9 @@ def run(smoke: bool = False, plans_path=None, trace_family=None,
                 scheduler = ShapeBucketScheduler(
                     BucketPolicy(edges, max_queue=len(trace) + 1))
             eng = ServeEngine(cfg, params, max_len=max_len, slots=slots,
-                              plans=plan, hardware=hw, scheduler=scheduler)
+                              plans=plan, hardware=hw, scheduler=scheduler,
+                              tracer=tracer,
+                              instance=f"{sched_name}/{hw_name}")
             dres = eng.tile_resolutions.get("flash_decode")
             if (dres is None
                     or dres.source not in ("exact", "nearest_shape")):
@@ -184,10 +192,11 @@ def run(smoke: bool = False, plans_path=None, trace_family=None,
         hw_name: ServeEngine(
             cfg, params, max_len=max_len, slots=slots, plans=plan,
             hardware=HARDWARE_REGISTRY[hw_name],
-            scheduler=ShapeBucketScheduler(policy))
+            scheduler=ShapeBucketScheduler(policy),
+            tracer=tracer, instance=f"fleet/{hw_name}")
         for hw_name in HARDWARE
     }
-    router = FleetRouter(engines, policy)
+    router = FleetRouter(engines, policy, tracer=tracer)
 
     table = router.placement_table(new_tokens)
     print_fn(f"# fleet placement table (pure cost, {new_tokens} new tokens): "
@@ -224,6 +233,13 @@ def run(smoke: bool = False, plans_path=None, trace_family=None,
     print_fn(f"# fleet run: {done} requests, {toks} tokens in {wall:.2f}s; "
              f"placements={ {str(b): v for b, v in sorted(router.placements().items())} }")
 
+    if tracer is not None:
+        from repro.obs import write_trace
+
+        write_trace(tracer, trace_out)
+        print_fn(f"# trace written to {trace_out} "
+                 f"({len(tracer.events)} events)")
+
     print_fn("PASS" if not failures else f"{failures} FAILURES")
     return failures
 
@@ -239,9 +255,13 @@ def main():
                     help="replace the default banded trace with a "
                          "seed-pinned family from benchmarks/traces.py "
                          "(shared with the packing conformance suite)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a wall-clock lifecycle/plan-audit trace of "
+                         "every arm (and the fleet run) to this path")
     args = ap.parse_args()
     sys.exit(1 if run(smoke=args.smoke, plans_path=args.plans,
-                      trace_family=args.trace) else 0)
+                      trace_family=args.trace, trace_out=args.trace_out)
+             else 0)
 
 
 if __name__ == "__main__":

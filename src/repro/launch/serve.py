@@ -36,6 +36,12 @@ shared :class:`~repro.serve.refine.PlanRefiner` re-ranks confidently-better
 cells at exit, the refined artifact is written to ``--refine-out``, and the
 deployment rolls onto it (one instance at a time through the fleet router's
 rollback guard).
+
+``--trace-out trace.json`` records the full request lifecycle (submit ->
+admit/reject -> prefill chunks -> first token -> decode -> finish), every
+plan-resolution audit record, and shadow/rollout decisions through
+``repro.obs``; the file loads in Perfetto (ui.perfetto.dev) and feeds
+``python -m repro.launch.trace_report`` for waterfalls and regression diffs.
 """
 from __future__ import annotations
 
@@ -121,6 +127,10 @@ def main():
                          "--refine; default: print the drift summary only)")
     ap.add_argument("--metrics-json", action="store_true",
                     help="dump full metrics as JSON instead of the summary")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a request-lifecycle / plan-audit trace here "
+                         "(.jsonl for JSONL, else Chrome/Perfetto JSON; "
+                         "inspect with python -m repro.launch.trace_report)")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO,
@@ -138,6 +148,12 @@ def main():
         from repro.serve import PlanRefiner
 
         refiner = PlanRefiner()
+
+    tracer = None
+    if args.trace_out:
+        from repro.obs import Tracer
+
+        tracer = Tracer()  # wall clock, same as the launcher's timing
 
     fleet_names = [h for h in args.fleet.split(",") if h]
     policy = None
@@ -159,14 +175,15 @@ def main():
             prefill_slots=args.prefill_slots,
             pack_prefill=args.pack_prefill,
             shadow_fraction=args.shadow_fraction if args.refine else 0.0,
-            refiner=refiner)
+            refiner=refiner, tracer=tracer, instance=hw_name)
 
     router = None
     if fleet_names:
         if args.scheduler != "bucket":
             raise SystemExit("--fleet requires --scheduler bucket "
                              "(routing is per shape bucket)")
-        router = FleetRouter({h: make_engine(h) for h in fleet_names}, policy)
+        router = FleetRouter({h: make_engine(h) for h in fleet_names}, policy,
+                             tracer=tracer)
     else:
         engine = make_engine(args.hardware)
 
@@ -204,7 +221,9 @@ def main():
     if refiner is not None:
         from repro.serve import drift_report
 
-        refined = refiner.refine(plans)
+        refine_trace = (tracer.attach("refiner", kind="refiner")
+                        if tracer is not None else None)
+        refined = refiner.refine(plans, trace=refine_trace)
         report = drift_report(refined)
         print(f"refined {report['n_refined']} cell(s) from "
               f"{report['shadow_samples']} shadow sample(s)")
@@ -225,6 +244,17 @@ def main():
         else:
             engine.set_plans(refined)
             print("engine rolled onto the refined artifact")
+
+    if tracer is not None:
+        from repro.obs import write_jsonl, write_trace
+
+        if args.trace_out.endswith(".jsonl"):
+            write_jsonl(tracer, args.trace_out)
+        else:
+            write_trace(tracer, args.trace_out)
+        print(f"trace -> {args.trace_out} "
+              f"({len(tracer.events)} events; open in ui.perfetto.dev or "
+              f"run python -m repro.launch.trace_report {args.trace_out})")
 
     if args.metrics_json:
         print(json.dumps(metrics, indent=1, sort_keys=True, default=str))

@@ -52,6 +52,13 @@ length) and threaded into the model's kernel call sites. Cells the plan
 cannot resolve fall back to the zero-cost heuristic default tile, never to
 a sweep. Every resolution is counted in ``self.metrics`` (plan hit /
 transfer / fallback counters, TTFT/TPOT, queue depth).
+
+Tracing: pass ``tracer=`` (a :class:`repro.obs.trace.Tracer`) and the
+engine records the full causal timeline on its injected clock — request
+lifecycle (submit → admit/reject → chunks with pack membership and queue
+age → first token → decode → finish), per-step spans, and plan-resolution
+audit instants. With no tracer (the default) every site short-circuits on
+``self._trace is None``: zero allocations, zero calls.
 """
 from __future__ import annotations
 
@@ -67,7 +74,8 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.hardware import PRODUCTION_TARGET, HardwareModel
-from repro.core.plans import PlanResolution, PlanTransferWarning, TilePlan
+from repro.core.plans import (PLAN_SCHEMA_VERSION, PlanResolution,
+                              PlanTransferWarning, TilePlan, problem_key)
 from repro.core.tiling import TileShape
 from repro.models import api
 from repro.models import attention as attn_mod
@@ -123,7 +131,9 @@ class ServeEngine:
                  pack_prefill: bool = False,
                  shadow_fraction: float = 0.0,
                  shadow_measure=None,
-                 refiner=None):
+                 refiner=None,
+                 tracer=None,
+                 instance: Optional[str] = None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -134,6 +144,18 @@ class ServeEngine:
         self.scheduler = scheduler or FifoScheduler()
         self.metrics = metrics or ServeMetrics(clock=clock)
         self._clock = clock
+        # Request-lifecycle / plan-audit tracing (repro.obs.trace). None by
+        # default and every call site is guarded with
+        # ``if self._trace is not None`` — disabled tracing adds zero
+        # object construction and zero calls on the step hot path.
+        self._trace = None
+        self._plan_schema: Optional[int] = None
+        if tracer is not None:
+            self._trace = tracer.attach(instance or "engine", kind="engine",
+                                        hardware=self.hardware.name)
+            bind = getattr(self.scheduler, "bind_trace", None)
+            if bind is not None:
+                bind(self._trace)
         # Chunked-prefill configuration. ``step_token_budget`` bounds one
         # mixed step's tokens (decode batch + one prefill chunk); 0 = no
         # bound, the plan's chunk length runs unclamped. ``prefill_slots``
@@ -255,15 +277,35 @@ class ServeEngine:
         """Resolve decode-path kernel tiles from the plan store. No sweeps."""
         from repro.launch.specs import kernel_problems, resolve_model_tiles
 
+        self._plan_schema = int(plans.meta.get(
+            "schema_version", PLAN_SCHEMA_VERSION))
         self.tiles, self.tile_resolutions = resolve_model_tiles(
             plans, self.cfg, self.slots, self.max_len, "decode",
             jnp.dtype(self.dtype).name, self.hardware)
+        problems = kernel_problems(self.cfg, self.slots, self.max_len,
+                                   "decode")
         for kernel in self.tiles:
             res = self.tile_resolutions.get(kernel)
-            self.metrics.record_plan(
-                "decode", kernel, res.source if res else "fallback")
-        self._note_shadow_cells(
-            kernel_problems(self.cfg, self.slots, self.max_len, "decode"))
+            source = res.source if res else "fallback"
+            self.metrics.record_plan("decode", kernel, source)
+            if self._trace is not None:
+                self._trace.plan_resolve(
+                    "decode", kernel, problem_key(problems.get(kernel, {})),
+                    tuple(self.tiles[kernel].dims), source,
+                    self._plan_schema)
+        self._note_shadow_cells(problems)
+
+    def _trace_plan_table(self, phase: str, tiles, sources, problems) -> None:
+        """Emit one ``plan_resolve`` audit instant per kernel: which tile
+        each launch resolved to, from which source, under which artifact
+        schema. Call sites fire once per resolution (per length / geometry),
+        mirroring when the plan store was actually consulted."""
+        for kernel in sorted(sources):
+            tile = tiles.get(kernel)
+            self._trace.plan_resolve(
+                phase, kernel, problem_key(problems.get(kernel) or {}),
+                tuple(tile.dims) if tile is not None else (),
+                sources[kernel], self._plan_schema)
 
     # -- live plan refinement ------------------------------------------------
     def _note_shadow_cells(self, problems: Dict[str, Dict[str, int]]) -> None:
@@ -346,6 +388,9 @@ class ServeEngine:
             dt_cand = float(measure(kernel, problem, dtype, cand))
             self.metrics.record_shadow(kernel, inc, dt_inc, incumbent=True)
             self.metrics.record_shadow(kernel, cand, dt_cand)
+            if self._trace is not None:
+                self._trace.shadow(kernel, problem_key(problem), inc, cand,
+                                   dt_inc, dt_cand)
             if self.refiner is not None:
                 self.refiner.observe(kernel, problem, dtype,
                                      self.hardware.name, inc, dt_inc,
@@ -379,6 +424,7 @@ class ServeEngine:
         self._decode_tile_events = None
         self._shadow_views.clear()
         self.tiles, self.tile_resolutions = {}, {}
+        self._plan_schema = None
         if plans is not None:
             self._resolve_tiles(plans)
         cfg = self.cfg
@@ -386,6 +432,10 @@ class ServeEngine:
             lambda p, tok, st: api.decode_step(p, cfg, tok, st,
                                                tiles=self.tiles or None)
         )
+        if self._trace is not None:
+            refined_from = (plans.meta.get("refined_from")
+                            if plans is not None else None)
+            self._trace.plan_swap(self._plan_schema, refined_from)
 
     def _prefill_fn(self, length: int):
         """The jitted prefill program for one admitted prompt length.
@@ -429,6 +479,12 @@ class ServeEngine:
         )
         self._prefill_fns[length] = fn
         self._prefill_sources[length] = sources
+        if self._trace is not None:
+            from repro.launch.specs import kernel_problems
+
+            self._trace_plan_table(
+                "prefill", tiles, sources,
+                kernel_problems(self.cfg, 1, length, "prefill"))
         if self.plans is not None:
             from repro.launch.specs import kernel_problems
 
@@ -529,6 +585,13 @@ class ServeEngine:
             sources["chunked_prefill"] = source
         entry = (chunk, tiles, sources)
         self._chunk_plans[admit_len] = entry
+        if self._trace is not None:
+            from repro.launch.specs import kernel_problems
+
+            probs = dict(kernel_problems(self.cfg, 1, chunk, "prefill"))
+            if problem is not None:
+                probs["chunked_prefill"] = problem
+            self._trace_plan_table("prefill", tiles, sources, probs)
         if self.plans is not None:
             from repro.launch.specs import kernel_problems
 
@@ -593,6 +656,10 @@ class ServeEngine:
         if tile is not None:
             tiles["packed_prefill"] = tile
         self._pack_plan_cache = (width, tiles, source)
+        if self._trace is not None and problem is not None:
+            self._trace_plan_table(
+                "prefill", tiles, {"packed_prefill": source},
+                {"packed_prefill": problem})
         if self.plans is not None and problem is not None:
             self._note_shadow_cells({"packed_prefill": problem})
         return self._pack_plan_cache
@@ -636,7 +703,8 @@ class ServeEngine:
                 ring_local=bool(self.cfg.attn_window))
 
     def _advance_job(self, job: _ChunkJob, take: int, events, logits,
-                     packed: bool = False) -> None:
+                     packed: bool = False, pack_n: int = 1, lane: int = 0,
+                     t0: Optional[float] = None) -> None:
         """Per-chunk bookkeeping shared by the one-chunk and packed paths:
         tile events accrue, chunk telemetry ticks, progress advances, and a
         completed prefill leaves the chunking set. One implementation on
@@ -644,7 +712,11 @@ class ServeEngine:
         conformance suite pins their observable equality)."""
         job.events.extend(events)
         now = self._clock()
-        self.metrics.record_chunk(job.req.bucket, now - job.last_t)
+        age = now - job.last_t
+        self.metrics.record_chunk(job.req.bucket, age)
+        if self._trace is not None:
+            self._trace.chunk(job.req.rid, lane, now if t0 is None else t0,
+                              job.done, take, pack_n, age)
         job.last_t = now
         job.done += take
         job.chunks_run += 1
@@ -658,6 +730,7 @@ class ServeEngine:
         returns the pack's total token count."""
         jobs = [job for job, _ in picks]
         layout = tuple((job.done, take) for job, take in picks)
+        t0 = self._clock() if self._trace is not None else None
         for job in jobs:
             self._ensure_state(job)
         toks = jnp.asarray(np.concatenate([
@@ -678,7 +751,7 @@ class ServeEngine:
         for i, (job, (start, take)) in enumerate(zip(jobs, layout)):
             job.state = new_states[i]
             self._advance_job(job, take, events, logits[i][None],
-                              packed=True)
+                              packed=True, pack_n=len(jobs), lane=i, t0=t0)
         return sum(take for _, take in layout)
 
     def _is_multi_chunk(self, req: Request) -> bool:
@@ -756,6 +829,11 @@ class ServeEngine:
             chunk_len, _, _ = self._chunk_plan(len(prompt))
             long_in_flight = long_in_flight or len(prompt) > chunk_len
             submit_t = self.metrics.submit_time(req.rid)
+            if self._trace is not None:
+                now = self._clock()
+                self._trace.admit(
+                    req.rid, len(prompt),
+                    now - submit_t if submit_t is not None else 0.0)
             self._chunking.append(_ChunkJob(
                 req=req, prompt=prompt, chunk_len=chunk_len,
                 last_t=submit_t if submit_t is not None else self._clock()))
@@ -788,6 +866,7 @@ class ServeEngine:
         """Advance one job by one chunk; returns the chunk's token count."""
         start = job.done
         length = min(job.chunk_len, len(job.prompt) - start)
+        t0 = self._clock() if self._trace is not None else None
         self._ensure_state(job)
         fn = self._chunk_fn(len(job.prompt), start)
         toks = jnp.asarray(job.prompt[None, start:start + length])
@@ -801,7 +880,7 @@ class ServeEngine:
             self._chunk_tile_events[key] = events
         else:
             logits, job.state = fn(self.params, toks, job.state)
-        self._advance_job(job, length, events, logits)
+        self._advance_job(job, length, events, logits, t0=t0)
         return length
 
     def _finish_prefill(self, job: _ChunkJob, logits) -> None:
@@ -824,11 +903,19 @@ class ServeEngine:
         self.metrics.record_prefill_chunks(job.chunks_run)
         tok = int(jnp.argmax(logits[0, :self.cfg.vocab_size]))
         req.out_tokens.append(tok)
+        # Submit time must be read BEFORE record_first_token pops it: the
+        # ttft trace span is anchored at submit, exactly like the metric.
+        sub_t = (self.metrics.submit_time(req.rid)
+                 if self._trace is not None else None)
         self.metrics.record_first_token(req.rid, req.bucket)
+        if self._trace is not None:
+            self._trace.first_token(req.rid, req.bucket, sub_t)
         if len(req.out_tokens) >= req.max_new_tokens:
             req.done = True
             self._finished.append(req)
             self.metrics.record_complete()
+            if self._trace is not None:
+                self._trace.finish(req.rid, len(req.out_tokens))
         else:
             self._ready.append((req, job.state))
 
@@ -841,25 +928,44 @@ class ServeEngine:
         prompt = np.asarray(prompt, np.int32)
         shaped = self.scheduler.admit_length(len(prompt))
         if shaped is None:
-            self.metrics.record_reject(reason="over_length")
-            return None
+            return self._reject("over_length", len(prompt))
         # Decode writes KV at positions shaped..shaped+max_new-2 (the last
         # sampled token is never cached); past max_len the update would
         # silently clamp onto the final slot and corrupt attention.
         if shaped + max_new_tokens - 1 > self.max_len:
-            self.metrics.record_reject(reason="cache_overflow")
-            return None
+            return self._reject("cache_overflow", len(prompt))
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid, prompt, max_new_tokens,
                       priority=priority, deadline=deadline)
         if not self.scheduler.submit(req):
-            self.metrics.record_reject(
-                reason=getattr(self.scheduler, "last_reject_reason",
-                               "admission"))
-            return None
+            return self._reject(
+                getattr(self.scheduler, "last_reject_reason", "admission"),
+                len(prompt))
         self.metrics.record_submit(rid)
+        self._record_backlog(self.scheduler.pending() + len(self._held))
+        if self._trace is not None:
+            self._trace.submit(rid, len(prompt), req.bucket)
         return rid
+
+    def _reject(self, reason: str, prompt_len: int) -> None:
+        """Account one admission rejection: reason counter, backlog sample
+        (a rejected submit is exactly when backlog pressure peaked), and a
+        trace instant carrying the reason."""
+        self.metrics.record_reject(reason=reason)
+        self._record_backlog(self.scheduler.pending() + len(self._held))
+        if self._trace is not None:
+            self._trace.reject(reason, prompt_len)
+        return None
+
+    def _record_backlog(self, depth: int) -> None:
+        """Sample queue depth into metrics (and the trace counter track).
+        Called at every step AND at every admit/reject: backlog accrued
+        while the engine sits idle between steps was previously invisible
+        to the step-only sampling."""
+        self.metrics.record_queue_depth(depth)
+        if self._trace is not None:
+            self._trace.queue_depth(depth)
 
     def _admit(self):
         """Admit into free slots, running each whole prefill. Returns
@@ -878,6 +984,9 @@ class ServeEngine:
             prefill = self._prefill_fn(len(prompt))
             for kernel, source in self._prefill_sources[len(prompt)].items():
                 self.metrics.record_plan("prefill", kernel, source)
+            sub_t = (self.metrics.submit_time(req.rid)
+                     if self._trace is not None else None)
+            t0 = self._clock() if self._trace is not None else None
             batch = {"tokens": jnp.asarray(prompt[None])}
             events = self._prefill_tile_events.get(len(prompt))
             if events is None:
@@ -893,6 +1002,12 @@ class ServeEngine:
             tok = int(jnp.argmax(logits[0, :self.cfg.vocab_size]))
             req.out_tokens.append(tok)
             self.metrics.record_first_token(req.rid, req.bucket)
+            if self._trace is not None:
+                self._trace.admit(
+                    req.rid, len(prompt),
+                    t0 - sub_t if sub_t is not None else 0.0)
+                self._trace.prefill(req.rid, t0, len(prompt))
+                self._trace.first_token(req.rid, req.bucket, sub_t)
             if len(req.out_tokens) >= req.max_new_tokens:
                 # Satisfied by the prefill token alone — never occupy a
                 # slot or run a decode step (which would also write KV one
@@ -900,6 +1015,8 @@ class ServeEngine:
                 req.done = True
                 self._finished.append(req)
                 self.metrics.record_complete()
+                if self._trace is not None:
+                    self._trace.finish(req.rid, len(req.out_tokens))
                 continue
             i = free.pop(0)
             self._active[i] = req
@@ -910,12 +1027,15 @@ class ServeEngine:
         """One decode step for every active slot. Returns #active."""
         n = 0
         active_buckets = []
+        trace_rids = [] if self._trace is not None else None
         t0 = self._clock()
         for i, req in enumerate(self._active):
             if req is None:
                 continue
             n += 1
             active_buckets.append(req.bucket)
+            if trace_rids is not None:
+                trace_rids.append(req.rid)
             last = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
             if self._decode_tile_events is None:
                 captured: List[Dict[str, Any]] = []
@@ -936,7 +1056,11 @@ class ServeEngine:
                 self._states[i] = None
                 self._finished.append(req)
                 self.metrics.record_complete()
+                if self._trace is not None:
+                    self._trace.finish(req.rid, len(req.out_tokens))
         self.metrics.record_decode_step(active_buckets, self._clock() - t0)
+        if trace_rids is not None and n:
+            self._trace.decode(t0, trace_rids)
         return n
 
     def step(self) -> int:
@@ -950,8 +1074,9 @@ class ServeEngine:
         """
         if self.chunk_prefill:
             return self._step_chunked()
+        t0 = self._clock() if self._trace is not None else 0.0
         prefill_tokens, segments = self._admit()
-        self.metrics.record_queue_depth(self.scheduler.pending())
+        self._record_backlog(self.scheduler.pending())
         n = self._decode_all()
         self.last_step_stats = {"prefill_tokens": prefill_tokens,
                                 "decode_tokens": n,
@@ -959,13 +1084,15 @@ class ServeEngine:
                                 "prefill_segments": segments}
         self._maybe_shadow()
         self.steps_run += 1
+        if self._trace is not None:
+            self._trace.step_mark(t0, self.last_step_stats, self.steps_run)
         return n
 
     def _step_chunked(self) -> int:
+        t0 = self._clock() if self._trace is not None else 0.0
         self._admit_chunked()
         # Held (deferred multi-chunk) requests are still backlog.
-        self.metrics.record_queue_depth(
-            self.scheduler.pending() + len(self._held))
+        self._record_backlog(self.scheduler.pending() + len(self._held))
         prefill_tokens = 0
         packed_rids: tuple = ()
         segments: tuple = ()
@@ -1002,6 +1129,8 @@ class ServeEngine:
                                 "prefill_segments": segments}
         self._maybe_shadow()
         self.steps_run += 1
+        if self._trace is not None:
+            self._trace.step_mark(t0, self.last_step_stats, self.steps_run)
         return n + len(self._chunking) + len(self._ready) + len(self._held)
 
     def _next_pack(self):

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from repro.core import registry
 from repro.core.plans import PlanTransferWarning, score_tile
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.metrics import nearest_rank
 from repro.serve.scheduler import BucketPolicy
 
 
@@ -53,17 +54,25 @@ class RollDecision:
     pre_p95: float                    # probe p95 TTFT before the swap (s)
     post_p95: float                   # probe p95 TTFT after the swap (s)
     rolled_back: bool
+    # True when either probe window outgrew the metrics' circular sample
+    # buffer: the window silently misses samples, so the guard treated it
+    # as thin (no confident keep/revert) rather than reading it.
+    clipped: bool = False
 
 
 class FleetRouter:
     """Route requests across per-hardware engines by plan-resolved cost."""
 
     def __init__(self, engines: Mapping[str, ServeEngine],
-                 policy: BucketPolicy):
+                 policy: BucketPolicy, tracer=None):
         if not engines:
             raise ValueError("FleetRouter needs at least one engine")
         self.engines: Dict[str, ServeEngine] = dict(engines)
         self.policy = policy
+        # Fleet-level trace process (repro.obs.trace): routing and plan-
+        # rollout decisions as instants. None = tracing off, zero cost.
+        self._trace = (tracer.attach("router", kind="router")
+                       if tracer is not None else None)
         self.decisions: List[RouteDecision] = []
         # Router-level rejections (no engine was ever asked): reason -> n.
         self.rejects: Dict[str, int] = {}
@@ -200,6 +209,8 @@ class FleetRouter:
         bucket, reason = self.policy.admit(len(prompt))
         if bucket is None:
             self.rejects[reason] = self.rejects.get(reason, 0) + 1
+            if self._trace is not None:
+                self._trace.route_reject(reason)
             return None
         scores = tuple(sorted(
             (name,
@@ -216,6 +227,8 @@ class FleetRouter:
             rid=rid, instance=name, bucket=bucket,
             score=dict(scores)[name], scores=scores)
         self.decisions.append(decision)
+        if self._trace is not None:
+            self._trace.route(rid, name, bucket, decision.score)
         return decision
 
     def placements(self) -> Dict[int, Dict[str, int]]:
@@ -257,6 +270,10 @@ class FleetRouter:
         ``tolerance`` x the pre-swap p95 (both windows holding at least
         ``min_window`` first-token samples — a thin window must never
         trigger a revert), the instance rolls back to its old artifact.
+        A window that outgrew the metrics' circular sample buffer
+        (``ttft_window`` reports it ``clipped``) silently misses samples
+        and is treated exactly like a thin one: no confident keep/revert,
+        the swap stands unguarded and the decision is marked ``clipped``.
         Either way the outcome lands in ``self.roll_history`` and the
         per-instance cost cache is invalidated (costs are a function of the
         plan). Without a ``drive_fn`` the swap is unguarded — every
@@ -266,21 +283,24 @@ class FleetRouter:
         for name in sorted(self.engines):
             eng = self.engines[name]
             old = eng.plans
-            pre_p95, n_pre = 0.0, 0
+            pre_p95, n_pre, pre_clip = 0.0, 0, False
             if drive_fn is not None:
                 mark = eng.metrics.ttft_counts()
                 drive_fn(name)
-                pre_p95 = eng.metrics.ttft_p95(mark)
-                n_pre = len(eng.metrics.ttft_since(mark))
+                samples, pre_clip = eng.metrics.ttft_window(mark)
+                pre_p95 = nearest_rank(samples, 0.95)
+                n_pre = len(samples)
             mark = eng.metrics.ttft_counts()
             eng.set_plans(artifact)
             self._cell_cost.clear()
-            post_p95, n_post = 0.0, 0
+            post_p95, n_post, post_clip = 0.0, 0, False
             if drive_fn is not None:
                 drive_fn(name)
-                post_p95 = eng.metrics.ttft_p95(mark)
-                n_post = len(eng.metrics.ttft_since(mark))
-            rolled_back = (drive_fn is not None
+                samples, post_clip = eng.metrics.ttft_window(mark)
+                post_p95 = nearest_rank(samples, 0.95)
+                n_post = len(samples)
+            clipped = pre_clip or post_clip
+            rolled_back = (drive_fn is not None and not clipped
                            and n_pre >= min_window and n_post >= min_window
                            and pre_p95 > 0.0
                            and post_p95 > tolerance * pre_p95)
@@ -289,9 +309,13 @@ class FleetRouter:
                 self._cell_cost.clear()
             decision = RollDecision(instance=name, pre_p95=pre_p95,
                                     post_p95=post_p95,
-                                    rolled_back=rolled_back)
+                                    rolled_back=rolled_back,
+                                    clipped=clipped)
             self.roll_history.append(decision)
             decisions.append(decision)
+            if self._trace is not None:
+                self._trace.roll(name, pre_p95, post_p95, rolled_back,
+                                 clipped)
         return decisions
 
     def metrics(self) -> Dict[str, dict]:

@@ -15,7 +15,9 @@ Measured quantities follow serving convention:
   p50/p95/p99 — tail latency is what head-of-line blocking moves.
 * **TPOT** (time per output token): decode-step wall time divided by the
   number of active slots, attributed to each active request's bucket.
-* **Queue depth**: scheduler backlog sampled at every engine step.
+* **Queue depth**: scheduler backlog sampled at every engine step AND at
+  every admit/reject, so backlog accrued while an engine sits idle between
+  steps is visible instead of silently missing.
 * **Plan counters**: how each kernel-tile lookup was satisfied — ``exact``,
   ``nearest_shape``, ``cross_hardware`` (the paper's transferred-optimum
   case), ``fallback`` (heuristic default), or ``no_plan`` — split by phase
@@ -31,8 +33,18 @@ Measured quantities follow serving convention:
   stats for the candidate tiles the engine measures on diverted steps (see
   ``repro.serve.refine``) next to the incumbent's, so the telemetry export
   carries the raw material the :class:`~repro.serve.refine.PlanRefiner`
-  re-ranks from. ``ttft_counts``/``ttft_p95`` support windowed p95 reads
-  (samples since a marked count), the rollback guard's regression signal.
+  re-ranks from. ``ttft_counts``/``ttft_window``/``ttft_p95`` support
+  windowed p95 reads (samples since a marked count), the rollback guard's
+  regression signal; a window wider than the retained circular buffer is
+  flagged ``clipped`` so guards don't act on a corrupted window.
+
+Metrics are aggregates; the causal, per-event record (which requests shared
+a packed step, which plan entry resolved each kernel launch, where a chunk
+sat queued) is the trace layer — see :mod:`repro.obs.trace` and the
+``python -m repro.launch.trace_report`` CLI. ``as_dict()`` output is
+deterministic (sorted keys, stable nesting) and stamped with
+``metrics_schema`` = :data:`METRICS_SCHEMA_VERSION` so golden tests and CI
+artifact diffs are ordering-insensitive.
 """
 from __future__ import annotations
 
@@ -40,7 +52,7 @@ import dataclasses
 import math
 import time
 from collections import Counter, defaultdict
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 # Resolution sources, in decreasing order of trustworthiness. "fallback" is
 # the heuristic default tile (plan had nothing usable); "tile_fallback"
@@ -50,6 +62,24 @@ from typing import Callable, Dict, List, Optional
 # constructed without an artifact at all.
 PLAN_SOURCES = ("exact", "nearest_shape", "cross_hardware", "fallback",
                 "tile_fallback", "no_plan")
+
+# Bump on any change to the ``as_dict()`` layout (keys, nesting, units) so
+# downstream consumers of exported metrics artifacts can gate on it.
+METRICS_SCHEMA_VERSION = 1
+
+
+def nearest_rank(xs: List[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 1]) over ``xs`` (0.0 if empty).
+
+    The single percentile definition shared by ``_LatencyStat``, the
+    windowed TTFT reads, ``FleetRouter.roll_plans`` and the trace-report
+    CLI — one formula, so a trace's span durations reproduce the metrics'
+    percentiles exactly.
+    """
+    if not xs:
+        return 0.0
+    ordered = sorted(xs)
+    return ordered[max(0, math.ceil(q * len(ordered)) - 1)]
 
 
 @dataclasses.dataclass
@@ -81,11 +111,7 @@ class _LatencyStat:
 
     def percentile(self, q: float) -> float:
         """Nearest-rank percentile over the recorded samples (0 if none)."""
-        if not self.samples:
-            return 0.0
-        ordered = sorted(self.samples)
-        rank = max(0, math.ceil(q / 100.0 * len(ordered)) - 1)
-        return ordered[rank]
+        return nearest_rank(self.samples, q / 100.0)
 
     def recent(self, n: int) -> List[float]:
         """The newest ``n`` samples, oldest first (bounded by the window)."""
@@ -212,23 +238,38 @@ class ServeMetrics:
         """Per-bucket TTFT sample counts — a mark for windowed reads."""
         return {b: s.count for b, s in self.ttft.items()}
 
+    def ttft_window(self, marks: Optional[Dict[object, int]] = None
+                    ) -> "Tuple[List[float], bool]":
+        """(samples recorded after ``marks``, clipped) — every bucket pooled.
+
+        ``clipped`` is True when any bucket's window is wider than its
+        retained circular buffer (``_LatencyStat.sample_cap``): the buffer
+        overwrote samples inside the window, so the returned list silently
+        misses observations. Guards (``FleetRouter.roll_plans``) must treat
+        a clipped window as inconclusive rather than reading it as a
+        faithful record. With no marks the window is the whole run, so
+        clipping means "the run outgrew the buffer".
+        """
+        out: List[float] = []
+        clipped = False
+        for b, s in self.ttft.items():
+            n_new = s.count - (marks.get(b, 0) if marks else 0)
+            if n_new > len(s.samples):
+                clipped = True
+            out.extend(s.recent(n_new))
+        return out, clipped
+
     def ttft_since(self, marks: Optional[Dict[object, int]] = None
                    ) -> List[float]:
         """All TTFT samples recorded after ``marks`` (every bucket pooled);
         with no marks, every retained sample. Bounded by the per-bucket
-        sliding sample window."""
-        out: List[float] = []
-        for b, s in self.ttft.items():
-            n_new = s.count - (marks.get(b, 0) if marks else 0)
-            out.extend(s.recent(n_new))
-        return out
+        sliding sample window — use :meth:`ttft_window` to learn whether
+        the window was clipped by that bound."""
+        return self.ttft_window(marks)[0]
 
     def ttft_p95(self, marks: Optional[Dict[object, int]] = None) -> float:
         """Nearest-rank p95 over the (windowed) pooled TTFT samples."""
-        xs = sorted(self.ttft_since(marks))
-        if not xs:
-            return 0.0
-        return xs[max(0, math.ceil(0.95 * len(xs)) - 1)]
+        return nearest_rank(self.ttft_since(marks), 0.95)
 
     def record_queue_depth(self, depth: int) -> None:
         self.queue_depth_max = max(self.queue_depth_max, depth)
@@ -267,6 +308,7 @@ class ServeMetrics:
             plan[source] += n
             by_phase[phase][source] += n
         return {
+            "metrics_schema": METRICS_SCHEMA_VERSION,
             "requests": {
                 "submitted": self.submitted,
                 "rejected": self.rejected,
@@ -312,8 +354,11 @@ class ServeMetrics:
                 "hit_rate": self.plan_hit_rate(),
                 "hit_rate_prefill": self.plan_hit_rate("prefill"),
                 "hit_rate_decode": self.plan_hit_rate("decode"),
-                "by_kernel": {k: dict(c) for k, c in sorted(
-                    self.plan_by_kernel.items())},
+                # Inner dicts sorted too: Counter order is insertion order,
+                # which varies with resolution order across runs.
+                "by_kernel": {
+                    k: {s: c[s] for s in sorted(c)}
+                    for k, c in sorted(self.plan_by_kernel.items())},
             },
         }
 

@@ -178,11 +178,16 @@ class PlanRefiner:
         }
 
     # -- re-ranking ----------------------------------------------------------
-    def refine(self, plan: TilePlan) -> TilePlan:
+    def refine(self, plan: TilePlan, trace=None) -> TilePlan:
         """Emit a schema-v3 artifact: the donor plan plus one measured entry
         per confidently re-ranked cell, keyed to the observing hardware so
         post-rollout resolution is exact. The provenance block records what
-        the artifact was refined from and every re-rank decision."""
+        the artifact was refined from and every re-rank decision.
+
+        ``trace`` (a :class:`repro.obs.trace.ProcTrace`, optional) gets one
+        ``refine_cell`` instant per re-ranked cell, so the audit trail shows
+        *when* the fleet's evidence flipped each tile, next to the shadow
+        measurements that justified it."""
         refined = TilePlan(entries=plan.entries(), meta=dict(plan.meta))
         measurements: List[dict] = []
         for key in sorted(self._cells):
@@ -190,6 +195,10 @@ class PlanRefiner:
             decision = self._decide(cell)
             if decision is None:
                 continue
+            if trace is not None:
+                trace.refine_cell(cell.kernel, problem_key(cell.problem),
+                                  decision["incumbent"], decision["tile"],
+                                  decision["speedup"], decision["samples"])
             curve = tuple(sorted(
                 ((dims, s.mean_s) for dims, s in cell.tiles.items()
                  if s.count >= self.min_samples),

@@ -152,6 +152,12 @@ class FifoScheduler:
         self.max_queue = max_queue
         self._queue: deque = deque()
         self.last_reject_reason = "ok"
+        self._trace = None
+
+    def bind_trace(self, trace) -> None:
+        """Attach a per-engine trace handle (repro.obs.trace.ProcTrace):
+        queue push/pop become instant events on the scheduler lane."""
+        self._trace = trace
 
     def admit_length(self, prompt_len: int) -> int:
         """The sequence length a prompt would prefill at (raw — no padding)."""
@@ -163,10 +169,15 @@ class FifoScheduler:
             return False
         req.bucket = len(req.prompt)
         self._queue.append(req)
+        if self._trace is not None:
+            self._trace.queue_push(req.rid, req.bucket)
         return True
 
     def next_request(self):
-        return self._queue.popleft() if self._queue else None
+        req = self._queue.popleft() if self._queue else None
+        if req is not None and self._trace is not None:
+            self._trace.queue_pop(req.rid, req.bucket)
+        return req
 
     def prepare(self, req) -> np.ndarray:
         return req.prompt
@@ -199,6 +210,12 @@ class ShapeBucketScheduler:
         self._queues: Dict[int, List] = {e: [] for e in policy.edges}
         self._seq = 0
         self.last_reject_reason = "ok"
+        self._trace = None
+
+    def bind_trace(self, trace) -> None:
+        """Attach a per-engine trace handle (repro.obs.trace.ProcTrace):
+        queue push/pop become instant events on the scheduler lane."""
+        self._trace = trace
 
     def admit_length(self, prompt_len: int):
         """The padded prefill length (bucket edge, or the overflow multiple
@@ -219,6 +236,8 @@ class ShapeBucketScheduler:
         # Overflow buckets (allow_overflow multiples of the top edge) get
         # their queue lazily — they are not part of the static edge family.
         heapq.heappush(self._queues.setdefault(bucket, []), (key, req))
+        if self._trace is not None:
+            self._trace.queue_push(req.rid, req.bucket)
         return True
 
     def next_request(self):
@@ -240,6 +259,8 @@ class ShapeBucketScheduler:
             return None
         _, bucket = min(heads)
         _, req = heapq.heappop(self._queues[bucket])
+        if self._trace is not None:
+            self._trace.queue_pop(req.rid, req.bucket)
         return req
 
     def prepare(self, req) -> np.ndarray:

@@ -194,6 +194,7 @@ def test_metrics_as_dict_golden():
               "p50_s": 0.5, "p95_s": 0.5, "p99_s": 0.5}
     d = m.as_dict()
     assert d == {
+        "metrics_schema": 1,
         "requests": {"submitted": 1, "rejected": 0, "completed": 0,
                      "tokens_out": 1},
         "rejects": {},
@@ -221,6 +222,19 @@ def test_metrics_as_dict_golden():
         },
     }
     json.dumps(d)   # the export must stay JSON-clean
+    # Determinism: recording order must not leak into the export (sorted
+    # bucket/kernel keys, stable nesting — metrics_schema gates the layout).
+    m2 = ServeMetrics(clock=lambda: 0.0)
+    m2.record_plan("prefill", "matmul", "exact")
+    m2.record_plan("prefill", "flash_attention", "nearest_shape")
+    m2.record_plan("prefill", "matmul", "fallback")
+    m3 = ServeMetrics(clock=lambda: 0.0)
+    m3.record_plan("prefill", "matmul", "fallback")
+    m3.record_plan("prefill", "flash_attention", "nearest_shape")
+    m3.record_plan("prefill", "matmul", "exact")
+    assert json.dumps(m2.as_dict()) == json.dumps(m3.as_dict())
+    assert list(m2.as_dict()["plan"]["by_kernel"]) == ["flash_attention",
+                                                       "matmul"]
 
 
 def test_metrics_ttft_windows():
