@@ -9,7 +9,11 @@ chunk co-scheduled with the decode batch under a per-step token budget —
 and small prefills overtake between chunks. **Step packing** densifies the
 mixed step further: SEVERAL in-flight prefills' chunks ride one launch
 under the plan's per-hardware pack width, so a burst of shorts stops
-serializing one chunk per step.
+serializing one chunk per step. The **paged** arm runs the same packed
+schedule on the fleet-wide paged KV pool (page size from the plan's
+``kv_page`` cell): prefill residency is bounded by pool headroom instead
+of ``prefill_slots``, so under pool pressure it holds strictly more
+concurrent in-flight prefills than the contiguous arms' slot cap.
 
 All arms drive the real ``ServeEngine`` (identical model, plan, trace, and
 greedy outputs) on a **cost-model virtual clock**: after every engine step
@@ -23,13 +27,17 @@ so CI finishes in seconds; the full trace uses the literal 512/32k mix.
 Asserted invariants (exit 1 on violation; CI runs ``--smoke``):
   1. p95 small-request TTFT: chunked < unchunked on the mixed trace, and
      packed no worse than chunked;
-  2. equal work all arms: same completions, same greedy tokens; chunked
-     total virtual time within ``MAX_SLOWDOWN`` of unchunked, and packed
-     total virtual time <= chunked (packing only removes steps);
-  3. the ``chunked_prefill`` plan cell compiles *different chunk lengths*
-     AND the ``packed_prefill`` cell *different pack widths* on tpu_v5e vs
-     tpu_v6e at full dims (the paper's per-hardware-model optimum, applied
-     to the chunk-length and pack-width tile axes);
+  2. equal work all arms (paged included): same completions, same greedy
+     tokens; chunked and paged total virtual time within ``MAX_SLOWDOWN``
+     of unchunked, and packed total virtual time <= chunked (packing only
+     removes steps); the paged pool drains balanced (refcounts to zero),
+     and on ``--trace overflow_heavy`` the paged arm's peak resident
+     prefills strictly exceed ``prefill_slots``;
+  3. the ``chunked_prefill`` plan cell compiles *different chunk lengths*,
+     the ``packed_prefill`` cell *different pack widths*, AND the
+     ``kv_page`` cell *different KV page sizes* on tpu_v5e vs tpu_v6e at
+     full dims (the paper's per-hardware-model optimum, applied to the
+     chunk-length, pack-width, and page-size tile axes);
   4. a prompt longer than every bucket edge is admitted via chunking and
      completes (the overflow-admission fix), instead of being dropped.
 
@@ -39,10 +47,11 @@ FAMILY`` swaps the default head-of-line trace for a seed-pinned
 adversarial family (``all_short`` / ``all_long`` / ``bimodal`` /
 ``overflow_heavy``) — the exact prompts the conformance suite replays.
 ``--hist-out packing_hist.json`` dumps the packed arm's
-chunks-per-step histogram (the CI artifact). ``--trace-out trace.json``
-records all three arms into one deterministic virtual-clock lifecycle
-trace (one Perfetto process per arm, see ``repro.obs``) and asserts the
-trace's per-arm ``ttft`` spans reproduce the reported p95 TTFTs.
+chunks-per-step histogram plus the paged arm's pool counters (the CI
+artifact). ``--trace-out trace.json`` records all four arms into one
+deterministic virtual-clock lifecycle trace (one Perfetto process per
+arm, see ``repro.obs``) and asserts the trace's per-arm ``ttft`` spans
+reproduce the reported p95 TTFTs.
 
 ``--plans plans.json`` reuses a compiled artifact (the CI workflow passes
 the compile-plans job's artifact) instead of recompiling; the bench falls
@@ -158,10 +167,13 @@ def step_cost_model(slots: int, max_len: int):
 
 def drive(engine, clock: VirtualClock, trace, new_tokens: int,
           arrivals_per_step: int, t_pf: float, t_dec: float,
-          max_steps: int = 20000) -> Dict[int, float]:
-    """Open-loop virtual-time drive; returns rid -> submit virtual time."""
+          max_steps: int = 20000) -> Tuple[Dict[int, float], int]:
+    """Open-loop virtual-time drive; returns (rid -> submit virtual time,
+    peak concurrently-resident prefills — the occupancy the paged pool
+    unlocks past ``prefill_slots``)."""
     submit_t: Dict[int, float] = {}
     i = 0
+    peak_resident = 0
     for tick in range(max_steps):
         while i < len(trace) and i < arrivals_per_step * (tick + 1):
             rid = engine.add_request(trace[i], max_new_tokens=new_tokens)
@@ -171,11 +183,12 @@ def drive(engine, clock: VirtualClock, trace, new_tokens: int,
         if not (engine.step() or engine.scheduler.pending()) \
                 and i >= len(trace):
             break
+        peak_resident = max(peak_resident, len(engine._chunking))
         stats = engine.last_step_stats
         # One decode step advances the whole slot batch at once.
         clock.t += (STEP_OVERHEAD_S + stats["prefill_tokens"] * t_pf
                     + (t_dec if stats["decode_tokens"] else 0.0))
-    return submit_t
+    return submit_t, peak_resident
 
 
 def run(smoke: bool = False, plans_path: Optional[str] = None,
@@ -212,7 +225,7 @@ def run(smoke: bool = False, plans_path: Optional[str] = None,
              f"(family={trace_family or 'head_of_line (default)'}); "
              f"virtual clock t_pf={t_pf:.2e}s/tok t_dec={t_dec:.2e}s/step")
 
-    # One tracer spans all three arms; each arm attaches as its own
+    # One tracer spans all four arms; each arm attaches as its own
     # Perfetto process and the tracer's clock follows the arm currently
     # driving (virtual clocks -> the exported trace is deterministic).
     tracer = None
@@ -226,7 +239,8 @@ def run(smoke: bool = False, plans_path: Optional[str] = None,
     failures = 0
     results = {}
     packed_hist: Dict[str, int] = {}
-    for mode in ("unchunked", "chunked", "packed"):
+    paged_pool: Dict[str, object] = {}
+    for mode in ("unchunked", "chunked", "packed", "paged"):
         clock = VirtualClock()
         clock_box["clock"] = clock
         eng = ServeEngine(
@@ -240,13 +254,14 @@ def run(smoke: bool = False, plans_path: Optional[str] = None,
                              allow_overflow=allow_overflow)),
             clock=clock,
             chunk_prefill=(mode != "unchunked"),
-            pack_prefill=(mode == "packed"),
+            pack_prefill=(mode in ("packed", "paged")),
             prefill_slots=p["prefill_slots"],
             step_token_budget=(p["step_token_budget"]
                                if mode != "unchunked" else 0),
+            paged=(mode == "paged"),
             tracer=tracer, instance=mode)
-        drive(eng, clock, trace, new_tokens, p["arrivals_per_step"],
-              t_pf, t_dec)
+        _, resident_peak = drive(eng, clock, trace, new_tokens,
+                                 p["arrivals_per_step"], t_pf, t_dec)
         if tracer is not None:
             tracer.flush()  # close this arm's deferred step span on its clock
         m = eng.metrics.as_dict()
@@ -259,10 +274,20 @@ def run(smoke: bool = False, plans_path: Optional[str] = None,
             p50=small.get("p50_s", 0.0),
             mean=small.get("mean_s", 0.0),
             chunks=dict(eng.metrics.chunks_per_prefill),
+            resident_peak=resident_peak,
         )
         if mode == "packed":
             packed_hist = {str(n): c for n, c in sorted(
                 eng.metrics.packed_chunks_per_step.items())}
+        if mode == "paged":
+            eng.pool.check_balanced()        # refcounts drained to zero
+            paged_pool = dict(m["pool"], resident_peak=resident_peak,
+                              page=eng.pool.page)
+            print_fn(f"# paged pool: page={eng.pool.page} "
+                     f"pages={eng.pool.n_pages} "
+                     f"used_max={m['pool']['pages_used_max']} "
+                     f"resident_peak={resident_peak} "
+                     f"(prefill_slots={p['prefill_slots']})")
         print_fn(f"{mode}: total={clock.t * 1e3:.2f}ms virtual, "
                  f"completed={eng.metrics.completed}, small-bucket TTFT "
                  f"mean={results[mode]['mean'] * 1e3:.2f}ms "
@@ -273,6 +298,7 @@ def run(smoke: bool = False, plans_path: Optional[str] = None,
     if hist_out:
         with open(hist_out, "w") as f:
             json.dump({"packed_chunks_per_step": packed_hist,
+                       "paged_pool": paged_pool,
                        "trace": trace_lib.trace_summary(trace, edges),
                        "family": trace_family or "head_of_line",
                        "results": {m: {k: v for k, v in r.items()
@@ -291,7 +317,7 @@ def run(smoke: bool = False, plans_path: Optional[str] = None,
         write_trace(tracer, trace_out)
         reloaded = load_trace(trace_out)
         pid_by_mode = {pr["name"]: pr["pid"] for pr in reloaded["procs"]}
-        for mode in ("unchunked", "chunked", "packed"):
+        for mode in ("unchunked", "chunked", "packed", "paged"):
             durs = [ev.get("dur", 0.0) for ev in reloaded["events"]
                     if ev.get("name") == "ttft"
                     and ev["pid"] == pid_by_mode[mode]
@@ -324,7 +350,7 @@ def run(smoke: bool = False, plans_path: Optional[str] = None,
                  f"{results['chunked']['p95']:.4f}s")
     # 2. equal work: same completions and greedy tokens, bounded overhead;
     # packing only removes steps, so packed virtual time <= one-chunk.
-    for mode in ("chunked", "packed"):
+    for mode in ("chunked", "packed", "paged"):
         if results[mode]["completed"] != results["unchunked"]["completed"]:
             failures += 1
             print_fn(f"FAIL: {mode} completion count differs from unchunked")
@@ -343,6 +369,27 @@ def run(smoke: bool = False, plans_path: Optional[str] = None,
         print_fn(f"FAIL: packed total virtual time "
                  f"{results['packed']['wall']:.4f}s exceeds one-chunk "
                  f"{results['chunked']['wall']:.4f}s (throughput regressed)")
+    if results["paged"]["wall"] > MAX_SLOWDOWN * results["unchunked"]["wall"]:
+        failures += 1
+        print_fn(f"FAIL: paged total virtual time "
+                 f"{results['paged']['wall']:.4f}s exceeds "
+                 f"{MAX_SLOWDOWN}x unchunked "
+                 f"{results['unchunked']['wall']:.4f}s")
+    # 2b. occupancy: the paged pool decouples resident prefills from
+    # ``prefill_slots`` — on the pool-pressure trace the paged arm must
+    # hold strictly more concurrent in-flight prefills than the slot cap
+    # (the contiguous arms are clamped to it by construction).
+    if trace_family == "overflow_heavy":
+        if results["paged"]["resident_peak"] <= p["prefill_slots"]:
+            failures += 1
+            print_fn(f"FAIL: paged resident_peak "
+                     f"{results['paged']['resident_peak']} not above "
+                     f"prefill_slots={p['prefill_slots']} — the pool did "
+                     f"not unlock occupancy past the contiguous cap")
+        else:
+            print_fn(f"# occupancy: paged held "
+                     f"{results['paged']['resident_peak']} resident "
+                     f"prefills > prefill_slots={p['prefill_slots']}")
 
     # 3. per-hardware divergence at full dims: chunk length (32k prompt)
     # and pack width (the 512-token small-request class).
@@ -379,6 +426,24 @@ def run(smoke: bool = False, plans_path: Optional[str] = None,
         failures += 1
         print_fn(f"FAIL: pack width does not diverge across "
                  f"{DIVERGENCE_HW}: {pack_by_hw}")
+    # KV page size diverges too: the pool's page geometry is a plan cell,
+    # so different hardware models get different page sizes at full dims
+    # (probed at the 32k decode cell — the power-of-two cache length the
+    # serving buckets compile).
+    page_prob = kernel_problems(cfg_full, p["slots"], 32768,
+                                "decode")["kv_page"]
+    page_by_hw = {}
+    for hw_name in DIVERGENCE_HW:
+        entry = compile_entry("kv_page", page_prob, "float32",
+                              HARDWARE_REGISTRY[hw_name],
+                              autotuner=Autotuner())
+        page_by_hw[hw_name] = entry.tile[0]
+        print_fn(f"# kv_page @ skv=32768 on {hw_name}: "
+                 f"tile {entry.tile} ({entry.dominant}-bound)")
+    if len(set(page_by_hw.values())) < 2:
+        failures += 1
+        print_fn(f"FAIL: KV page size does not diverge across "
+                 f"{DIVERGENCE_HW}: {page_by_hw}")
 
     # 4. overflow admission: longer than every edge, admitted via chunking.
     clock = VirtualClock()
@@ -422,7 +487,7 @@ def main():
                          "to this JSON path (the CI artifact)")
     ap.add_argument("--trace-out", default=None,
                     help="write a deterministic (virtual-clock) lifecycle "
-                         "trace of all three arms to this path — one "
+                         "trace of all four arms to this path — one "
                          "Perfetto process per arm; the bench asserts the "
                          "trace reproduces its reported p95 TTFTs")
     args = ap.parse_args()

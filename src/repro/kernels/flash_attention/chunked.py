@@ -46,9 +46,53 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.flash_attention.decode import paged_gather
 from repro.kernels.flash_attention.ref import fit_bkv
 
 NEG_INF = -2.0e30
+
+
+def paged_prefix(k_pages, v_pages, page_table, n_prefix_pages: int, start):
+    """Dense view of a chunk's visible cache prefix from the paged pool.
+
+    Gathers the first ``n_prefix_pages`` table entries (a static count —
+    ``cdiv(start, page)`` at trace time) and returns ``(k, v, kv_pos)``
+    with k/v ``[1, Hkv, n_prefix_pages*page, D]`` and ``kv_pos`` marking
+    slots at positions >= ``start`` as never written (-1). The mask does
+    double duty: it hides the unwritten tail of a partially-filled last
+    page AND a shared-prefix donor's own tokens past the shared length in
+    a copy-on-write page (see serve/pool.py) — without it a prefix hit
+    would attend the donor's divergent continuation.
+    """
+    k = paged_gather(k_pages, page_table[:n_prefix_pages])
+    v = paged_gather(v_pages, page_table[:n_prefix_pages])
+    span = k.shape[2]
+    pos = jnp.arange(span, dtype=jnp.int32)
+    kv_pos = jnp.where(pos < start, pos, -1)
+    return k, v, kv_pos
+
+
+def flash_prefill_chunk_paged_ref(
+    q, k_chunk, v_chunk, k_pages, v_pages, page_table, *,
+    q_pos, start, n_prefix_pages: int,
+    window: Optional[int] = None, softcap: Optional[float] = None,
+    scale: Optional[float] = None, bkv: int = 512,
+):
+    """``flash_prefill_chunk_ref`` over a paged cache prefix: gather the
+    prefix pages, concatenate the chunk's own keys (positions ``q_pos``),
+    and run the identical positioned online softmax."""
+    if n_prefix_pages:
+        kp, vp, pp = paged_prefix(
+            k_pages, v_pages, page_table, n_prefix_pages, start)
+        k_all = jnp.concatenate([kp, k_chunk.astype(kp.dtype)], axis=2)
+        v_all = jnp.concatenate([vp, v_chunk.astype(vp.dtype)], axis=2)
+        kv_pos = jnp.concatenate([pp, jnp.asarray(q_pos, jnp.int32)])
+    else:
+        k_all, v_all = k_chunk, v_chunk
+        kv_pos = jnp.asarray(q_pos, jnp.int32)
+    return flash_prefill_chunk_ref(
+        q, k_all, v_all, q_pos=q_pos, kv_pos=kv_pos,
+        window=window, softcap=softcap, scale=scale, bkv=bkv)
 
 
 @functools.partial(

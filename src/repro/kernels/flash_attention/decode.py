@@ -233,3 +233,53 @@ def flash_decode_ref(
     (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kc, vc, pc))
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     return out.reshape(b, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged-pool indirection (serve/pool.py). Pages hold token rows of one
+# request's cache behind a page table: ``pages`` [n_pages, Hkv, page, D],
+# ``page_table`` [n_pt] int32 mapping each logical page index of the request
+# to its physical page id. Gather/scatter here; the attention math delegates
+# to the refs above unchanged, so paged and dense lowerings cannot drift.
+# ---------------------------------------------------------------------------
+
+def paged_gather(pages, page_table):
+    """Dense [1, Hkv, n_pt*page, D] cache view of one request's pages.
+
+    Slots past the request's written length hold garbage (unallocated table
+    entries point at physical page 0) — callers mask them positionally: the
+    view is linear, so slot i is absolute position i and the usual
+    ``kv_pos <= pos`` / ``kv_pos < start`` rules hide everything unwritten.
+    """
+    n_pt = page_table.shape[0]
+    hkv, page, d = pages.shape[1:]
+    gathered = pages[page_table]                    # [n_pt, Hkv, page, D]
+    return gathered.transpose(1, 0, 2, 3).reshape(1, hkv, n_pt * page, d)
+
+
+def paged_write(pages, page_table, x, start):
+    """Scatter ``x`` [1, Hkv, c, D] into pages at positions
+    ``start .. start+c-1`` (start may be traced — decode's ``pos``).
+    Returns the updated pages array."""
+    c = x.shape[2]
+    page = pages.shape[2]
+    idx = start + jnp.arange(c, dtype=jnp.int32)
+    phys = page_table[idx // page]                  # [c] physical page ids
+    offs = idx % page
+    return pages.at[phys, :, offs, :].set(
+        x[0].transpose(1, 0, 2).astype(pages.dtype))
+
+
+def flash_decode_paged_ref(
+    q, k_pages, v_pages, page_table, *, pos,
+    window: Optional[int] = None, softcap: Optional[float] = None,
+    scale: Optional[float] = None, bkv: int = 512,
+):
+    """``flash_decode_ref`` over a page-table-backed cache: gather the
+    request's pages into the linear view and run the identical online
+    softmax (slots beyond ``pos`` are masked by the linear position rule,
+    which also hides unallocated-table garbage)."""
+    k = paged_gather(k_pages, page_table)
+    v = paged_gather(v_pages, page_table)
+    return flash_decode_ref(q, k, v, pos=pos, window=window,
+                            softcap=softcap, scale=scale, bkv=bkv)

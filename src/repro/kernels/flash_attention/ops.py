@@ -390,3 +390,81 @@ registry.register(registry.KernelSpec(
     n_tiles=_packed_n_tiles,
     default_tile=_packed_default_tile,
 ))
+
+
+# ---------------------------------------------------------------------------
+# kv_page: the KV-cache page size of the paged pool (serve/pool.py).
+# ---------------------------------------------------------------------------
+#
+# Page geometry is a tile axis, not a constant: a decode/prefill step stages
+# one K page + one V page (across all kv heads) in VMEM while streaming the
+# cache, so VMEM capacity bounds the page per hardware model exactly the way
+# it bounds ``bkv`` — and every page transfer pays a fixed descriptor cost
+# that penalizes tiny pages, while the last page of a request wastes
+# (page - len % page) slots of HBM, amortized over how often the page is
+# re-read. Net: cost decreases with page size until the VMEM budget binds,
+# so models with different VMEM (v5e 16 MiB vs v6e 32 MiB) resolve
+# different page sizes for the same cache geometry (goldens in
+# tests/test_plans.py).
+#     problem dims {"skv", "d", "hkv"}: cache length, head dim, kv heads.
+#     tile rank 1 = (page,), the pool's page length in tokens.
+
+
+def _kv_page_constraints(problem: Mapping[str, int]) -> TileConstraints:
+    # A page is DMA granularity (token rows of the K/V stream), not an MXU
+    # operand: it wants lane (128) multiples, nothing else.
+    return TileConstraints(
+        rank=1, max_dims=(problem["skv"],), lane_dim=0,
+    )
+
+
+def _kv_page_vmem_bytes(tile: TileShape, problem: Mapping[str, int],
+                        dtype: str) -> float:
+    page = tile[0]
+    d, hkv = problem["d"], problem["hkv"]
+    b = dtype_bytes(dtype)
+    # One K page + one V page staged across all kv heads, plus the page
+    # table rows resolving this cache (int32 per page).
+    return 2 * page * hkv * d * b + cdiv(problem["skv"], page) * 4
+
+
+def _kv_page_workload(tile: TileShape, problem: Mapping[str, int],
+                      dtype: str) -> TileWorkload:
+    page = tile[0]
+    d, hkv, skv = problem["d"], problem["hkv"], problem["skv"]
+    b = dtype_bytes(dtype)
+    # Copy/accumulate through the page, sub-dominant to the stream.
+    flops = 2.0 * page * hkv * d
+    hbm = (
+        2 * page * hkv * d * b            # the K and V page bytes
+        + 2 * DRAM_PAGE_BYTES             # per-page stream descriptors
+        # Allocation waste: a request's tail page holds on average page/2
+        # dead slots; their bytes re-cross HBM once per full cache read,
+        # amortized over the skv tokens each read covers.
+        + page * hkv * d * b / (2.0 * max(skv, 1))
+    )
+    return TileWorkload(
+        flops=flops,
+        hbm_bytes=hbm,
+        row_segments=page // 8,
+        row_stride_bytes=float(d * b),
+        pad_waste=max(1.0, 128 / d),
+    )
+
+
+def _kv_page_n_tiles(tile: TileShape, problem: Mapping[str, int]) -> int:
+    return cdiv(problem["skv"], tile[0])
+
+
+def _kv_page_default_tile(problem: Mapping[str, int], dtype: str) -> TileShape:
+    return TileShape((min(512, problem["skv"]),))
+
+
+registry.register(registry.KernelSpec(
+    name="kv_page",
+    constraints=_kv_page_constraints,
+    vmem_bytes=_kv_page_vmem_bytes,
+    workload=_kv_page_workload,
+    n_tiles=_kv_page_n_tiles,
+    default_tile=_kv_page_default_tile,
+))

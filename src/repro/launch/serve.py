@@ -29,6 +29,15 @@ artifact's ``packed_prefill`` pack width (VMEM-bounded per hardware model,
 so different models pack different widths). Token outputs are identical to
 one-chunk-per-step and unchunked service; only the schedule densifies.
 
+``--paged`` swaps the per-request contiguous KV caches for the fleet-wide
+paged pool (``repro.serve.pool``): page size comes from the artifact's
+``kv_page`` cell for the target hardware, page-table indirection runs
+through decode and (packed) chunked prefill, identical prompt prefixes are
+served from shared refcounted pages (copy-on-write on divergence; disable
+with ``--no-prefix-sharing``), and prefill admission is gated by pool
+headroom instead of ``--prefill-slots``. Served tokens are identical to
+the contiguous path; pool counters print under ``pool`` in the metrics.
+
 ``--refine`` closes the loop from telemetry back to the plan: engines divert
 ``--shadow-fraction`` of their steps to shadow-measuring candidate tiles
 from the artifact's sensitivity curves (served tokens are untouched), the
@@ -110,6 +119,13 @@ def main():
                          "batch) into each step under --step-token-budget "
                          "and the plan's per-hardware pack width, instead "
                          "of one chunk per step (implies --chunk-prefill)")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the paged KV pool (page size from the "
+                         "plan's kv_page cell; shared-prefix copy-on-write "
+                         "reuse; admission by pool headroom — implies "
+                         "--chunk-prefill)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable shared-prefix page reuse in --paged mode")
     ap.add_argument("--fleet", default="",
                     help="comma list of hardware models; serve through the "
                          "fleet router with one engine per model "
@@ -163,7 +179,8 @@ def main():
         policy = build_policy(
             args.bucket_policy, plans,
             None if fleet_names else args.hardware, args.max_queue,
-            allow_overflow=args.chunk_prefill or args.pack_prefill)
+            allow_overflow=(args.chunk_prefill or args.pack_prefill
+                            or args.paged))
 
     def make_engine(hw_name: str) -> ServeEngine:
         return ServeEngine(
@@ -174,6 +191,8 @@ def main():
             step_token_budget=args.step_token_budget,
             prefill_slots=args.prefill_slots,
             pack_prefill=args.pack_prefill,
+            paged=args.paged,
+            prefix_sharing=not args.no_prefix_sharing,
             shadow_fraction=args.shadow_fraction if args.refine else 0.0,
             refiner=refiner, tracer=tracer, instance=hw_name)
 

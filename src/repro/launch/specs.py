@@ -69,6 +69,14 @@ def kernel_problems(cfg: ArchConfig, batch: int, seq_len: int,
                 hkv=max(cfg.n_kv_heads, 1),
                 window=window,
             )
+            # Page geometry of the paged KV pool rides the decode cell's
+            # geometry: the cache length bounds the page and decode is the
+            # steady-state reader the page is tuned for (serve/pool.py).
+            problems["kv_page"] = dict(
+                skv=seq_len,
+                d=cfg.head_dim_,
+                hkv=max(cfg.n_kv_heads, 1),
+            )
         else:
             attn_kernel = ("packed_prefill" if packed
                            else "chunked_prefill" if chunked

@@ -95,6 +95,25 @@ def make_serve_state(
     return T.make_caches(cfg, batch, max_len, dtype, ring_local=ring_local)
 
 
+def make_paged_pool(cfg: ArchConfig, n_pages: int, page: int, dtype):
+    """Engine-wide paged KV pool arrays (see ``serve.pool.PagedKVPool``,
+    which owns the matching host-side page bookkeeping)."""
+    if is_encdec(cfg):
+        raise NotImplementedError(
+            "paged KV pool is not supported for encoder-decoder models")
+    return T.make_paged_pool(cfg, n_pages, page, dtype)
+
+
+def make_paged_state(cfg: ArchConfig, dtype):
+    """Per-request serve state for a pool-backed request: attention layers
+    carry only their scalar write position (K/V live in the shared pool);
+    recurrent/SSD layers keep their usual batch-1 carried state."""
+    if is_encdec(cfg):
+        raise NotImplementedError(
+            "paged KV pool is not supported for encoder-decoder models")
+    return T.make_caches(cfg, 1, 1, dtype, paged=True)
+
+
 def prefill(
     params, cfg: ArchConfig, batch: Dict[str, Any], max_len: int,
     dtype=jnp.float32, ctx: Optional[DistContext] = None,
@@ -179,3 +198,56 @@ def decode_step(
     out = T.forward(params, cfg, token, ctx=ctx, caches=state, decode=True,
                     remat=False, tiles=tiles)
     return out.logits[:, 0], out.caches
+
+
+# -- pool-backed (paged KV) entry points ------------------------------------
+# Each mirrors its per-request-cache counterpart with two extra inputs (the
+# shared pool arrays + the request's page table) and one extra output (the
+# updated pool). Separate entry points keep the existing signatures — and
+# every compiled program built on them — untouched.
+
+def decode_step_paged(
+    params, cfg: ArchConfig, token: jnp.ndarray, state, pool, page_table,
+    ctx: Optional[DistContext] = None, tiles: Tiles = None,
+):
+    """token [1,1] -> (logits [1, Vpad], new state, new pool)."""
+    if is_encdec(cfg):
+        raise NotImplementedError(
+            "paged decode is not supported for encoder-decoder models")
+    out = T.forward(params, cfg, token, ctx=ctx, caches=state, decode=True,
+                    remat=False, tiles=tiles, pool=pool,
+                    page_table=page_table)
+    return out.logits[:, 0], out.caches, out.pool
+
+
+def prefill_chunk_paged(
+    params, cfg: ArchConfig, tokens: jnp.ndarray, state, start: int,
+    pool, page_table,
+    ctx: Optional[DistContext] = None, tiles: Tiles = None,
+):
+    """:func:`prefill_chunk` over the paged pool. A pool-backed request
+    with a shared-prefix hit starts its first chunk at ``start = hit`` —
+    the mapped pages stand in for the chunks it never ran."""
+    if is_encdec(cfg):
+        raise NotImplementedError(
+            "chunked prefill is not supported for encoder-decoder models")
+    out = T.forward(
+        params, cfg, tokens, ctx=ctx, caches=state, start_pos=start,
+        chunked=True, decode=False, remat=False, logits_mode="last",
+        tiles=tiles, pool=pool, page_table=page_table,
+    )
+    return out.logits[:, -1], out.caches, out.pool
+
+
+def prefill_packed_paged(
+    params, cfg: ArchConfig, tokens: jnp.ndarray, states, layout,
+    pool, page_tables,
+    ctx: Optional[DistContext] = None, tiles: Tiles = None,
+):
+    """:func:`prefill_packed` over the paged pool (one page table per
+    segment). Returns ``(logits [N, Vpad], new states, new pool)``."""
+    if is_encdec(cfg):
+        raise NotImplementedError(
+            "packed prefill is not supported for encoder-decoder models")
+    return T.forward_packed(params, cfg, tokens, states, layout, ctx=ctx,
+                            tiles=tiles, pool=pool, page_tables=page_tables)

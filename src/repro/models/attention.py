@@ -27,12 +27,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.tiling import cdiv
 from repro.models import flags
 from repro.kernels.flash_attention.chunked import (
-    flash_prefill_chunk_ref, flash_prefill_packed_ref,
+    flash_prefill_chunk_paged_ref, flash_prefill_chunk_ref,
+    flash_prefill_packed_ref, paged_prefix,
 )
 from repro.kernels.flash_attention.decode import (
-    fit_bkv, flash_decode, flash_decode_ref,
+    fit_bkv, flash_decode, flash_decode_ref, paged_gather, paged_write,
 )
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
@@ -102,6 +104,20 @@ def make_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype,
     if ring:
         cache["slot_pos"] = jnp.full((max_len,), -1, jnp.int32)
     return cache
+
+
+def make_paged_kv_pages(cfg: ArchConfig, n_pages: int, page: int,
+                        dtype) -> Dict[str, Any]:
+    """One attention layer's slice of the shared paged KV pool: physical
+    page arrays ``[n_pages, Hkv, page, hd]``. Requests index into them
+    through their page tables (serve/pool.py); the per-request serve state
+    keeps only the scalar write position (see ``transformer.make_caches``
+    with ``paged=True``)."""
+    hkv, hd = cfg.padded_kv_heads, cfg.head_dim_
+    return {
+        "k_pages": jnp.zeros((n_pages, hkv, page, hd), dtype),
+        "v_pages": jnp.zeros((n_pages, hkv, page, hd), dtype),
+    }
 
 
 def _ring_write(cache, k, v, positions_1d, end_pos):
@@ -259,6 +275,37 @@ def attn_prefill_chunk(
     scale = cfg.query_scale or cfg.head_dim_ ** -0.5
     softcap = cfg.attn_softcap or None
 
+    if "k_pages" in cache:
+        # Pool-backed cache: the chunk attends over the ``cdiv(start,
+        # page)`` prefix pages its table maps (gathered to a positioned
+        # linear view; positions >= start masked — unwritten page tails and
+        # a shared-prefix donor's divergent tokens alike) plus itself, then
+        # writes its K/V through the table at the static start offset. The
+        # engine resolves copy-on-write BEFORE this runs (pool.prepare_span)
+        # so the written span's pages are exclusively owned.
+        page = cache["k_pages"].shape[2]
+        n_pp = cdiv(start, page)
+        skv = n_pp * page + c
+        if tile is not None:
+            requested = min(int(tile[-1]), skv)
+            effective = fit_bkv(requested, skv)
+            _emit_tile_event(kernel="chunked_prefill", phase="prefill",
+                             impl="reference", tile=tuple(tile),
+                             effective=effective,
+                             fallback=effective != requested)
+            bkv = requested
+        else:
+            bkv = 512
+        out = flash_prefill_chunk_paged_ref(
+            q, k, v, cache["k_pages"], cache["v_pages"], cache["table"],
+            q_pos=positions[0], start=start, n_prefix_pages=n_pp,
+            window=window, softcap=softcap, scale=scale, bkv=bkv)
+        kp = paged_write(cache["k_pages"], cache["table"], k, start)
+        vp = paged_write(cache["v_pages"], cache["table"], v, start)
+        y = _out_proj(p, cfg, out, x.dtype)
+        return y, {"k_pages": kp, "v_pages": vp, "table": cache["table"],
+                   "pos": jnp.asarray(start + c, jnp.int32)}
+
     if "slot_pos" in cache:
         # Ring cache: visible keys = the ring's survivors (window-bounded
         # history) ++ the chunk itself, each with its absolute position.
@@ -364,7 +411,17 @@ def attn_prefill_packed(
     q, k, v = _project_qkv(p, cfg, x, positions)
     scale = cfg.query_scale or cfg.head_dim_ ** -0.5
     softcap = cfg.attn_softcap or None
-    ring = "slot_pos" in caches[0]
+    paged = "k_pages" in caches[0]
+    ring = not paged and "slot_pos" in caches[0]
+    if paged:
+        # Pool-backed pack: by convention segment 0's cache carries the
+        # SHARED page arrays (transformer.forward_packed merges them there);
+        # every segment carries its own page table. Prefix reads all see
+        # the pre-step pages (requests only share read-only prefix pages —
+        # the engine's copy-on-write pass guarantees written spans are
+        # exclusive), then the per-segment writes accumulate functionally.
+        k_pool, v_pool = caches[0]["k_pages"], caches[0]["v_pages"]
+        page = k_pool.shape[2]
 
     offs = [0]
     for _, ln in layout:
@@ -376,7 +433,22 @@ def attn_prefill_packed(
         k_seg = k[:, :, offs[i]:offs[i] + ln]
         v_seg = v[:, :, offs[i]:offs[i] + ln]
         seg_pos = positions[0, offs[i]:offs[i] + ln].astype(jnp.int32)
-        if ring:
+        if paged:
+            # Paged prefix: the segment's mapped pages up to its start
+            # (static count), position-masked like the ring's slot_pos map.
+            n_pp = cdiv(start, page)
+            if n_pp:
+                kp_, vp_, pp_ = paged_prefix(
+                    k_pool, v_pool, cache["table"], n_pp, start)
+                k_parts += [kp_.astype(k.dtype), k_seg]
+                v_parts += [vp_.astype(v.dtype), v_seg]
+                kvp_parts += [pp_, seg_pos]
+            else:
+                k_parts += [k_seg]
+                v_parts += [v_seg]
+                kvp_parts += [seg_pos]
+            prefix_len = n_pp * page
+        elif ring:
             # Ring prefix: the whole window buffer, slot_pos mapping each
             # slot to its absolute position (-1 = never written).
             k_parts += [cache["k"].astype(k.dtype), k_seg]
@@ -420,12 +492,21 @@ def attn_prefill_packed(
         k_seg = k[:, :, offs[i]:offs[i] + ln]
         v_seg = v[:, :, offs[i]:offs[i] + ln]
         seg_pos = positions[0, offs[i]:offs[i] + ln]
-        if ring:
+        if paged:
+            k_pool = paged_write(k_pool, cache["table"], k_seg, start)
+            v_pool = paged_write(v_pool, cache["table"], v_seg, start)
+            new_caches.append({"table": cache["table"],
+                               "pos": jnp.asarray(start + ln, jnp.int32)})
+        elif ring:
             new_caches.append(
                 _ring_write(cache, k_seg, v_seg, seg_pos, start + ln))
         else:
             new_caches.append(
                 _linear_write(cache, k_seg, v_seg, start, start + ln))
+    if paged:
+        # Segment 0 returns the (single) updated pool alongside its state.
+        new_caches[0] = {**new_caches[0], "k_pages": k_pool,
+                        "v_pages": v_pool}
     y = _out_proj(p, cfg, out, x.dtype)
     return y, tuple(new_caches)
 
@@ -536,16 +617,33 @@ def attn_decode(
     q, k_new, v_new = _project_qkv(p, cfg, x, positions)  # [B, H(kv), 1, hd]
     scale = cfg.query_scale or cfg.head_dim_ ** -0.5
 
-    max_len = cache["k"].shape[2]
+    paged = "k_pages" in cache
+    max_len = (cache["table"].shape[0] * cache["k_pages"].shape[2]
+               if paged else cache["k"].shape[2])
     if (flags.DECODE_ATTN_SHARDED and ctx is not None and ctx.mesh is not None
-            and "slot_pos" not in cache
+            and not paged and "slot_pos" not in cache
             and cfg.padded_kv_heads < ctx.mesh.shape[ctx.model_axis]
             and max_len % ctx.mesh.shape[ctx.model_axis] == 0):
         out, new_cache = _decode_attn_sharded(
             cfg, ctx, q[:, :, 0], k_new, v_new, cache, window, scale)
         y = _out_proj(p, cfg, out, x.dtype)
         return y, new_cache
-    if "slot_pos" in cache:
+    if paged:
+        # Pool-backed cache (batch 1): scatter the new K/V into the page
+        # the table maps position ``pos`` to, then attend over the table's
+        # gathered linear view — the dispatch below (dense / flash_ref /
+        # pallas) is the same as for a resident linear cache, so the paged
+        # lowering changes where bytes live, not the math. Unwritten tail
+        # slots of the view hold stale pages' data; ``k_pos <= pos`` masks
+        # them exactly as it masks a linear cache's unwritten tail.
+        kp = paged_write(cache["k_pages"], cache["table"], k_new, pos)
+        vp = paged_write(cache["v_pages"], cache["table"], v_new, pos)
+        ck = paged_gather(kp, cache["table"])
+        cv = paged_gather(vp, cache["table"])
+        slot_pos = None
+        k_pos = jnp.arange(max_len)
+        valid = k_pos <= pos
+    elif "slot_pos" in cache:
         slot = pos % max_len
         ck = jax.lax.dynamic_update_slice(
             cache["k"], k_new.astype(cache["k"].dtype), (0, 0, slot, 0))
@@ -622,7 +720,11 @@ def attn_decode(
             "bhs,bhsk->bhk", pattn, ve, preferred_element_type=jnp.float32,
         )[:, :, None].astype(x.dtype)                      # [B, Hq, 1, hd]
     y = _out_proj(p, cfg, out, x.dtype)
-    new_cache = {"k": ck, "v": cv, "pos": pos + 1}
-    if slot_pos is not None:
-        new_cache["slot_pos"] = slot_pos
+    if paged:
+        new_cache = {"k_pages": kp, "v_pages": vp, "table": cache["table"],
+                     "pos": pos + 1}
+    else:
+        new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+        if slot_pos is not None:
+            new_cache["slot_pos"] = slot_pos
     return y, new_cache

@@ -359,10 +359,21 @@ class StackOutputs:
     aux_loss: jnp.ndarray
     caches: Optional[List[Any]] = None
     hidden: Optional[jnp.ndarray] = None
+    # Updated paged-pool arrays (same structure as ``make_paged_pool``) when
+    # the call ran pool-backed; None otherwise.
+    pool: Optional[List[Any]] = None
 
 
-def _cache_for(cfg, spec, batch, max_len, dtype, ring_local):
+def _cache_for(cfg, spec, batch, max_len, dtype, ring_local, paged=False):
     if spec.mixer in ("attn", "local_attn"):
+        if paged:
+            # Pool-backed request state: K/V live in the engine's shared
+            # page arrays; the request itself carries only its write
+            # position (its page table is engine-side bookkeeping, merged
+            # in at call time). Windowed layers use the linear paged cache
+            # too — the attention mask enforces the window, the ring's
+            # memory bound is the pool's job now.
+            return {"pos": jnp.zeros((), jnp.int32)}
         ring = ring_local and spec.mixer == "local_attn"
         length = min(max_len, cfg.attn_window) if ring else max_len
         return attn_mod.make_kv_cache(cfg, batch, length, dtype, ring=ring)
@@ -375,15 +386,19 @@ def _cache_for(cfg, spec, batch, max_len, dtype, ring_local):
 
 def make_caches(
     cfg: ArchConfig, batch: int, max_len: int, dtype,
-    ring_local: bool = False,
+    ring_local: bool = False, paged: bool = False,
 ) -> List[Any]:
     """Caches mirroring the segment decomposition: seq segments get a list
-    of per-layer caches; scan segments get per-position stacked caches."""
+    of per-layer caches; scan segments get per-position stacked caches.
+    ``paged=True`` builds pool-backed request state: attention layers hold
+    only their scalar write position (pages come from ``make_paged_pool``),
+    recurrent/SSD layers keep their usual carried state."""
     caches = []
     for seg in decompose(cfg):
         if seg[0] == "seq":
             caches.append([
-                _cache_for(cfg, spec, batch, max_len, dtype, ring_local)
+                _cache_for(cfg, spec, batch, max_len, dtype, ring_local,
+                           paged=paged)
                 for spec in seg[1]
             ])
         else:
@@ -391,10 +406,63 @@ def make_caches(
             caches.append([
                 jax.tree.map(
                     lambda a: jnp.broadcast_to(a[None], (reps,) + a.shape),
-                    _cache_for(cfg, spec, batch, max_len, dtype, ring_local))
+                    _cache_for(cfg, spec, batch, max_len, dtype, ring_local,
+                               paged=paged))
                 for spec in unit
             ])
     return caches
+
+
+def make_paged_pool(
+    cfg: ArchConfig, n_pages: int, page: int, dtype,
+) -> List[Any]:
+    """The engine-wide paged KV pool: per attention layer, physical page
+    arrays ``[n_pages, Hkv, page, hd]`` (scan segments stack them on the
+    rep axis like :func:`make_caches` stacks caches). Non-attention layers
+    get ``None`` — their state stays per-request. Structure mirrors the
+    segment decomposition so :func:`forward` can zip pool leaves with
+    caches layer by layer."""
+
+    def leaf(spec):
+        if spec.mixer in ("attn", "local_attn"):
+            return attn_mod.make_paged_kv_pages(cfg, n_pages, page, dtype)
+        return None
+
+    pool = []
+    for seg in decompose(cfg):
+        if seg[0] == "seq":
+            pool.append([leaf(spec) for spec in seg[1]])
+        else:
+            _, unit, reps = seg
+            pool.append([
+                jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (reps,) + a.shape),
+                    leaf(spec))
+                for spec in unit
+            ])
+    return pool
+
+
+def _merge_pool_leaf(cache, pool_leaf, table):
+    """Hand a layer its pool pages + page table by merging them into its
+    cache dict — the attention paths dispatch on ``k_pages``/``table`` keys,
+    so scan/remat plumbing never changes shape."""
+    if pool_leaf is None:
+        return cache
+    return {**cache, **pool_leaf, "table": table}
+
+
+def _split_pool_leaf(new_cache):
+    """Inverse of :func:`_merge_pool_leaf` on a layer's output: returns
+    ``(request_state, pool_leaf_or_None)`` with the table dropped (it is
+    engine bookkeeping, not model state)."""
+    if isinstance(new_cache, dict) and "k_pages" in new_cache:
+        pl = {"k_pages": new_cache["k_pages"],
+              "v_pages": new_cache["v_pages"]}
+        st = {k: v for k, v in new_cache.items()
+              if k not in ("k_pages", "v_pages", "table")}
+        return st, pl
+    return new_cache, None
 
 
 def forward(
@@ -408,6 +476,8 @@ def forward(
     logits_mode: str = "full",   # full | last | hidden
     tiles=None,
     chunked: bool = False,
+    pool: Optional[List[Any]] = None,
+    page_table: Optional[jnp.ndarray] = None,
 ) -> StackOutputs:
     """tokens [B, S] -> logits [B, S(+P), Vpad].
 
@@ -426,6 +496,14 @@ def forward(
     previous chunks plus the chunk itself (``attn_prefill_chunk``), and
     recurrent/SSD layers continue from their carried state — which they do
     natively, since ``caches`` is their initial state. Requires ``caches``.
+
+    ``pool`` + ``page_table`` run the attention layers pool-backed: caches
+    must come from ``make_caches(paged=True)``, the pool from
+    ``make_paged_pool``, and ``page_table`` is the request's [n_pt] int32
+    logical->physical page map (``serve.pool.PagedKVPool.device_table``).
+    The updated page arrays come back in ``StackOutputs.pool``. Only the
+    decode and chunked-prefill paths support it (a paged request prefills
+    through chunk programs — a whole prompt is just one big chunk).
     """
     b, s = tokens.shape
     x = params["embed"][tokens]
@@ -446,37 +524,59 @@ def forward(
 
     if chunked and caches is None:
         raise ValueError("chunked prefill requires caches (serve state)")
+    if pool is not None and not (decode or chunked):
+        raise ValueError(
+            "pool-backed forward supports decode and chunked prefill only")
     chunk_start = start_pos if chunked else None
 
     aux_total = jnp.zeros((), jnp.float32)
     new_caches: Optional[List[Any]] = [] if caches is not None else None
+    new_pool: Optional[List[Any]] = [] if pool is not None else None
     for gi, seg in enumerate(decompose(cfg)):
         gp = params["segments"][gi]
         gc = caches[gi] if caches is not None else None
+        pg = pool[gi] if pool is not None else None
         if seg[0] == "seq":
             ncs = []
+            nps = []
             for li, spec in enumerate(seg[1]):
                 lc = gc[li] if gc is not None else None
+                if pg is not None:
+                    lc = _merge_pool_leaf(lc, pg[li], page_table)
                 x, nc, aux = layer_forward(gp[li], cfg, spec, x, positions,
                                            lc, ctx, decode, tiles=tiles,
                                            chunk_start=chunk_start)
                 aux_total = aux_total + aux
+                if pg is not None:
+                    nc, pl = _split_pool_leaf(nc)
+                    nps.append(pl)
                 ncs.append(nc)
         else:
             _, unit, reps = seg
+            if pg is not None:
+                tbl = jnp.broadcast_to(
+                    page_table[None], (reps,) + page_table.shape)
+                gc = [_merge_pool_leaf(c, pl, tbl)
+                      for c, pl in zip(gc, pg)]
             x, ncs, aux = _scan_unit(
                 gp, cfg, unit, x, positions, gc, ctx, decode,
                 remat=remat and not decode, tiles=tiles,
                 chunk_start=chunk_start,
             )
             aux_total = aux_total + aux
+            if pg is not None:
+                split = [_split_pool_leaf(nc) for nc in ncs]
+                ncs = [st for st, _ in split]
+                nps = [pl for _, pl in split]
         if new_caches is not None:
             new_caches.append(ncs)
+        if new_pool is not None:
+            new_pool.append(nps)
 
     x = _apply_norm(params, cfg, x, "final_norm")
     if logits_mode == "hidden":
         return StackOutputs(logits=None, aux_loss=aux_total,
-                            caches=new_caches, hidden=x)
+                            caches=new_caches, hidden=x, pool=new_pool)
     if logits_mode == "last":
         x = x[:, -1:]
     head = (
@@ -488,13 +588,14 @@ def forward(
     if ctx is not None:
         logits = ctx.constrain(logits, "batch", None, "vocab")
     return StackOutputs(logits=logits, aux_loss=aux_total, caches=new_caches,
-                        hidden=x)
+                        hidden=x, pool=new_pool)
 
 
 def forward_packed(
     params, cfg: ArchConfig, tokens: jnp.ndarray, states, layout,
     ctx: Optional[DistContext] = None, tiles=None,
-) -> Tuple[jnp.ndarray, Tuple]:
+    pool: Optional[List[Any]] = None, page_tables=None,
+):
     """One packed multi-request prefill step over the whole stack.
 
     ``tokens`` [1, S_packed] segment-concatenates N requests' chunks;
@@ -510,6 +611,12 @@ def forward_packed(
     Returns ``(logits [N, Vpad], new_states)``: each segment's final-
     position logits (a request's first sampled token when this was its
     last chunk) and the tuple of per-request updated states.
+
+    ``pool`` + ``page_tables`` (one table per segment) run the pack
+    pool-backed: states come from ``make_caches(paged=True)`` and the
+    SHARED page arrays ride segment 0's merged cache through the stack
+    (``attn_prefill_packed``'s convention). The return grows a third
+    element — the updated pool — so non-paged callers are untouched.
     """
     b, s = tokens.shape
     if b != 1:
@@ -520,6 +627,32 @@ def forward_packed(
     if sum(ln for _, ln in layout) != s:
         raise ValueError(f"layout {layout} does not cover {s} tokens")
     n_req = len(states)
+    if pool is not None and (page_tables is None
+                             or len(page_tables) != n_req):
+        raise ValueError("pool-backed pack needs one page table per segment")
+
+    def _merge_packed(cs, pool_leaf, reps=None):
+        # Per-request merged caches: every segment gets its own table,
+        # segment 0 additionally carries the shared page arrays.
+        if pool is None or pool_leaf is None:
+            return cs
+        merged = []
+        for r, c in enumerate(cs):
+            tbl = page_tables[r]
+            if reps is not None:
+                tbl = jnp.broadcast_to(tbl[None], (reps,) + tbl.shape)
+            merged.append(_merge_pool_leaf(
+                c, pool_leaf if r == 0 else {}, tbl))
+        return tuple(merged)
+
+    def _split_packed(ncs):
+        st0, pl = _split_pool_leaf(ncs[0])
+        if pl is None:
+            return ncs, None
+        rest = tuple({k: v for k, v in c.items() if k != "table"}
+                     for c in ncs[1:])
+        return (st0,) + rest, pl
+
     x = params["embed"][tokens]
     if cfg.scale_embeddings:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
@@ -531,15 +664,23 @@ def forward_packed(
 
     # Per-request new states, mirroring each input state's segment layout.
     new_states: List[List[Any]] = [[] for _ in range(n_req)]
+    new_pool: Optional[List[Any]] = [] if pool is not None else None
     for gi, seg in enumerate(decompose(cfg)):
         gp = params["segments"][gi]
+        pg = pool[gi] if pool is not None else None
         if seg[0] == "seq":
             ncs = []
+            nps = []
             for li, spec in enumerate(seg[1]):
                 lc = tuple(st[gi][li] for st in states)
+                if pg is not None:
+                    lc = _merge_packed(lc, pg[li])
                 x, nc, _ = layer_forward(gp[li], cfg, spec, x, positions,
                                          lc, ctx, False, tiles=tiles,
                                          pack_layout=layout)
+                if pg is not None:
+                    nc, pl = _split_packed(nc)
+                    nps.append(pl)
                 ncs.append(nc)                    # tuple over requests
             for r in range(n_req):
                 new_states[r].append([nc[r] for nc in ncs])
@@ -547,12 +688,25 @@ def forward_packed(
             _, unit, reps = seg
             gc = [tuple(st[gi][ui] for st in states)
                   for ui in range(len(unit))]
+            if pg is not None:
+                gc = [_merge_packed(cs, pg[ui], reps=reps)
+                      for ui, cs in enumerate(gc)]
             x, ncs, _ = _scan_unit(
                 gp, cfg, unit, x, positions, gc, ctx, False, remat=False,
                 tiles=tiles, pack_layout=layout,
             )
+            if pg is not None:
+                nps = []
+                stripped = []
+                for nc in ncs:
+                    nc, pl = _split_packed(nc)
+                    stripped.append(nc)
+                    nps.append(pl)
+                ncs = stripped
             for r in range(n_req):
                 new_states[r].append([nc[r] for nc in ncs])
+        if new_pool is not None:
+            new_pool.append(nps)
 
     x = _apply_norm(params, cfg, x, "final_norm")
     ends = []
@@ -567,7 +721,9 @@ def forward_packed(
     logits = jnp.einsum("nd,dv->nv", x_last, head.astype(x_last.dtype))
     if cfg.final_softcap:
         logits = softcap(logits, cfg.final_softcap)
-    return logits, tuple(new_states)
+    if pool is None:
+        return logits, tuple(new_states)
+    return logits, tuple(new_states), new_pool
 
 
 def lm_loss(logits: jnp.ndarray, targets: jnp.ndarray, cfg: ArchConfig,

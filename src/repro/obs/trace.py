@@ -32,6 +32,11 @@ Event vocabulary (names are a stable contract with
 - ``queue_push`` / ``queue_pop`` / ``queue_depth`` — scheduler events
   and the backlog counter (sampled on admit/reject as well as inside
   steps, so idle-time backlog is visible).
+- ``page_alloc`` / ``page_free`` / ``prefix_hit`` / ``cow_split`` /
+  ``pool_occupancy`` — paged-KV-pool lifecycle instants on the pool
+  lane (see ``repro.serve.pool``): page allocations and frees with the
+  pool's running occupancy, shared-prefix reuse hits, and
+  copy-on-write splits.
 
 Zero-cost when disabled: components hold ``self._trace = None`` unless a
 tracer was injected and guard every site with ``if self._trace is not
@@ -55,6 +60,7 @@ LANE_PLAN = 3
 LANE_SHADOW = 4
 LANE_SCHED = 5
 LANE_QUEUE = 6
+LANE_POOL = 7
 PACK_LANE_BASE = 8
 
 LANE_NAMES = {
@@ -65,6 +71,7 @@ LANE_NAMES = {
     LANE_SHADOW: "shadow",
     LANE_SCHED: "scheduler",
     LANE_QUEUE: "queue depth",
+    LANE_POOL: "kv pool",
 }
 
 
@@ -252,6 +259,33 @@ class ProcTrace:
 
     def queue_depth(self, depth: int) -> None:
         self.counter("queue_depth", depth)
+
+    # -- paged KV pool -----------------------------------------------------
+    def page_alloc(self, rid: int, n_pages: int, used: int,
+                   total: int) -> None:
+        self.instant(LANE_POOL, "page_alloc", "pool",
+                     args={"rid": int(rid), "pages": int(n_pages),
+                           "used": int(used), "total": int(total)})
+
+    def page_free(self, rid: int, n_pages: int, used: int,
+                  total: int) -> None:
+        self.instant(LANE_POOL, "page_free", "pool",
+                     args={"rid": int(rid), "pages": int(n_pages),
+                           "used": int(used), "total": int(total)})
+
+    def prefix_hit(self, rid: int, hit_tokens: int, n_pages: int) -> None:
+        self.instant(LANE_POOL, "prefix_hit", "pool",
+                     args={"rid": int(rid), "hit_tokens": int(hit_tokens),
+                           "pages": int(n_pages)})
+
+    def cow_split(self, rid: int, src: int, dst: int) -> None:
+        self.instant(LANE_POOL, "cow_split", "pool",
+                     args={"rid": int(rid), "src": int(src),
+                           "dst": int(dst)})
+
+    def pool_occupancy(self, used: int, total: int) -> None:
+        self.instant(LANE_POOL, "pool_occupancy", "pool",
+                     args={"used": int(used), "total": int(total)})
 
     # -- scheduler ---------------------------------------------------------
     def queue_push(self, rid: int, bucket: int) -> None:

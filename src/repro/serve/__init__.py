@@ -5,6 +5,7 @@ plan feedback loop."""
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.fleet import FleetRouter, RollDecision, RouteDecision
 from repro.serve.metrics import ServeMetrics
+from repro.serve.pool import PagedKVPool, supports_prefix_sharing
 from repro.serve.refine import PlanRefiner, drift_report, make_shadow_measure
 from repro.serve.scheduler import (
     BucketPolicy,
@@ -15,6 +16,7 @@ from repro.serve.scheduler import (
 
 __all__ = [
     "Request", "ServeEngine", "FleetRouter", "RouteDecision", "RollDecision",
-    "ServeMetrics", "PlanRefiner", "make_shadow_measure", "drift_report",
+    "ServeMetrics", "PagedKVPool", "supports_prefix_sharing",
+    "PlanRefiner", "make_shadow_measure", "drift_report",
     "BucketPolicy", "FifoScheduler", "ShapeBucketScheduler", "make_scheduler",
 ]

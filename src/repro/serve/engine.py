@@ -36,6 +36,21 @@ step for the same bucket set. Per request the math is unchanged (token
 parity with one-chunk-per-step and unchunked service is pinned by
 ``tests/test_serve_packing.py``); only the schedule gets denser.
 
+Paged KV pool (``paged=True``): per-request caches are replaced by ONE
+engine-wide page pool (``repro.serve.pool.PagedKVPool``) — attention K/V
+live in shared ``[n_pages, Hkv, page, D]`` arrays, each request holds a
+page table, and pages are refcount-alloc'd as chunks are written / freed
+at completion. The page size is the plan's ``kv_page`` cell (VMEM-bounded
+per hardware model, like every other tile in this repo), admission is
+pool-headroom reservation accounting instead of slot counting — so the
+number of concurrently resident prefills is no longer capped at
+``prefill_slots`` — and identical prompt prefixes prefill ONCE, with
+copy-on-write splits at the first divergent write. Every prefill goes
+through the chunk path (a whole prompt is one big chunk when chunking is
+off), decode indirects reads/writes through the page table, and the token
+stream is bit-identical with the per-request-cache engine
+(tests/test_serve_paged.py pins this differentially per trace family).
+
 Admission is delegated to a scheduler (``repro.serve.scheduler``): the
 default :class:`~repro.serve.scheduler.FifoScheduler` preserves the naive
 raw-shape behavior; a :class:`~repro.serve.scheduler.ShapeBucketScheduler`
@@ -76,10 +91,11 @@ from repro.configs.base import ArchConfig
 from repro.core.hardware import PRODUCTION_TARGET, HardwareModel
 from repro.core.plans import (PLAN_SCHEMA_VERSION, PlanResolution,
                               PlanTransferWarning, TilePlan, problem_key)
-from repro.core.tiling import TileShape
+from repro.core.tiling import TileShape, cdiv
 from repro.models import api
 from repro.models import attention as attn_mod
 from repro.serve.metrics import ServeMetrics
+from repro.serve.pool import PagedKVPool
 from repro.serve.scheduler import FifoScheduler
 
 
@@ -133,7 +149,11 @@ class ServeEngine:
                  shadow_measure=None,
                  refiner=None,
                  tracer=None,
-                 instance: Optional[str] = None):
+                 instance: Optional[str] = None,
+                 paged: bool = False,
+                 pool_pages: Optional[int] = None,
+                 page_size: Optional[int] = None,
+                 prefix_sharing: bool = True):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -163,10 +183,21 @@ class ServeEngine:
         # concurrency that lets a short prompt overtake a long one).
         # ``pack_prefill`` packs several chunks per step (implies chunking).
         self.pack_prefill = pack_prefill
-        self.chunk_prefill = chunk_prefill or pack_prefill
+        # Paged mode reuses the chunk-program machinery for every prefill
+        # (a whole prompt is one big chunk when chunking is off — see
+        # _chunk_plan), so the paged engine has ONE prefill path to keep
+        # token-identical with the per-request-cache engine.
+        self.paged = paged
+        self._paged_whole = paged and not (chunk_prefill or pack_prefill)
+        self.chunk_prefill = chunk_prefill or pack_prefill or paged
         self.step_token_budget = step_token_budget
         self.prefill_slots = max(1, prefill_slots)
         self._chunking: List[_ChunkJob] = []
+        # Paged admission: requests the pool cannot reserve pages for yet
+        # (FIFO — the head gets first claim on freed pages).
+        self._pool_wait: List[Any] = []
+        # rid -> next cache write position for pool-backed decodes.
+        self._pos: Dict[int, int] = {}
         self._ready: List[Any] = []   # (Request, state) done prefilling,
         #                               waiting for a free decode slot
         self._held: List[Request] = []  # multi-chunk requests deferred while
@@ -182,7 +213,7 @@ class ServeEngine:
         # engine), one jitted packed program per static segment layout.
         # Unlike _chunk_fns (whose (admit_len, start) key space is linear
         # in buckets x chunks), layouts are cross-products of per-segment
-        # offsets — the cache is FIFO-bounded so a long-running server
+        # offsets — the cache is LRU-bounded so a long-running server
         # cannot accrete compiled programs without limit.
         self._pack_plan_cache: Optional[Any] = None
         self._pack_fns: Dict[Any, Any] = {}         # layout -> fn
@@ -230,9 +261,35 @@ class ServeEngine:
         # Per-slot independent caches (batch=1) batched by stacking.
         self._states = [None] * slots
 
+        # Paged KV pool: page geometry comes from the plan's ``kv_page``
+        # cell (VMEM-bounded per hardware model — v5e and v6e resolve
+        # different page sizes for the same cache length), overridable with
+        # ``page_size``. Default capacity matches what the per-request
+        # engine would reserve for every decode + prefill slot, plus the
+        # pool's copy-on-write slack — so paged mode never fits FEWER
+        # requests, and fits many more whenever prompts only partially
+        # fill their reservations.
+        self.pool: Optional[PagedKVPool] = None
+        if paged:
+            kv_tile = self.tiles.get("kv_page")
+            page = int(page_size if page_size is not None
+                       else kv_tile[0] if kv_tile is not None
+                       else min(512, max_len))
+            n_pages = pool_pages if pool_pages is not None else (
+                (slots + self.prefill_slots)
+                * (cdiv(max_len, page) + PagedKVPool.RESERVE_SLACK))
+            self.pool = PagedKVPool(
+                cfg, n_pages=n_pages, page=page, max_len=max_len,
+                dtype=dtype, prefix_sharing=prefix_sharing,
+                metrics=self.metrics, trace=self._trace)
+
         self._decode = jax.jit(
             lambda p, tok, st: api.decode_step(p, cfg, tok, st,
                                                tiles=self.tiles or None)
+        )
+        self._decode_paged = jax.jit(
+            lambda p, tok, st, arrays, table: api.decode_step_paged(
+                p, cfg, tok, st, arrays, table, tiles=self.tiles or None)
         )
         # Prefill programs are built per admitted length so each shape
         # family gets its own exactly-resolved tiles (see _prefill_fn).
@@ -432,6 +489,10 @@ class ServeEngine:
             lambda p, tok, st: api.decode_step(p, cfg, tok, st,
                                                tiles=self.tiles or None)
         )
+        self._decode_paged = jax.jit(
+            lambda p, tok, st, arrays, table: api.decode_step_paged(
+                p, cfg, tok, st, arrays, table, tiles=self.tiles or None)
+        )
         if self._trace is not None:
             refined_from = (plans.meta.get("refined_from")
                             if plans is not None else None)
@@ -575,6 +636,11 @@ class ServeEngine:
             # A mixed step must fit one chunk + the whole decode batch.
             chunk = min(chunk, max(1, self.step_token_budget - self.slots))
         chunk = max(1, min(chunk, admit_len))
+        if self._paged_whole:
+            # Paged without explicit chunking: the whole prompt is ONE
+            # chunk, so the paged engine reproduces the monolithic-prefill
+            # schedule exactly (single program per admitted length).
+            chunk = admit_len
 
         tiles, sources = self._model_tiles_for(chunk)
         if tile is not None:
@@ -624,10 +690,17 @@ class ServeEngine:
             return fn
         _, tiles, _ = self._chunk_plan(admit_len)
         cfg = self.cfg
-        fn = jax.jit(
-            lambda p, toks, st: api.prefill_chunk(
-                p, cfg, toks, st, start, tiles=tiles or None)
-        )
+        if self.paged:
+            fn = jax.jit(
+                lambda p, toks, st, arrays, table: api.prefill_chunk_paged(
+                    p, cfg, toks, st, start, arrays, table,
+                    tiles=tiles or None)
+            )
+        else:
+            fn = jax.jit(
+                lambda p, toks, st: api.prefill_chunk(
+                    p, cfg, toks, st, start, tiles=tiles or None)
+            )
         self._chunk_fns[key] = fn
         return fn
 
@@ -673,15 +746,23 @@ class ServeEngine:
         return width
 
     # Bound on cached packed programs (and their tile events): beyond it
-    # the oldest layout is evicted and would retrace if seen again.
+    # the least-recently-USED layout is evicted and would retrace if seen
+    # again. Eviction must be LRU, not FIFO: a hot layout (a steady-state
+    # pack shape hit every few steps) is also one of the OLDEST insertions,
+    # so insertion-order eviction retraces exactly the programs a
+    # long-running server needs most (tests/test_serve_paged.py pins a hot
+    # layout surviving cap-many cold ones).
     PACK_FN_CACHE_CAP = 256
 
     def _pack_fn(self, layout):
         """The jitted packed program for one static segment layout
         (tuple of per-segment (start, len) pairs — the packed analogue of
         the per-(admit_len, start) chunk programs)."""
-        fn = self._pack_fns.get(layout)
+        fn = self._pack_fns.pop(layout, None)
         if fn is not None:
+            # Re-insert at the end: recency, not insertion order, decides
+            # eviction.
+            self._pack_fns[layout] = fn
             return fn
         while len(self._pack_fns) >= self.PACK_FN_CACHE_CAP:
             oldest = next(iter(self._pack_fns))
@@ -689,18 +770,31 @@ class ServeEngine:
             self._pack_tile_events.pop(oldest, None)
         _, tiles, _ = self._pack_plan()
         cfg = self.cfg
-        fn = jax.jit(
-            lambda p, toks, sts: api.prefill_packed(
-                p, cfg, toks, sts, layout, tiles=tiles or None)
-        )
+        if self.paged:
+            fn = jax.jit(
+                lambda p, toks, sts, arrays, tbls: api.prefill_packed_paged(
+                    p, cfg, toks, sts, layout, arrays, tbls,
+                    tiles=tiles or None)
+            )
+        else:
+            fn = jax.jit(
+                lambda p, toks, sts: api.prefill_packed(
+                    p, cfg, toks, sts, layout, tiles=tiles or None)
+            )
         self._pack_fns[layout] = fn
         return fn
 
     def _ensure_state(self, job: _ChunkJob) -> None:
         if job.state is None:
-            job.state = api.make_serve_state(
-                self.cfg, 1, self.max_len, self.dtype,
-                ring_local=bool(self.cfg.attn_window))
+            if self.paged:
+                # Attention K/V live in the shared pool; the per-request
+                # state carries only scalar positions (+ recurrent/SSD
+                # carried state for hybrids).
+                job.state = api.make_paged_state(self.cfg, self.dtype)
+            else:
+                job.state = api.make_serve_state(
+                    self.cfg, 1, self.max_len, self.dtype,
+                    ring_local=bool(self.cfg.attn_window))
 
     def _advance_job(self, job: _ChunkJob, take: int, events, logits,
                      packed: bool = False, pack_n: int = 1, lane: int = 0,
@@ -740,8 +834,22 @@ class ServeEngine:
         fn = self._pack_fn(layout)
         states = tuple(job.state for job in jobs)
         events = self._pack_tile_events.get(layout)
-        if events is None:
-            captured: List[Dict[str, Any]] = []
+        if self.paged:
+            for job, (start, take) in zip(jobs, layout):
+                self.pool.prepare_span(job.req.rid, start, take)
+            tables = tuple(self.pool.device_table(job.req.rid)
+                           for job in jobs)
+            args = (self.params, toks, states, self.pool.arrays, tables)
+            if events is None:
+                captured: List[Dict[str, Any]] = []
+                with attn_mod.capture_tile_events(captured.append):
+                    logits, new_states, self.pool.arrays = fn(*args)
+                events = self._dedupe_events(captured)
+                self._pack_tile_events[layout] = events
+            else:
+                logits, new_states, self.pool.arrays = fn(*args)
+        elif events is None:
+            captured = []
             with attn_mod.capture_tile_events(captured.append):
                 logits, new_states = fn(self.params, toks, states)
             events = self._dedupe_events(captured)
@@ -803,6 +911,10 @@ class ServeEngine:
         prompts must not occupy every prefill slot and starve short ones —
         the head-of-line blocking chunking exists to cut. Deferred longs
         keep their order and start as soon as the running one finishes.
+        Paged mode lifts the one-long rule: longs cannot starve shorts by
+        occupying slots (the pool gate, not ``prefill_slots``, bounds the
+        resident set, and the SRPT pack rule still serves shorts first),
+        so many partial long prefills accumulate pages concurrently.
         """
         free = [i for i, r in enumerate(self._active) if r is None]
         while free and self._ready:
@@ -821,9 +933,30 @@ class ServeEngine:
             return
         long_in_flight = any(len(j.prompt) > j.chunk_len
                              for j in self._chunking)
-        while len(self._chunking) < self.prefill_slots:
-            req = self._next_admission(long_ok=not long_in_flight)
+        # Paged mode admits PAST ``prefill_slots``: the pool's reservation
+        # accounting (PagedKVPool.can_admit) is the real resident-set gate
+        # — a request holds only the pages it has written, so many partial
+        # prefills coexist where whole-cache slots fit few. The count cap
+        # is only a retrace/bookkeeping safety bound.
+        cap = (8 * (self.slots + self.prefill_slots) if self.paged
+               else self.prefill_slots)
+        while len(self._chunking) < cap:
+            req = None
+            if self.paged and self._pool_wait:
+                # Pool-starved requests hold a FIFO claim on freed pages:
+                # the head admits first or nobody does (no overtaking).
+                if not self.pool.can_admit(
+                        self._pool_estimate(self._pool_wait[0])):
+                    break
+                req = self._pool_wait.pop(0)
             if req is None:
+                req = self._next_admission(
+                    long_ok=self.paged or not long_in_flight)
+            if req is None:
+                break
+            if self.paged and not self.pool.can_admit(
+                    self._pool_estimate(req)):
+                self._pool_wait.append(req)
                 break
             prompt = np.asarray(self.scheduler.prepare(req), np.int32)
             chunk_len, _, _ = self._chunk_plan(len(prompt))
@@ -834,9 +967,23 @@ class ServeEngine:
                 self._trace.admit(
                     req.rid, len(prompt),
                     now - submit_t if submit_t is not None else 0.0)
+            hit = 0
+            if self.paged:
+                self.pool.register_request(
+                    req.rid, len(prompt) + req.max_new_tokens - 1)
+                # A shared-prefix hit maps already-prefilled pages and the
+                # job starts its chunks at the divergence point.
+                hit = self.pool.lookup_prefix(req.rid, prompt.tolist())
             self._chunking.append(_ChunkJob(
-                req=req, prompt=prompt, chunk_len=chunk_len,
+                req=req, prompt=prompt, chunk_len=chunk_len, done=hit,
                 last_t=submit_t if submit_t is not None else self._clock()))
+
+    def _pool_estimate(self, req: Request) -> int:
+        """Worst-case cache positions a request will write (for the pool
+        admission gate): padded prompt + generation minus the never-cached
+        final sampled token."""
+        admit_len = req.bucket if req.bucket is not None else len(req.prompt)
+        return admit_len + req.max_new_tokens - 1
 
     # Every AGING_PERIOD-th chunk goes to the OLDEST in-flight prefill
     # instead of the shortest-remaining one: a sustained stream of short
@@ -872,8 +1019,20 @@ class ServeEngine:
         toks = jnp.asarray(job.prompt[None, start:start + length])
         key = (len(job.prompt), start)
         events = self._chunk_tile_events.get(key)
-        if events is None:
-            captured: List[Dict[str, Any]] = []
+        if self.paged:
+            self.pool.prepare_span(job.req.rid, start, length)
+            args = (self.params, toks, job.state, self.pool.arrays,
+                    self.pool.device_table(job.req.rid))
+            if events is None:
+                captured: List[Dict[str, Any]] = []
+                with attn_mod.capture_tile_events(captured.append):
+                    logits, job.state, self.pool.arrays = fn(*args)
+                events = self._dedupe_events(captured)
+                self._chunk_tile_events[key] = events
+            else:
+                logits, job.state, self.pool.arrays = fn(*args)
+        elif events is None:
+            captured = []
             with attn_mod.capture_tile_events(captured.append):
                 logits, job.state = fn(self.params, toks, job.state)
             events = self._dedupe_events(captured)
@@ -910,13 +1069,23 @@ class ServeEngine:
         self.metrics.record_first_token(req.rid, req.bucket)
         if self._trace is not None:
             self._trace.first_token(req.rid, req.bucket, sub_t)
+        if self.paged:
+            # The prefilled pages become shareable fleet-wide (weak
+            # registry — holds no refs, never delays a free).
+            self.pool.register_prefix(req.rid, job.prompt.tolist())
         if len(req.out_tokens) >= req.max_new_tokens:
             req.done = True
+            if self.paged:
+                self.pool.release(req.rid)
             self._finished.append(req)
             self.metrics.record_complete()
             if self._trace is not None:
                 self._trace.finish(req.rid, len(req.out_tokens))
         else:
+            if self.paged:
+                # Next cache write (first decode) lands right after the
+                # prompt.
+                self._pos[req.rid] = len(job.prompt)
             self._ready.append((req, job.state))
 
     def add_request(self, prompt: np.ndarray, max_new_tokens: int = 16,
@@ -943,7 +1112,8 @@ class ServeEngine:
                 getattr(self.scheduler, "last_reject_reason", "admission"),
                 len(prompt))
         self.metrics.record_submit(rid)
-        self._record_backlog(self.scheduler.pending() + len(self._held))
+        self._record_backlog(self.scheduler.pending() + len(self._held)
+                             + len(self._pool_wait))
         if self._trace is not None:
             self._trace.submit(rid, len(prompt), req.bucket)
         return rid
@@ -953,7 +1123,8 @@ class ServeEngine:
         (a rejected submit is exactly when backlog pressure peaked), and a
         trace instant carrying the reason."""
         self.metrics.record_reject(reason=reason)
-        self._record_backlog(self.scheduler.pending() + len(self._held))
+        self._record_backlog(self.scheduler.pending() + len(self._held)
+                             + len(self._pool_wait))
         if self._trace is not None:
             self._trace.reject(reason, prompt_len)
         return None
@@ -1037,8 +1208,28 @@ class ServeEngine:
             if trace_rids is not None:
                 trace_rids.append(req.rid)
             last = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
-            if self._decode_tile_events is None:
-                captured: List[Dict[str, Any]] = []
+            if self.paged:
+                # The decode program writes this token's K/V at the next
+                # cache position — make its page writable (CoW-splitting a
+                # shared one) before the launch.
+                pos = self._pos[req.rid]
+                self.pool.prepare_span(req.rid, pos, 1)
+                self._pos[req.rid] = pos + 1
+                args = (self.params, last, self._states[i],
+                        self.pool.arrays, self.pool.device_table(req.rid))
+                if self._decode_tile_events is None:
+                    captured: List[Dict[str, Any]] = []
+                    with attn_mod.capture_tile_events(captured.append):
+                        (logits, self._states[i],
+                         self.pool.arrays) = self._decode_paged(*args)
+                    self._decode_tile_events = self._dedupe_events(captured)
+                    for ev in self._decode_tile_events:
+                        self._record_tile_event(ev)
+                else:
+                    (logits, self._states[i],
+                     self.pool.arrays) = self._decode_paged(*args)
+            elif self._decode_tile_events is None:
+                captured = []
                 with attn_mod.capture_tile_events(captured.append):
                     logits, self._states[i] = self._decode(
                         self.params, last, self._states[i])
@@ -1054,6 +1245,9 @@ class ServeEngine:
                 req.done = True
                 self._active[i] = None
                 self._states[i] = None
+                if self.paged:
+                    self.pool.release(req.rid)
+                    self._pos.pop(req.rid, None)
                 self._finished.append(req)
                 self.metrics.record_complete()
                 if self._trace is not None:
@@ -1078,6 +1272,15 @@ class ServeEngine:
         prefill_tokens, segments = self._admit()
         self._record_backlog(self.scheduler.pending())
         n = self._decode_all()
+        # Second admission pass: requests that FINISHED in this step's
+        # decode released their slots (and caches) above — admitting again
+        # lets a queued request claim the freed headroom in the same step
+        # instead of idling one extra step per turnover. Admission-order
+        # and token math are untouched; only the latency of reusing a
+        # freed slot changes.
+        extra_tokens, extra_segments = self._admit()
+        prefill_tokens += extra_tokens
+        segments = segments + extra_segments
         self.last_step_stats = {"prefill_tokens": prefill_tokens,
                                 "decode_tokens": n,
                                 "packed_chunks": 0, "packed_rids": (),
@@ -1092,7 +1295,8 @@ class ServeEngine:
         t0 = self._clock() if self._trace is not None else 0.0
         self._admit_chunked()
         # Held (deferred multi-chunk) requests are still backlog.
-        self._record_backlog(self.scheduler.pending() + len(self._held))
+        self._record_backlog(self.scheduler.pending() + len(self._held)
+                             + len(self._pool_wait))
         prefill_tokens = 0
         packed_rids: tuple = ()
         segments: tuple = ()
@@ -1122,6 +1326,18 @@ class ServeEngine:
                 # rides the same mixed step.
                 self._admit_chunked()
         n = self._decode_all()
+        # Second admission pass (same rationale as step()): decode just
+        # released the slots/pool pages of every request it finished, so a
+        # waiting request admits THIS step — in paged mode this is also
+        # what lets a pool-starved request claim freed pages without a
+        # one-step bubble.
+        self._admit_chunked()
+        if self.paged:
+            self.metrics.record_pool(self.pool.used_pages,
+                                     self.pool.n_pages)
+            if self._trace is not None:
+                self._trace.pool_occupancy(self.pool.used_pages,
+                                           self.pool.n_pages)
         self.last_step_stats = {"prefill_tokens": prefill_tokens,
                                 "decode_tokens": n,
                                 "packed_chunks": len(packed_rids),
@@ -1131,7 +1347,8 @@ class ServeEngine:
         self.steps_run += 1
         if self._trace is not None:
             self._trace.step_mark(t0, self.last_step_stats, self.steps_run)
-        return n + len(self._chunking) + len(self._ready) + len(self._held)
+        return (n + len(self._chunking) + len(self._ready)
+                + len(self._held) + len(self._pool_wait))
 
     def _next_pack(self):
         """The chunks this packed step runs: scheduler knapsack over the
@@ -1149,9 +1366,10 @@ class ServeEngine:
 
     def in_flight(self) -> int:
         """Requests holding engine state (decode slots + partial prefills +
-        deferred multi-chunk admissions)."""
+        deferred multi-chunk admissions + pool-starved waiters)."""
         return (sum(r is not None for r in self._active)
-                + len(self._chunking) + len(self._ready) + len(self._held))
+                + len(self._chunking) + len(self._ready)
+                + len(self._held) + len(self._pool_wait))
 
     def run_until_done(self, max_steps: int = 1000) -> List[Request]:
         self._finished = []

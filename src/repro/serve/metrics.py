@@ -38,6 +38,11 @@ Measured quantities follow serving convention:
   regression signal; a window wider than the retained circular buffer is
   flagged ``clipped`` so guards don't act on a corrupted window.
 
+* **Paged KV pool**: page alloc/free counts, copy-on-write splits,
+  shared-prefix lookup/hit counts with tokens-reused, and pool occupancy
+  samples (peak + mean pages in use) — the ``repro.serve.pool`` health
+  readout (``prefix_hit_rate`` is the fleet-wide prefill-dedup win).
+
 Metrics are aggregates; the causal, per-event record (which requests shared
 a packed step, which plan entry resolved each kernel launch, where a chunk
 sat queued) is the trace layer — see :mod:`repro.obs.trace` and the
@@ -65,7 +70,9 @@ PLAN_SOURCES = ("exact", "nearest_shape", "cross_hardware", "fallback",
 
 # Bump on any change to the ``as_dict()`` layout (keys, nesting, units) so
 # downstream consumers of exported metrics artifacts can gate on it.
-METRICS_SCHEMA_VERSION = 1
+# v2: added the "pool" section (paged KV pool occupancy, prefix reuse,
+# copy-on-write splits).
+METRICS_SCHEMA_VERSION = 2
 
 
 def nearest_rank(xs: List[float], q: float) -> float:
@@ -164,6 +171,18 @@ class ServeMetrics:
         self.shadow_steps = 0
         self.shadow_time: Dict[tuple, _LatencyStat] = defaultdict(_LatencyStat)
         self.shadow_incumbents: Dict[str, str] = {}
+        # Paged KV pool (repro.serve.pool): page churn, shared-prefix
+        # reuse, copy-on-write splits, and occupancy samples.
+        self.pool_page_allocs = 0
+        self.pool_page_frees = 0
+        self.pool_cow_splits = 0
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefix_tokens_reused = 0
+        self.pool_used_max = 0
+        self.pool_total = 0
+        self._pool_used_sum = 0
+        self._pool_used_n = 0
 
     # -- request lifecycle ---------------------------------------------------
     def record_submit(self, rid: int) -> None:
@@ -232,6 +251,41 @@ class ServeMetrics:
         self.shadow_time[(kernel, key)].record(dt)
         if incumbent:
             self.shadow_incumbents[kernel] = key
+
+    # -- paged KV pool -------------------------------------------------------
+    def record_page_alloc(self, n: int = 1) -> None:
+        self.pool_page_allocs += n
+
+    def record_page_free(self, n: int = 1) -> None:
+        self.pool_page_frees += n
+
+    def record_cow_split(self, n: int = 1) -> None:
+        self.pool_cow_splits += n
+
+    def record_prefix_lookup(self, hit_tokens: int) -> None:
+        """One shared-prefix lookup; ``hit_tokens`` > 0 means the request
+        mapped that many already-prefilled tokens instead of recomputing
+        them (the fleet-wide prefill dedup win)."""
+        self.prefix_lookups += 1
+        if hit_tokens > 0:
+            self.prefix_hits += 1
+            self.prefix_tokens_reused += hit_tokens
+
+    def record_pool(self, used: int, total: int) -> None:
+        """One pool-occupancy sample (pages in use / pool size)."""
+        self.pool_total = total
+        self.pool_used_max = max(self.pool_used_max, used)
+        self._pool_used_sum += used
+        self._pool_used_n += 1
+
+    def prefix_hit_rate(self) -> float:
+        return (self.prefix_hits / self.prefix_lookups
+                if self.prefix_lookups else 0.0)
+
+    @property
+    def pool_used_mean(self) -> float:
+        return (self._pool_used_sum / self._pool_used_n
+                if self._pool_used_n else 0.0)
 
     # -- TTFT windows (rollout guard) ----------------------------------------
     def ttft_counts(self) -> Dict[object, int]:
@@ -344,6 +398,18 @@ class ServeMetrics:
                     for kernel in sorted({k for k, _ in self.shadow_time})
                 },
             },
+            "pool": {
+                "page_allocs": self.pool_page_allocs,
+                "page_frees": self.pool_page_frees,
+                "cow_splits": self.pool_cow_splits,
+                "prefix_lookups": self.prefix_lookups,
+                "prefix_hits": self.prefix_hits,
+                "prefix_hit_rate": self.prefix_hit_rate(),
+                "prefix_tokens_reused": self.prefix_tokens_reused,
+                "pages_total": self.pool_total,
+                "pages_used_max": self.pool_used_max,
+                "pages_used_mean": self.pool_used_mean,
+            },
             "ttft_s": {str(b): s.as_dict() for b, s in sorted(
                 self.ttft.items(), key=lambda kv: str(kv[0]))},
             "tpot_s": {str(b): s.as_dict() for b, s in sorted(
@@ -393,6 +459,15 @@ class ServeMetrics:
             lines.append(
                 f"  shadow: {self.shadow_steps} diverted steps, "
                 f"{len(self.shadow_time)} (kernel, tile) cells measured")
+        if self.pool_total:
+            lines.append(
+                f"  kv pool: {self.pool_used_max}/{self.pool_total} pages "
+                f"peak ({self.pool_used_mean:.1f} mean), "
+                f"{self.pool_page_allocs} allocs / "
+                f"{self.pool_page_frees} frees, "
+                f"{self.pool_cow_splits} cow splits, "
+                f"prefix hit rate {self.prefix_hit_rate():.2f} "
+                f"({self.prefix_tokens_reused} tokens reused)")
         for label, table in (("ttft", d["ttft_s"]), ("tpot", d["tpot_s"])):
             for bucket, stat in table.items():
                 lines.append(

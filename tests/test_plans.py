@@ -498,6 +498,95 @@ def test_serve_bucket_cells_include_packed():
     assert chunked_sqs == {16, 32}
 
 
+# -- kv_page cells: paged-pool page geometry diverges per hardware model -----
+
+def _page_prob(skv, d=128, hkv=8):
+    return dict(skv=skv, d=d, hkv=hkv)
+
+
+KV_PAGE_CACHE_LENS = (1024, 8192, 32768)
+
+
+def test_kv_page_cells_pick_different_page_across_hardware():
+    """For the SAME cache length, v5e and v6e compile different KV page
+    sizes: VMEM bounds the resident page a gather/append works on, and v6e
+    carries 2x the VMEM — the paper's per-model tile optimum applied to
+    the paged pool's page-geometry axis (serve/pool.py)."""
+    from repro.core.plans import compile_entry
+
+    best = {}
+    for hw in (TPU_V5E, TPU_V6E):
+        for skv in KV_PAGE_CACHE_LENS:
+            entry = compile_entry("kv_page", _page_prob(skv), "bfloat16", hw)
+            best[(hw.name, skv)] = entry.tile[0]
+    diverged = [skv for skv in KV_PAGE_CACHE_LENS
+                if best[("tpu_v5e", skv)] != best[("tpu_v6e", skv)]]
+    assert diverged, f"no kv_page cell diverged across hardware: {best}"
+
+
+def test_kv_page_cell_goldens():
+    """Golden page sizes: larger pages amortize per-page table/DMA
+    bookkeeping (fewer pages per request) until the resident page block
+    exhausts the VMEM share — so the optimum is the VMEM-bounded maximum,
+    2x larger on v6e (2x VMEM) than v5e at steady state, and a short cache
+    keeps the whole-cache single page."""
+    from repro.core.plans import compile_entry
+
+    expect = {
+        ("tpu_v5e", 1024): 1024,
+        ("tpu_v5e", 8192): 1024,
+        ("tpu_v5e", 32768): 1024,
+        ("tpu_v6e", 1024): 1024,
+        ("tpu_v6e", 8192): 2048,
+        ("tpu_v6e", 32768): 2048,
+    }
+    for (hw_name, skv), page in expect.items():
+        hw = TPU_V5E if hw_name == "tpu_v5e" else TPU_V6E
+        entry = compile_entry("kv_page", _page_prob(skv), "bfloat16", hw)
+        assert entry.tile.dims == (page,), (
+            f"{hw_name} skv={skv}: got {entry.tile}, want ({page},)")
+        assert entry.dominant == "memory"    # paging is a bandwidth story
+        assert entry.sensitivity > 1.0       # the curve is not flat
+        assert entry.curve[0][0] == entry.tile.dims
+
+
+def test_kernel_problems_decode_includes_kv_page():
+    """The kv_page cell rides the decode geometry (the steady-state page
+    reader), so --serve-buckets artifacts sweep it with no extra flag."""
+    from repro.launch.compile_plans import serve_bucket_cells
+
+    cfg = configs.get_smoke("qwen2-1.5b")
+    probs = kernel_problems(cfg, 2, 64, "decode")
+    assert "kv_page" in probs
+    assert probs["kv_page"]["skv"] == 64
+    assert "kv_page" not in kernel_problems(cfg, 1, 64, "prefill")
+    cells = serve_bucket_cells(["qwen2-1.5b"], (16, 32), slots=2,
+                               max_len=64, smoke=True)
+    assert {dict(p)["skv"] for k, p in cells if k == "kv_page"} == {64}
+
+
+def test_paged_engine_reads_page_from_plan():
+    """A paged ServeEngine built on a compiled plan adopts the resolved
+    kv_page tile as its pool's page size — the plan actually shapes the
+    pool, it is not just bookkeeping."""
+    from repro.core.plans import compile_plan as _compile
+
+    cfg = configs.get_smoke("qwen2-1.5b")
+    probs = kernel_problems(cfg, 2, 64, "decode")
+    plan = _compile([(k, p, "float32", PRODUCTION_TARGET)
+                     for k, p in probs.items()])
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_len=64, slots=2, plans=plan,
+                      hardware=PRODUCTION_TARGET, paged=True)
+    res = plan.resolve("kv_page", probs["kv_page"], "float32",
+                       PRODUCTION_TARGET)
+    assert res is not None and res.source == "exact"
+    assert eng.pool is not None
+    assert eng.pool.page == int(res.tile[0])
+    assert eng.max_len % eng.pool.page == 0 or eng.pool.n_pt * \
+        eng.pool.page >= eng.max_len
+
+
 # -- wall-clock measure path -------------------------------------------------
 
 def test_measure_fn_gated_off_without_tpu():

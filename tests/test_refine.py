@@ -194,7 +194,7 @@ def test_metrics_as_dict_golden():
               "p50_s": 0.5, "p95_s": 0.5, "p99_s": 0.5}
     d = m.as_dict()
     assert d == {
-        "metrics_schema": 1,
+        "metrics_schema": 2,
         "requests": {"submitted": 1, "rejected": 0, "completed": 0,
                      "tokens_out": 1},
         "rejects": {},
@@ -210,6 +210,12 @@ def test_metrics_as_dict_golden():
                 "(16, 64)": {"count": 1, "mean_s": 0.25, "max_s": 0.25,
                              "p50_s": 0.25, "p95_s": 0.25, "p99_s": 0.25},
             }},
+        },
+        "pool": {
+            "page_allocs": 0, "page_frees": 0, "cow_splits": 0,
+            "prefix_lookups": 0, "prefix_hits": 0, "prefix_hit_rate": 0.0,
+            "prefix_tokens_reused": 0, "pages_total": 0,
+            "pages_used_max": 0, "pages_used_mean": 0.0,
         },
         "ttft_s": {"64": point5},
         "tpot_s": {},
