@@ -1,0 +1,475 @@
+"""Fleet fault tolerance under scripted chaos, on the virtual clock.
+
+A heterogeneous fleet (tpu_v5e + tpu_v6e, one paged chunk-prefill engine
+each) serves a fixed request trace while a deterministic
+:class:`~repro.serve.faults.FaultScript` kills, stalls, drains, degrades,
+and joins instances at scripted step numbers. Because every scenario runs
+the real ``ServeEngine``/``FleetRouter`` on a shared cost-model virtual
+clock (per-hardware step costs from the compiled plan, scaled by the
+injector's degrade factor), the whole chaos run is replayable: same
+script, same trace, byte-identical Perfetto export.
+
+Scenarios (each asserted against the undisturbed baseline run):
+
+  baseline   no faults — reference tokens per fleet id (fid) + pooled TTFT;
+  kill       an instance dies mid-run (liveness detection): its queued and
+             in-flight requests re-queue on the survivor, re-prefilled from
+             their original prompts;
+  stall      an instance wedges (steps become no-ops): only the progress
+             watchdog can catch it; a later scripted recovery returns the
+             (evicted, empty) instance to rotation and work stealing gives
+             it load again;
+  drain      graceful retirement (queued work handed off for free, no retry
+             consumed) while the other instance runs latency-degraded;
+  join       the fleet starts with ONE instance; a tpu_v6e engine joins
+             mid-run and serves requests with plan cells resolved for its
+             OWN hardware (plan_resolve audit events on its pid prove it);
+  determinism  the kill scenario replayed from scratch must export a
+             byte-identical trace.
+
+Asserted invariants (exit 1 on violation; CI runs ``--smoke``):
+  1. zero loss / zero duplication: every scenario finishes exactly the
+     baseline's fid set, with ``router.lost == 0``;
+  2. token parity: recovered/stolen/drained requests produce byte-equal
+     greedy tokens vs the undisturbed run (re-prefill from the original
+     prompt, never from dead caches);
+  3. every engine's paged pool drains refcount-balanced — including the
+     killed/stalled instances whose residents were force-evicted;
+  4. pooled p95/p99 TTFT inflation vs baseline stays under
+     ``TTFT_P95_BOUND``/``TTFT_P99_BOUND`` (recovery is not free, but it
+     is bounded), and the trace's submit-anchored ``ttft`` spans reproduce
+     the pooled metrics p95 exactly;
+  5. failure/recovery/drain/join events land in the trace's ``fleet`` lane
+     with the expected detection channel (liveness for kill, watchdog for
+     stall);
+  6. the joiner's ``chunked_prefill`` cell compiles a different chunk
+     length than the incumbent's hardware at full dims (the paper's
+     per-model optimum, carried through engine join).
+
+``--trace-out`` writes the kill scenario's trace; the determinism re-run
+is written next to it as ``<stem>.rerun<suffix>`` so CI can
+``trace_report --diff`` the pair (the bench itself asserts byte
+equality).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+SMOKE = dict(
+    edges=(64, 1024),
+    lens=(18, 40, 900, 22, 55, 33, 700, 12, 47, 60, 25, 38, 810, 19),
+    new_tokens=3,
+    slots=2,
+    step_token_budget=200,
+    prefill_slots=4,
+    arrivals_per_step=2,
+)
+FULL = dict(
+    edges=(512, 32768),
+    lens=(120, 300, 30000, 200, 410, 90, 28000, 350, 260, 440, 160, 480,
+          31000, 210),
+    new_tokens=3,
+    slots=2,
+    step_token_budget=2600,
+    prefill_slots=4,
+    arrivals_per_step=2,
+)
+# instance name -> hardware model; "b" is the heterogeneous partner and
+# (in the join scenario) the mid-run joiner.
+FLEET = (("a", "tpu_v5e"), ("b", "tpu_v6e"))
+ARCH = "qwen2-1.5b"
+STEP_OVERHEAD_S = 20e-6
+WATCHDOG_THRESHOLD = 4
+RETRY_BUDGET = 2
+# Chaos TTFT tail vs the undisturbed baseline: recovery re-prefills lost
+# work and drains it through fewer instances, so the tail inflates — the
+# bound asserts it stays a small multiple, not unbounded (measured: the
+# worst scenario sits near 2.2x on both the smoke and full traces).
+TTFT_P95_BOUND = 4.0
+TTFT_P99_BOUND = 4.0
+FULL_REF_LEN = 32768
+
+
+class VirtualClock:
+    """Injectable engine clock; the driver advances it between steps."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def load_or_compile_plan(path: Optional[str], edges, slots: int,
+                         max_len: int, print_fn) -> object:
+    """Reuse a compiled artifact when it covers this bench's shape family
+    on BOTH fleet hardware models; compile the serving cells otherwise."""
+    from repro.launch.compile_plans import (
+        load_or_compile_cells, serve_bucket_cells,
+    )
+
+    cells = serve_bucket_cells([ARCH], edges, slots, max_len, smoke=True)
+    hw_names = tuple(sorted({hw for _, hw in FLEET}))
+    return load_or_compile_cells(
+        path, cells, hw_names,
+        meta={"generated_by": "bench_fleet_chaos"}, print_fn=print_fn)
+
+
+def step_cost_model(slots: int, max_len: int) -> Dict[str, Tuple[float,
+                                                                 float]]:
+    """hardware -> (per-prefill-token s, per-decode-step s), costed at the
+    FULL architecture's dims so the clock keeps the real cost regime (the
+    smoke trace only scales the executed lengths). Per-hardware constants:
+    the v6e joiner really is faster per step, so lockstep wall time follows
+    the slowest stepped instance."""
+    from repro import configs
+    from repro.core import HARDWARE_REGISTRY, Autotuner
+    from repro.core.plans import compile_entry
+    from repro.launch.specs import kernel_problems
+
+    cfg_full = configs.get_arch(ARCH)
+    costs = {}
+    for hw_name in sorted({hw for _, hw in FLEET}):
+        hw = HARDWARE_REGISTRY[hw_name]
+        tuner = Autotuner()
+        pf_prob = kernel_problems(cfg_full, 1, FULL_REF_LEN,
+                                  "prefill")["flash_attention"]
+        t_pf = compile_entry("flash_attention", pf_prob, "float32", hw,
+                             autotuner=tuner).score_s / FULL_REF_LEN
+        dec_prob = kernel_problems(cfg_full, slots, max_len,
+                                   "decode")["flash_decode"]
+        t_dec = compile_entry("flash_decode", dec_prob, "float32", hw,
+                              autotuner=tuner).score_s
+        costs[hw_name] = (t_pf, t_dec)
+    return costs
+
+
+def make_trace(p: dict, vocab: int) -> List[np.ndarray]:
+    rng = np.random.default_rng(7)
+    return [rng.integers(2, vocab, size=n).astype(np.int32)
+            for n in p["lens"]]
+
+
+def drive(router, clock: VirtualClock, injector, trace, p,
+          costs: Dict[str, Tuple[float, float]],
+          max_steps: int = 20000) -> None:
+    """Open-loop drive on the shared virtual clock. Lockstep: the clock
+    advances by the slowest instance that actually stepped this tick
+    (``steps_run`` delta), scaled by the injector's degrade factor."""
+    i = 0
+    for tick in range(max_steps):
+        while i < len(trace) and i < p["arrivals_per_step"] * (tick + 1):
+            d = router.route(trace[i], max_new_tokens=p["new_tokens"])
+            if d is None:
+                break          # backpressure: retry this request next tick
+            i += 1
+        before = {n: eng.steps_run for n, eng in router.engines.items()}
+        residue = router.step_all()
+        cost = 0.0
+        for n, eng in router.engines.items():
+            if eng.steps_run == before.get(n):
+                continue       # skipped (dead/stalled/drained) or no-op
+            t_pf, t_dec = costs[eng.hardware.name]
+            stats = eng.last_step_stats
+            c = (stats["prefill_tokens"] * t_pf
+                 + (t_dec if stats["decode_tokens"] else 0.0))
+            factor = injector.latency_factor(n) if injector else 1.0
+            cost = max(cost, c * factor)
+        clock.t += STEP_OVERHEAD_S + cost
+        if not residue and not router.pending() and i >= len(trace):
+            return
+    raise RuntimeError(f"chaos drive not drained after {max_steps} steps")
+
+
+def run_scenario(label: str, p, cfg, params, plan, policy_edges,
+                 script_events, costs, names=FLEET, with_trace: bool = True):
+    """One fleet + one fault script + the shared trace; returns the
+    scenario record (results, pooled TTFT, trace handle, router)."""
+    import jax  # noqa: F401  (engines already built against jax params)
+
+    from repro.core import HARDWARE_REGISTRY
+    from repro.obs import Tracer
+    from repro.serve import (BucketPolicy, FaultEvent, FaultInjector,
+                             FaultScript, FleetRouter, ServeEngine,
+                             ShapeBucketScheduler)
+
+    p_top = max(policy_edges)
+    max_len = p_top + p["new_tokens"] + 8
+    clock = VirtualClock()
+    tracer = Tracer(clock=clock) if with_trace else None
+    policy = BucketPolicy(policy_edges, max_queue=len(p["lens"]) + 8)
+
+    def make_engine(name: str, hw_name: str) -> ServeEngine:
+        return ServeEngine(
+            cfg, params, max_len=max_len, slots=p["slots"],
+            plans=plan, hardware=HARDWARE_REGISTRY[hw_name],
+            scheduler=ShapeBucketScheduler(policy),
+            clock=clock, chunk_prefill=True, paged=True,
+            prefill_slots=p["prefill_slots"],
+            step_token_budget=p["step_token_budget"],
+            tracer=tracer, instance=name)
+
+    engines = {name: make_engine(name, hw) for name, hw in names}
+    script = FaultScript()
+    for ev in script_events:
+        if ev.get("action") == "join":
+            hw = ev.pop("hardware")
+            name = ev["instance"]
+            ev["make_engine"] = lambda name=name, hw=hw: make_engine(name, hw)
+        script.add(FaultEvent(**ev))
+    injector = FaultInjector(script)
+    router = FleetRouter(engines, policy, tracer=tracer,
+                         watchdog_threshold=WATCHDOG_THRESHOLD,
+                         retry_budget=RETRY_BUDGET, injector=injector)
+    trace = make_trace(p, cfg.vocab_size)
+    drive(router, clock, injector, trace, p, costs)
+    if tracer is not None:
+        tracer.flush()
+
+    samples: List[float] = []
+    for eng in router.engines.values():
+        eng.pool.check_balanced()   # force-evicted residents included
+        samples.extend(eng.metrics.ttft_since(None))
+    from repro.serve.metrics import nearest_rank
+
+    return dict(
+        label=label,
+        results=router.results(),
+        router=router,
+        tracer=tracer,
+        wall=clock.t,
+        p95=nearest_rank(samples, 0.95),
+        p99=nearest_rank(samples, 0.99),
+        n_samples=len(samples),
+    )
+
+
+def fleet_events(tracer, name: Optional[str] = None) -> List[dict]:
+    evs = [e for e in tracer.events if e.get("cat") == "fleet"]
+    return [e for e in evs if e["name"] == name] if name else evs
+
+
+def run(smoke: bool = False, plans_path: Optional[str] = None,
+        trace_out: Optional[str] = None, print_fn=print) -> int:
+    import jax
+
+    from repro import configs, kernels
+    from repro.models import api
+    from repro.obs import write_trace
+
+    kernels.register_all()
+    p = SMOKE if smoke else FULL
+    edges = p["edges"]
+    cfg = configs.get_smoke(ARCH)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    max_len = max(edges) + p["new_tokens"] + 8
+    plan = load_or_compile_plan(plans_path, edges, p["slots"], max_len,
+                                print_fn)
+    costs = step_cost_model(p["slots"], max_len)
+    cost_summary = {h: f"{c[0]:.2e}s/tok, {c[1]:.2e}s/step"
+                    for h, c in costs.items()}
+    print_fn(f"# fleet: {dict(FLEET)}; per-hw step costs: {cost_summary}")
+
+    failures = 0
+    common = (p, cfg, params, plan, edges)
+
+    def check(cond: bool, msg: str) -> None:
+        nonlocal failures
+        if not cond:
+            failures += 1
+            print_fn(f"FAIL: {msg}")
+
+    # -- baseline ----------------------------------------------------------
+    base = run_scenario("baseline", *common, [], costs)
+    n_req = len(p["lens"])
+    check(len(base["results"]) == n_req,
+          f"baseline finished {len(base['results'])}/{n_req} requests")
+    print_fn(f"baseline: {len(base['results'])} requests, "
+             f"wall={base['wall'] * 1e3:.2f}ms virtual, "
+             f"p95 TTFT={base['p95'] * 1e3:.3f}ms "
+             f"p99={base['p99'] * 1e3:.3f}ms")
+
+    def check_parity(sc) -> None:
+        r = sc["router"]
+        check(set(sc["results"]) == set(base["results"]),
+              f"{sc['label']}: fid set differs from baseline "
+              f"(lost={sorted(set(base['results']) - set(sc['results']))}, "
+              f"extra={sorted(set(sc['results']) - set(base['results']))})")
+        check(r.lost == 0, f"{sc['label']}: {r.lost} request(s) lost")
+        mismatch = [fid for fid in base["results"]
+                    if sc["results"].get(fid) != base["results"][fid]]
+        check(not mismatch,
+              f"{sc['label']}: token parity broken for fids {mismatch}")
+        check(sc["p95"] <= TTFT_P95_BOUND * base["p95"],
+              f"{sc['label']}: pooled p95 TTFT {sc['p95']:.4f}s exceeds "
+              f"{TTFT_P95_BOUND}x baseline {base['p95']:.4f}s")
+        check(sc["p99"] <= TTFT_P99_BOUND * base["p99"],
+              f"{sc['label']}: pooled p99 TTFT {sc['p99']:.4f}s exceeds "
+              f"{TTFT_P99_BOUND}x baseline {base['p99']:.4f}s")
+        print_fn(f"{sc['label']}: {len(sc['results'])} requests, "
+                 f"wall={sc['wall'] * 1e3:.2f}ms virtual, "
+                 f"p95={sc['p95'] * 1e3:.3f}ms "
+                 f"(x{sc['p95'] / max(base['p95'], 1e-12):.2f}), "
+                 f"recoveries={r.recoveries} steals={r.steals} "
+                 f"status={dict(sorted(r.status.items()))}")
+
+    # -- kill --------------------------------------------------------------
+    kill_script = [dict(step=6, action="kill", instance="b")]
+    kill = run_scenario("kill", *common, [dict(e) for e in kill_script],
+                        costs)
+    check_parity(kill)
+    check(kill["router"].status["b"] == "dead",
+          "kill: instance b not marked dead")
+    check(kill["router"].recoveries >= 1,
+          "kill: no request was recovered onto the survivor")
+    detected = fleet_events(kill["tracer"], "fault_detected")
+    check(any(e["args"]["via"] == "liveness" and e["args"]["instance"] == "b"
+              for e in detected),
+          "kill: no liveness fault_detected event for b in the fleet lane")
+    check(bool(fleet_events(kill["tracer"], "recover")),
+          "kill: no recover events in the fleet lane")
+
+    # -- stall (watchdog) + scripted recovery ------------------------------
+    stall = run_scenario("stall", *common, [
+        dict(step=4, action="stall", instance="b"),
+        dict(step=16, action="recover", instance="b"),
+    ], costs)
+    check_parity(stall)
+    detected = fleet_events(stall["tracer"], "fault_detected")
+    check(any(e["args"]["via"] == "watchdog" and e["args"]["instance"] == "b"
+              for e in detected),
+          "stall: watchdog did not flag b in the fleet lane")
+    check(stall["router"].status["b"] == "live",
+          "stall: b did not rejoin after scripted recovery")
+
+    # -- drain (graceful) under degraded partner ---------------------------
+    drain = run_scenario("drain", *common, [
+        dict(step=2, action="degrade", instance="a", factor=2.0),
+        dict(step=5, action="drain", instance="b"),
+    ], costs)
+    check_parity(drain)
+    check(drain["router"].status["b"] == "drained",
+          "drain: b did not reach drained")
+    check(drain["router"].recoveries == len(
+              fleet_events(drain["tracer"], "recover")),
+          "drain: recover event count disagrees with router counter")
+    for ev_name in ("drain_begin", "drain_done"):
+        check(bool(fleet_events(drain["tracer"], ev_name)),
+              f"drain: no {ev_name} event in the fleet lane")
+    # Drain is not a failure: no retry budget consumed anywhere.
+    check(all(fr.retries == 0
+              for fr in drain["router"]._fleet.values()),
+          "drain: graceful handoff consumed retry budget")
+
+    # -- join (heterogeneous, mid-run) -------------------------------------
+    join = run_scenario("join", *common, [
+        dict(step=3, action="join", instance="b", hardware=dict(FLEET)["b"]),
+    ], costs, names=FLEET[:1])
+    check_parity(join)
+    check(bool(fleet_events(join["tracer"], "join")),
+          "join: no join event in the fleet lane")
+    b_eng = join["router"].engines.get("b")
+    check(b_eng is not None and len(b_eng._finished) >= 1,
+          "join: the joined instance served no requests")
+    if b_eng is not None:
+        b_pid = next(pr["pid"] for pr in join["tracer"].procs
+                     if pr["name"] == "b")
+        resolves = [e for e in join["tracer"].events
+                    if e["name"] == "plan_resolve" and e["pid"] == b_pid]
+        check(bool(resolves),
+              "join: no plan_resolve audit events on the joiner's pid")
+        check(all(e["args"]["source"] in ("exact", "nearest_shape")
+                  for e in resolves),
+              "join: joiner fell back off the plan "
+              f"({sorted({e['args']['source'] for e in resolves})})")
+        print_fn(f"# join: b ({b_eng.hardware.name}) finished "
+                 f"{len(b_eng._finished)} request(s), "
+                 f"{len(resolves)} plan_resolve audit event(s)")
+
+    # The joiner's hardware really wants different tiles: chunk length
+    # diverges across the two fleet models at full dims.
+    from repro.core import HARDWARE_REGISTRY, Autotuner
+    from repro.core.plans import compile_entry
+    from repro.launch.specs import kernel_problems
+
+    cfg_full = configs.get_arch(ARCH)
+    prob = kernel_problems(cfg_full, 1, FULL_REF_LEN,
+                           "chunked_prefill")["chunked_prefill"]
+    chunk_by_hw = {}
+    for _, hw_name in FLEET:
+        entry = compile_entry("chunked_prefill", prob, "float32",
+                              HARDWARE_REGISTRY[hw_name],
+                              autotuner=Autotuner())
+        chunk_by_hw[hw_name] = entry.tile[0]
+        print_fn(f"# chunked_prefill @ sq={FULL_REF_LEN} on {hw_name}: "
+                 f"tile {entry.tile} ({entry.dominant}-bound)")
+    check(len(set(chunk_by_hw.values())) >= 2,
+          f"chunk length does not diverge across fleet hardware: "
+          f"{chunk_by_hw}")
+
+    # -- determinism: replay the kill scenario, byte-identical trace -------
+    rerun = run_scenario("kill-rerun", *common,
+                         [dict(e) for e in kill_script], costs)
+    check(rerun["results"] == kill["results"],
+          "determinism: kill replay produced different results")
+    if trace_out:
+        stem, suffix = os.path.splitext(trace_out)
+        rerun_out = f"{stem}.rerun{suffix or '.json'}"
+        write_trace(kill["tracer"], trace_out)
+        write_trace(rerun["tracer"], rerun_out)
+        with open(trace_out, "rb") as f:
+            b1 = f.read()
+        with open(rerun_out, "rb") as f:
+            b2 = f.read()
+        check(b1 == b2,
+              "determinism: kill replay trace is not byte-identical")
+        print_fn(f"# trace written to {trace_out} "
+                 f"({len(kill['tracer'].events)} events; replay at "
+                 f"{rerun_out} is byte-identical)")
+
+        # Trace self-check: pooled nearest-rank p95 over the kill trace's
+        # submit-anchored ttft spans == the pooled metrics p95 (recovered
+        # requests keep their original submit anchor in both).
+        from repro.obs import load_trace
+        from repro.serve.metrics import nearest_rank
+
+        reloaded = load_trace(trace_out)
+        durs = [ev.get("dur", 0.0) for ev in reloaded["events"]
+                if ev.get("name") == "ttft"]
+        trace_p95 = nearest_rank(durs, 0.95)
+        check(bool(durs) and np.isclose(trace_p95, kill["p95"], rtol=1e-9,
+                                        atol=0.0),
+              f"kill trace ttft p95 {trace_p95:.6e}s != pooled metrics "
+              f"p95 {kill['p95']:.6e}s")
+
+    print_fn("PASS" if not failures else f"{failures} FAILURES")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="scaled trace for CI (seconds, not minutes)")
+    ap.add_argument("--plans", default=None,
+                    help="compiled TilePlan artifact to reuse (falls back "
+                         "to compiling the bench's own serving cells for "
+                         "both fleet hardware models)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the kill scenario's deterministic trace "
+                         "here (the replay lands at <stem>.rerun<suffix>; "
+                         "the bench asserts byte equality and CI diffs the "
+                         "pair with trace_report --diff)")
+    args = ap.parse_args()
+    sys.exit(1 if run(smoke=args.smoke, plans_path=args.plans,
+                      trace_out=args.trace_out)
+             else 0)
+
+
+if __name__ == "__main__":
+    main()

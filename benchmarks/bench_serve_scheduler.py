@@ -88,15 +88,24 @@ def compile_serving_plan(edges, slots: int, max_len: int,
 def drive_open_loop(submit, step, trace, new_tokens: int,
                     arrivals_per_step: int, max_steps: int = 5000) -> float:
     """Open-loop: submit ``arrivals_per_step`` per engine step regardless of
-    completions; returns wall seconds to fully drain."""
+    completions; returns wall seconds to fully drain.
+
+    Raises RuntimeError when ``max_steps`` elapse with work still pending
+    (mirrors ``FleetRouter.run_until_done``'s ``FleetExhausted``): a bench
+    that silently measures a partial drain reports fantasy throughput."""
     t0 = time.perf_counter()
     i = 0
     for tick in range(max_steps):
         while i < len(trace) and i < arrivals_per_step * (tick + 1):
             submit(trace[i], new_tokens)
             i += 1
-        if not step() and i >= len(trace):
+        residue = step()
+        if not residue and i >= len(trace):
             break
+    else:
+        raise RuntimeError(
+            f"drive_open_loop: not drained after {max_steps} steps "
+            f"({residue} units still pending, {len(trace) - i} unsubmitted)")
     return time.perf_counter() - t0
 
 

@@ -66,7 +66,8 @@ from repro import configs
 from repro.core import HARDWARE_REGISTRY, PRODUCTION_TARGET
 from repro.core.plans import TilePlan
 from repro.models import api
-from repro.serve import BucketPolicy, FleetRouter, ServeEngine, make_scheduler
+from repro.serve import (BucketPolicy, FleetExhausted, FleetRouter,
+                         ServeEngine, make_scheduler)
 
 
 def build_policy(spec: str, plans, hardware_name, max_queue: int,
@@ -130,6 +131,13 @@ def main():
                     help="comma list of hardware models; serve through the "
                          "fleet router with one engine per model "
                          "(overrides --hardware)")
+    ap.add_argument("--watchdog-threshold", type=int, default=8,
+                    help="fleet: consecutive no-progress steps before an "
+                         "instance is declared stalled and its work "
+                         "recovered onto survivors")
+    ap.add_argument("--retry-budget", type=int, default=2,
+                    help="fleet: recovery attempts per request before it "
+                         "is declared lost")
     ap.add_argument("--refine", action="store_true",
                     help="shadow-measure candidate tiles during service and "
                          "emit a refined (re-ranked) plan artifact at exit; "
@@ -202,7 +210,9 @@ def main():
             raise SystemExit("--fleet requires --scheduler bucket "
                              "(routing is per shape bucket)")
         router = FleetRouter({h: make_engine(h) for h in fleet_names}, policy,
-                             tracer=tracer)
+                             tracer=tracer,
+                             watchdog_threshold=args.watchdog_threshold,
+                             retry_budget=args.retry_budget)
     else:
         engine = make_engine(args.hardware)
 
@@ -218,7 +228,14 @@ def main():
         rejected += ok is None
 
     if router is not None:
-        done_by = router.run_until_done()
+        try:
+            done_by = router.run_until_done()
+        except FleetExhausted as exc:
+            # Surface exhaustion loudly (a partial result set must never
+            # read as a complete run) but still report what DID finish.
+            print(f"WARNING: {exc}")
+            done_by = {name: list(eng._finished)
+                       for name, eng in router.engines.items()}
         done = [r for rs in done_by.values() for r in rs]
         for name, rs in sorted(done_by.items()):
             for r in rs:

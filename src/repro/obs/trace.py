@@ -37,6 +37,13 @@ Event vocabulary (names are a stable contract with
   lane (see ``repro.serve.pool``): page allocations and frees with the
   pool's running occupancy, shared-prefix reuse hits, and
   copy-on-write splits.
+- ``fault`` / ``fault_detected`` / ``recover`` / ``recover_fail`` /
+  ``drain_begin`` / ``drain_done`` / ``join`` / ``steal`` — the fleet
+  fault-tolerance lane (``repro.serve.faults`` + ``FleetRouter``):
+  scripted fault injections, watchdog/liveness detections with the
+  instance's new status, per-request recovery decisions (source, target,
+  retries, tokens discarded), graceful drain begin/done, elastic joins,
+  and work-stealing moves.
 
 Zero-cost when disabled: components hold ``self._trace = None`` unless a
 tracer was injected and guard every site with ``if self._trace is not
@@ -61,7 +68,8 @@ LANE_SHADOW = 4
 LANE_SCHED = 5
 LANE_QUEUE = 6
 LANE_POOL = 7
-PACK_LANE_BASE = 8
+LANE_FLEET = 8
+PACK_LANE_BASE = 9
 
 LANE_NAMES = {
     LANE_LIFECYCLE: "lifecycle",
@@ -72,6 +80,7 @@ LANE_NAMES = {
     LANE_SCHED: "scheduler",
     LANE_QUEUE: "queue depth",
     LANE_POOL: "kv pool",
+    LANE_FLEET: "fleet",
 }
 
 
@@ -336,6 +345,49 @@ class ProcTrace:
                      args={"instance": instance, "pre_p95": pre_p95,
                            "post_p95": post_p95, "rolled_back": rolled_back,
                            "clipped": clipped})
+
+    # -- fleet fault tolerance ---------------------------------------------
+    def fault(self, action: str, instance: str, step: int,
+              factor: float = 1.0) -> None:
+        self.instant(LANE_FLEET, "fault", "fleet",
+                     args={"action": action, "instance": instance,
+                           "step": int(step), "factor": float(factor)})
+
+    def fault_detected(self, instance: str, status: str, via: str) -> None:
+        """An instance was marked unhealthy: ``via`` is "liveness" (a dead
+        engine failed its step) or "watchdog" (no progress past the
+        threshold)."""
+        self.instant(LANE_FLEET, "fault_detected", "fleet",
+                     args={"instance": instance, "status": status,
+                           "via": via})
+
+    def recover(self, fid: int, src: str, dst: str, rid: int, retries: int,
+                tokens_discarded: int) -> None:
+        self.instant(LANE_FLEET, "recover", "fleet",
+                     args={"fid": int(fid), "src": src, "dst": dst,
+                           "rid": int(rid), "retries": int(retries),
+                           "tokens_discarded": int(tokens_discarded)})
+
+    def recover_fail(self, fid: int, reason: str, retries: int) -> None:
+        self.instant(LANE_FLEET, "recover_fail", "fleet",
+                     args={"fid": int(fid), "reason": reason,
+                           "retries": int(retries)})
+
+    def drain_begin(self, instance: str, handoff: int) -> None:
+        self.instant(LANE_FLEET, "drain_begin", "fleet",
+                     args={"instance": instance, "handoff": int(handoff)})
+
+    def drain_done(self, instance: str) -> None:
+        self.instant(LANE_FLEET, "drain_done", "fleet",
+                     args={"instance": instance})
+
+    def join(self, instance: str, hardware: Optional[str]) -> None:
+        self.instant(LANE_FLEET, "join", "fleet",
+                     args={"instance": instance, "hardware": hardware})
+
+    def steal(self, fid: int, src: str, dst: str) -> None:
+        self.instant(LANE_FLEET, "steal", "fleet",
+                     args={"fid": int(fid), "src": src, "dst": dst})
 
     def refine_cell(self, kernel: str, problem: str, old_tile: Any,
                     new_tile: Any, speedup: float, samples: int) -> None:

@@ -3,7 +3,18 @@ runtime telemetry, online plan refinement. See ``repro.serve.scheduler``
 for the admission story and ``repro.serve.refine`` for the telemetry ->
 plan feedback loop."""
 from repro.serve.engine import Request, ServeEngine
-from repro.serve.fleet import FleetRouter, RollDecision, RouteDecision
+from repro.serve.faults import (
+    EngineFault,
+    FaultEvent,
+    FaultInjector,
+    FaultScript,
+)
+from repro.serve.fleet import (
+    FleetExhausted,
+    FleetRouter,
+    RollDecision,
+    RouteDecision,
+)
 from repro.serve.metrics import ServeMetrics
 from repro.serve.pool import PagedKVPool, supports_prefix_sharing
 from repro.serve.refine import PlanRefiner, drift_report, make_shadow_measure
@@ -16,6 +27,8 @@ from repro.serve.scheduler import (
 
 __all__ = [
     "Request", "ServeEngine", "FleetRouter", "RouteDecision", "RollDecision",
+    "FleetExhausted", "EngineFault", "FaultEvent", "FaultInjector",
+    "FaultScript",
     "ServeMetrics", "PagedKVPool", "supports_prefix_sharing",
     "PlanRefiner", "make_shadow_measure", "drift_report",
     "BucketPolicy", "FifoScheduler", "ShapeBucketScheduler", "make_scheduler",

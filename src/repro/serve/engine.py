@@ -109,6 +109,7 @@ class Request:
     bucket: Optional[int] = None  # padded length (set at submit)
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    submit_t: Optional[float] = None  # original TTFT anchor (set on eviction)
 
 
 @dataclasses.dataclass
@@ -257,6 +258,9 @@ class ServeEngine:
         self._active: List[Optional[Request]] = [None] * slots
         self._finished: List[Request] = []
         self._next_rid = 0
+        # Why the most recent add_request returned None ("ok" = it didn't);
+        # the fleet router's failover path reads this after a rejection.
+        self.last_reject_reason = "ok"
 
         # Per-slot independent caches (batch=1) batched by stacking.
         self._states = [None] * slots
@@ -1090,10 +1094,16 @@ class ServeEngine:
 
     def add_request(self, prompt: np.ndarray, max_new_tokens: int = 16,
                     priority: int = 0,
-                    deadline: float = math.inf) -> Optional[int]:
+                    deadline: float = math.inf,
+                    submit_t: Optional[float] = None) -> Optional[int]:
         """Submit a request; returns its rid, or None when admission control
         rejects it (queue full, prompt longer than every bucket edge, or the
-        padded prompt plus the generation would overflow the KV cache)."""
+        padded prompt plus the generation would overflow the KV cache).
+
+        ``submit_t`` backdates the TTFT anchor: fleet recovery re-queues a
+        failed instance's request here with its ORIGINAL submit time, so
+        the recovered first token's TTFT spans the whole outage instead of
+        restarting the clock (submit-anchored across retries)."""
         prompt = np.asarray(prompt, np.int32)
         shaped = self.scheduler.admit_length(len(prompt))
         if shaped is None:
@@ -1111,7 +1121,7 @@ class ServeEngine:
             return self._reject(
                 getattr(self.scheduler, "last_reject_reason", "admission"),
                 len(prompt))
-        self.metrics.record_submit(rid)
+        self.metrics.record_submit(rid, t=submit_t)
         self._record_backlog(self.scheduler.pending() + len(self._held)
                              + len(self._pool_wait))
         if self._trace is not None:
@@ -1121,7 +1131,10 @@ class ServeEngine:
     def _reject(self, reason: str, prompt_len: int) -> None:
         """Account one admission rejection: reason counter, backlog sample
         (a rejected submit is exactly when backlog pressure peaked), and a
-        trace instant carrying the reason."""
+        trace instant carrying the reason. The reason also lands in
+        ``self.last_reject_reason`` so a caller holding only the ``None``
+        return (the fleet router's failover path) can read why."""
+        self.last_reject_reason = reason
         self.metrics.record_reject(reason=reason)
         self._record_backlog(self.scheduler.pending() + len(self._held)
                              + len(self._pool_wait))
@@ -1370,6 +1383,104 @@ class ServeEngine:
         return (sum(r is not None for r in self._active)
                 + len(self._chunking) + len(self._ready)
                 + len(self._held) + len(self._pool_wait))
+
+    # -- eviction / handoff (fleet fault tolerance) --------------------------
+    def _evict_state(self, req: Request) -> None:
+        """Tear down one request's engine-held state: pool pages released
+        (refcount-balanced; ``missing_ok`` because _held/_pool_wait stages
+        never registered), decode cursor dropped, pending TTFT anchor
+        dropped (the recovering router re-anchors it on the next engine)."""
+        if self.paged:
+            self.pool.release(req.rid, missing_ok=True)
+            self._pos.pop(req.rid, None)
+        t = self.metrics.drop_submit(req.rid)
+        if t is not None:
+            req.submit_t = t
+
+    def extract_queued(self) -> List[Request]:
+        """Hand off every request that has not started prefilling: the
+        scheduler queue (drained in urgency order), the multi-chunk holding
+        pen, and the pool-wait line. None of these hold device state or
+        pool pages — extraction is pure bookkeeping. Generated tokens are
+        untouched (there are none). Used by graceful drain and work
+        handoff; the caller re-queues them elsewhere."""
+        out: List[Request] = []
+        while True:
+            req = self.scheduler.next_request()
+            if req is None:
+                break
+            out.append(req)
+        out.extend(self._held)
+        self._held.clear()
+        out.extend(self._pool_wait)
+        self._pool_wait.clear()
+        for req in out:
+            self._evict_state(req)
+        return out
+
+    def evict_all(self) -> List[Request]:
+        """Evict EVERY non-finished request — queued, mid-prefill, ready,
+        and decoding — tearing down per-request state (pool pages released
+        and refcount-balanced, partial caches dropped). Returns the evicted
+        requests with their ``out_tokens`` so far, so fleet recovery can
+        account discarded work; recovery re-prefills from the original
+        prompt, never from the torn-down caches. Finished requests stay in
+        ``self._finished``."""
+        out = self.extract_queued()
+        for job in list(self._chunking):
+            self._evict_state(job.req)
+            out.append(job.req)
+        self._chunking.clear()
+        for req, _state in self._ready:
+            self._evict_state(req)
+            out.append(req)
+        self._ready.clear()
+        for i, req in enumerate(self._active):
+            if req is None:
+                continue
+            self._evict_state(req)
+            out.append(req)
+            self._active[i] = None
+            self._states[i] = None
+        return out
+
+    def cancel(self, rid: int) -> Optional[Request]:
+        """Remove one request wherever it sits in the pipeline (queued,
+        held, pool-waiting, mid-chunk-prefill, ready, or decoding), tearing
+        down its state exactly like :meth:`evict_all` does for the whole
+        engine. Returns the request, or None when ``rid`` is not resident
+        (already finished or never admitted)."""
+        remove = getattr(self.scheduler, "remove", None)
+        req = remove(rid) if remove is not None else None
+        if req is None:
+            for pen in (self._held, self._pool_wait):
+                for i, r in enumerate(pen):
+                    if r.rid == rid:
+                        req = pen.pop(i)
+                        break
+                if req is not None:
+                    break
+        if req is None:
+            for job in self._chunking:
+                if job.req.rid == rid:
+                    req = job.req
+                    self._chunking.remove(job)
+                    break
+        if req is None:
+            for i, (r, _state) in enumerate(self._ready):
+                if r.rid == rid:
+                    req = self._ready.pop(i)[0]
+                    break
+        if req is None:
+            for i, r in enumerate(self._active):
+                if r is not None and r.rid == rid:
+                    req = r
+                    self._active[i] = None
+                    self._states[i] = None
+                    break
+        if req is not None:
+            self._evict_state(req)
+        return req
 
     def run_until_done(self, max_steps: int = 1000) -> List[Request]:
         self._finished = []

@@ -24,15 +24,62 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Dict, List, Mapping, Optional, Tuple
+from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 import jax.numpy as jnp
 
 from repro.core import registry
 from repro.core.plans import PlanTransferWarning, score_tile
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.faults import EngineFault, FaultInjector
 from repro.serve.metrics import nearest_rank
 from repro.serve.scheduler import BucketPolicy
+
+
+class FleetExhausted(RuntimeError):
+    """``run_until_done`` hit ``max_steps`` with work still pending.
+
+    Previously the router returned silently in this situation, so callers
+    could read a partial result set as a complete run. Now the exhaustion
+    is explicit, carrying the per-instance residue so the operator can see
+    WHERE the fleet wedged (``pending`` maps instance -> in-flight/queued
+    counts; ``orphans`` counts evicted requests awaiting a healthy home).
+    """
+
+    def __init__(self, max_steps: int, pending: Dict[str, Dict[str, int]],
+                 orphans: int = 0):
+        self.max_steps = max_steps
+        self.pending = pending
+        self.orphans = orphans
+        detail = "; ".join(
+            f"{name}: {c['in_flight']} in-flight + {c['queued']} queued"
+            for name, c in sorted(pending.items()))
+        if orphans:
+            detail = (detail + "; " if detail else "") + f"{orphans} orphaned"
+        super().__init__(
+            f"fleet not drained after {max_steps} steps ({detail})")
+
+
+@dataclasses.dataclass
+class _FleetRequest:
+    """Fleet-level identity for one request, stable across retries.
+
+    Engines hand out per-engine rids; the fleet keys every request by a
+    fleet id (fid) so a request that dies with its instance and re-queues
+    on a survivor is still THE SAME request — same original prompt, same
+    submit-time TTFT anchor, one results() entry."""
+
+    fid: int
+    prompt: Any                       # raw (unpadded) prompt tokens
+    max_new_tokens: int
+    priority: int
+    deadline: float
+    submit_t: Optional[float]         # original submit time (TTFT anchor)
+    instance: str                     # current (or last) placement
+    rid: int                          # rid on that instance
+    retries: int = 0                  # recovery attempts consumed
+    tokens_discarded: int = 0         # generated-then-lost token count
+    lost: bool = False                # retry budget exhausted
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +91,7 @@ class RouteDecision:
     bucket: int
     score: float                      # chosen instance's loaded score
     scores: Tuple[Tuple[str, float], ...]  # all (instance, loaded score)
+    fid: Optional[int] = None         # fleet-level id (stable across retries)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,7 +112,9 @@ class FleetRouter:
     """Route requests across per-hardware engines by plan-resolved cost."""
 
     def __init__(self, engines: Mapping[str, ServeEngine],
-                 policy: BucketPolicy, tracer=None):
+                 policy: BucketPolicy, tracer=None,
+                 watchdog_threshold: int = 8, retry_budget: int = 2,
+                 injector: Optional[FaultInjector] = None):
         if not engines:
             raise ValueError("FleetRouter needs at least one engine")
         self.engines: Dict[str, ServeEngine] = dict(engines)
@@ -82,6 +132,34 @@ class FleetRouter:
         # (instance, kind, length) -> estimated seconds; pure function of
         # the plan + cost model, so cache freely.
         self._cell_cost: Dict[Tuple[str, str, int], float] = {}
+        # -- fault tolerance ------------------------------------------------
+        # Scripted fault source (kill/stall/degrade/drain/join at step N);
+        # None = no injection, everything below still guards real faults.
+        self.injector = injector
+        # Consecutive no-progress steps (with work pending) before the
+        # watchdog declares an instance stalled and evicts its work.
+        self.watchdog_threshold = watchdog_threshold
+        # Recovery attempts per request before it is declared lost.
+        self.retry_budget = retry_budget
+        # instance -> "live" | "stalled" | "dead" | "draining" | "drained".
+        # Only "live" instances take new work; "draining" finish in place.
+        self.status: Dict[str, str] = {name: "live" for name in self.engines}
+        # instance -> (last progress reading, consecutive stuck steps).
+        # Progress = tokens_out + chunks_run: multi-chunk prefills emit no
+        # tokens for many steps, so chunk completions must count.
+        self._progress: Dict[str, Tuple[int, int]] = {}
+        # fid -> fleet record; (instance, rid) -> fid. The rid mapping is
+        # popped when a request leaves an instance (eviction/steal) and
+        # re-added at its new home, so finished rids resolve forever.
+        self._fleet: Dict[int, _FleetRequest] = {}
+        self._rid_map: Dict[Tuple[str, int], int] = {}
+        self._next_fid = 0
+        # Evicted requests awaiting a healthy instance (retried each step).
+        self._orphans: List[_FleetRequest] = []
+        self._steps = 0
+        self.recoveries = 0
+        self.steals = 0
+        self.lost = 0
 
     # -- cost model ----------------------------------------------------------
     def _phase_cost(self, name: str, kind: str, length: int) -> float:
@@ -203,11 +281,21 @@ class FleetRouter:
     # -- routing -------------------------------------------------------------
     def route(self, prompt, max_new_tokens: int = 16, priority: int = 0,
               deadline: float = float("inf")) -> Optional[RouteDecision]:
-        """Admit one request on the cheapest instance; None when rejected.
-        Router-level rejections (over-length prompt under a no-overflow
-        policy) are counted in ``self.rejects`` — never dropped silently."""
+        """Admit one request on the cheapest healthy instance; None when
+        rejected everywhere. An engine-level rejection (queue full,
+        over-length for that engine's policy) fails over to the next-best
+        instance by loaded score instead of dropping the request; only when
+        EVERY healthy instance rejects is the terminal reason counted in
+        ``self.rejects`` — never dropped silently."""
         bucket, reason = self.policy.admit(len(prompt))
         if bucket is None:
+            self.rejects[reason] = self.rejects.get(reason, 0) + 1
+            if self._trace is not None:
+                self._trace.route_reject(reason)
+            return None
+        live = [n for n in self.engines if self.status[n] == "live"]
+        if not live:
+            reason = "no_healthy_instance"
             self.rejects[reason] = self.rejects.get(reason, 0) + 1
             if self._trace is not None:
                 self._trace.route_reject(reason)
@@ -216,20 +304,44 @@ class FleetRouter:
             (name,
              self.service_score(name, bucket, max_new_tokens)
              * (1.0 + self._load(name)))
-            for name in self.engines))
-        name = min(scores, key=lambda kv: (kv[1], kv[0]))[0]
-        rid = self.engines[name].add_request(
-            prompt, max_new_tokens=max_new_tokens, priority=priority,
-            deadline=deadline)
-        if rid is None:
-            return None
-        decision = RouteDecision(
-            rid=rid, instance=name, bucket=bucket,
-            score=dict(scores)[name], scores=scores)
-        self.decisions.append(decision)
+            for name in live))
+        reason = "engine_reject"
+        for name, score in sorted(scores, key=lambda kv: (kv[1], kv[0])):
+            eng = self.engines[name]
+            rid = eng.add_request(
+                prompt, max_new_tokens=max_new_tokens, priority=priority,
+                deadline=deadline)
+            if rid is None:
+                reason = getattr(eng, "last_reject_reason", reason)
+                continue
+            fid = self._register_admit(name, rid, prompt, max_new_tokens,
+                                       priority, deadline)
+            decision = RouteDecision(
+                rid=rid, instance=name, bucket=bucket,
+                score=score, scores=scores, fid=fid)
+            self.decisions.append(decision)
+            if self._trace is not None:
+                self._trace.route(rid, name, bucket, decision.score)
+            return decision
+        self.rejects[reason] = self.rejects.get(reason, 0) + 1
         if self._trace is not None:
-            self._trace.route(rid, name, bucket, decision.score)
-        return decision
+            self._trace.route_reject(reason)
+        return None
+
+    def _register_admit(self, name: str, rid: int, prompt,
+                        max_new_tokens: int, priority: int,
+                        deadline: float) -> int:
+        """Mint a fleet id for a freshly admitted request, anchoring its
+        original submit time (the TTFT anchor recovery preserves)."""
+        fid = self._next_fid
+        self._next_fid += 1
+        self._fleet[fid] = _FleetRequest(
+            fid=fid, prompt=prompt, max_new_tokens=max_new_tokens,
+            priority=priority, deadline=deadline,
+            submit_t=self.engines[name].metrics.submit_time(rid),
+            instance=name, rid=rid)
+        self._rid_map[(name, rid)] = fid
+        return fid
 
     def placements(self) -> Dict[int, Dict[str, int]]:
         """bucket -> instance -> routed request count (from the live run)."""
@@ -241,21 +353,289 @@ class FleetRouter:
 
     # -- execution -----------------------------------------------------------
     def step_all(self) -> int:
-        """One engine step on every instance; returns total active slots."""
-        return sum(eng.step() for eng in self.engines.values())
+        """One engine step on every healthy instance; returns total pending
+        work (active slots + partial prefills + orphans awaiting a home).
+
+        This is also the fault-tolerance heartbeat: scripted faults fire
+        here (deterministically, keyed by step count — replayable), killed
+        instances are detected by liveness (stepping one raises/flags), and
+        stalled instances by the progress watchdog. Either way the failed
+        instance's queued AND in-flight requests are evicted, re-queued on
+        survivors under the retry budget, and re-prefilled from their
+        original prompts with submit-anchored TTFT. Work stealing then
+        rebalances queued requests from busy to idle live instances."""
+        self._steps += 1
+        if self.injector is not None:
+            for ev in self.injector.advance(self._steps):
+                if self._trace is not None:
+                    self._trace.fault(ev.action, ev.instance, ev.step,
+                                      ev.factor)
+                if ev.action == "drain":
+                    self.drain(ev.instance)
+                elif ev.action == "join":
+                    self.join(ev.instance, ev.make_engine())
+                elif (ev.action == "recover"
+                      and self.status.get(ev.instance) == "stalled"):
+                    # The wedge cleared; the instance was already evicted,
+                    # so it rejoins empty and can take new work.
+                    self.status[ev.instance] = "live"
+                    self._progress.pop(ev.instance, None)
+        total = 0
+        for name in sorted(self.engines):
+            st = self.status[name]
+            if st in ("dead", "drained", "stalled"):
+                continue
+            inj = self.injector
+            if inj is not None and inj.is_killed(name):
+                self._mark_failed(name, "dead", via="liveness")
+                continue
+            eng = self.engines[name]
+            if inj is not None and inj.is_stalled(name):
+                # Wedged, not dead: the step is a no-op — it holds its
+                # state and makes no progress, so only the watchdog (not
+                # liveness) can catch it.
+                total += eng.in_flight()
+                self._watch(name)
+                continue
+            try:
+                total += eng.step()
+            except EngineFault:
+                self._mark_failed(name, "dead", via="liveness")
+                continue
+            self._watch(name)
+        self._requeue_orphans()
+        self._steal()
+        self._finish_drains()
+        return total + len(self._orphans)
+
+    def _watch(self, name: str) -> None:
+        """Progress watchdog: an instance with work pending that makes no
+        progress (no new tokens, no chunk completions) for
+        ``watchdog_threshold`` consecutive steps is declared stalled and
+        its work evicted for recovery. Chunk completions count as progress
+        because a multi-chunk prefill legitimately emits no tokens for
+        many steps."""
+        eng = self.engines[name]
+        progress = eng.metrics.tokens_out + eng.metrics.chunks_run
+        last, stuck = self._progress.get(name, (progress, 0))
+        if eng.in_flight() or eng.scheduler.pending():
+            stuck = stuck + 1 if progress == last else 0
+        else:
+            stuck = 0
+        self._progress[name] = (progress, stuck)
+        if (stuck >= self.watchdog_threshold
+                and self.status[name] in ("live", "draining")):
+            self._mark_failed(name, "stalled", via="watchdog")
+
+    def _mark_failed(self, name: str, status: str, via: str) -> None:
+        """Take an instance out of rotation and orphan its entire resident
+        request set (queued + in-flight) for recovery on survivors. Pool
+        pages are released refcount-balanced by the eviction; recovery
+        re-prefills from original prompts, never from the dead caches."""
+        self.status[name] = status
+        self._progress.pop(name, None)
+        if self._trace is not None:
+            self._trace.fault_detected(name, status, via)
+        for req in self.engines[name].evict_all():
+            self._absorb(name, req, failure=True)
+
+    def _absorb(self, name: str, req: Request, *, failure: bool) -> None:
+        """Fold one evicted engine request back into fleet bookkeeping.
+        ``failure=True`` (kill/stall) consumes a retry and accounts the
+        discarded generated tokens; ``failure=False`` (drain handoff,
+        steal) moves the request for free."""
+        fid = self._rid_map.pop((name, req.rid), None)
+        if fid is None:
+            # Directly-added request (bypassed route()): synthesize a fleet
+            # record from the evicted Request — the prompt is the raw
+            # unpadded one and the submit anchor was stashed at eviction.
+            fr = _FleetRequest(
+                fid=self._next_fid, prompt=req.prompt,
+                max_new_tokens=req.max_new_tokens, priority=req.priority,
+                deadline=req.deadline, submit_t=req.submit_t,
+                instance=name, rid=req.rid)
+            self._next_fid += 1
+            self._fleet[fr.fid] = fr
+        else:
+            fr = self._fleet[fid]
+        if failure:
+            fr.retries += 1
+            fr.tokens_discarded += len(req.out_tokens)
+            if fr.retries > self.retry_budget:
+                fr.lost = True
+                self.lost += 1
+                self.rejects["retry_budget"] = (
+                    self.rejects.get("retry_budget", 0) + 1)
+                if self._trace is not None:
+                    self._trace.recover_fail(fr.fid, "retry_budget",
+                                             fr.retries)
+                return
+        self._orphans.append(fr)
+
+    def _requeue_orphans(self) -> None:
+        """Re-place evicted requests on the cheapest live instance, keeping
+        the original submit time as the TTFT anchor (recovered requests pay
+        their true end-to-end latency, including the failed attempt).
+        Requests no live instance will take stay orphaned and are retried
+        every step."""
+        if not self._orphans:
+            return
+        live = [n for n in self.engines if self.status[n] == "live"]
+        if not live:
+            return
+        still: List[_FleetRequest] = []
+        for fr in self._orphans:
+            bucket, _ = self.policy.admit(len(fr.prompt))
+            if bucket is None:
+                bucket = len(fr.prompt)
+            ranked = sorted(
+                ((self.service_score(n, bucket, fr.max_new_tokens)
+                  * (1.0 + self._load(n)), n) for n in live))
+            src = fr.instance
+            for _score, name in ranked:
+                rid = self.engines[name].add_request(
+                    fr.prompt, max_new_tokens=fr.max_new_tokens,
+                    priority=fr.priority, deadline=fr.deadline,
+                    submit_t=fr.submit_t)
+                if rid is None:
+                    continue
+                fr.instance, fr.rid = name, rid
+                self._rid_map[(name, rid)] = fr.fid
+                self.recoveries += 1
+                if self._trace is not None:
+                    self._trace.recover(fr.fid, src, name, rid, fr.retries,
+                                        fr.tokens_discarded)
+                break
+            else:
+                still.append(fr)
+        self._orphans = still
+
+    # -- drain / join / steal ------------------------------------------------
+    def drain(self, name: str) -> int:
+        """Gracefully retire an instance: stop admission, hand its queued
+        (not-yet-started) requests to the rest of the fleet for free — no
+        retry consumed, drain is not a failure — and let in-flight work
+        finish in place. The instance flips to "drained" once empty
+        (``_finish_drains`` on the step loop). Returns the handoff count."""
+        if self.status.get(name) not in ("live",):
+            return 0
+        self.status[name] = "draining"
+        handoff = self.engines[name].extract_queued()
+        if self._trace is not None:
+            self._trace.drain_begin(name, len(handoff))
+        for req in handoff:
+            self._absorb(name, req, failure=False)
+        self._requeue_orphans()
+        return len(handoff)
+
+    def _finish_drains(self) -> None:
+        for name in sorted(self.engines):
+            if self.status[name] != "draining":
+                continue
+            eng = self.engines[name]
+            if not eng.in_flight() and not eng.scheduler.pending():
+                self.status[name] = "drained"
+                if self._trace is not None:
+                    self._trace.drain_done(name)
+
+    def join(self, name: str, engine: ServeEngine) -> None:
+        """Add an instance mid-run. The engine carries its own
+        HardwareModel and plan artifact, so its plan cells resolve for its
+        own hardware — a heterogeneous joiner prices (and runs) every
+        bucket with its own tiles, and routing starts sending it work on
+        the next ``route``/steal. Reusing the name of a dead or drained
+        instance replaces it."""
+        if name in self.engines and self.status.get(name) not in (
+                "dead", "drained"):
+            raise ValueError(f"instance {name!r} is already active")
+        self.engines[name] = engine
+        self.status[name] = "live"
+        self._progress.pop(name, None)
+        for key in [k for k in self._cell_cost if k[0] == name]:
+            del self._cell_cost[key]
+        if self._trace is not None:
+            self._trace.join(name, engine.hardware.name)
+
+    def _steal(self) -> None:
+        """Rebalance between steps: an idle live instance (nothing queued,
+        free slots) pulls the most urgent queued request from the most
+        backlogged live instance. The move is free (no retry) and keeps the
+        original submit anchor, so stolen requests' TTFT reflects their
+        full wait. Deterministic: sorted iteration, max-backlog source."""
+        live = [n for n in sorted(self.engines) if self.status[n] == "live"]
+        if len(live) < 2:
+            return
+        for dst in live:
+            deng = self.engines[dst]
+            if deng.scheduler.pending() or deng.in_flight() >= deng.slots:
+                continue
+            srcs = [n for n in live
+                    if n != dst and self.engines[n].scheduler.pending() > 0]
+            if not srcs:
+                continue
+            src = max(srcs, key=lambda n: (
+                self.engines[n].scheduler.pending(), n))
+            seng = self.engines[src]
+            req = seng.scheduler.next_request()
+            if req is None:
+                continue
+            seng._evict_state(req)
+            fid = self._rid_map.pop((src, req.rid), None)
+            if fid is None:
+                self._absorb(src, req, failure=False)
+                fr = self._orphans.pop()
+            else:
+                fr = self._fleet[fid]
+            rid = deng.add_request(
+                fr.prompt, max_new_tokens=fr.max_new_tokens,
+                priority=fr.priority, deadline=fr.deadline,
+                submit_t=fr.submit_t)
+            if rid is None:
+                self._orphans.append(fr)   # re-placed next step
+                continue
+            fr.instance, fr.rid = dst, rid
+            self._rid_map[(dst, rid)] = fr.fid
+            self.steals += 1
+            if self._trace is not None:
+                self._trace.steal(fr.fid, src, dst)
 
     def pending(self) -> int:
-        return sum(eng.scheduler.pending() for eng in self.engines.values())
+        return (sum(eng.scheduler.pending() for eng in self.engines.values())
+                + len(self._orphans))
 
     def run_until_done(self, max_steps: int = 1000
                        ) -> Dict[str, List[Request]]:
         """Drain every instance with interleaved steps (lockstep), so one
-        engine's backlog never inflates another's wall-clock TTFT/TPOT."""
+        engine's backlog never inflates another's wall-clock TTFT/TPOT.
+
+        Raises :class:`FleetExhausted` when ``max_steps`` elapse with work
+        still resident — a partial result set must never read as a
+        complete run."""
         for _ in range(max_steps):
             if not self.step_all() and not self.pending():
                 break
+        else:
+            work = {name: {"in_flight": eng.in_flight(),
+                           "queued": eng.scheduler.pending()}
+                    for name, eng in sorted(self.engines.items())
+                    if eng.in_flight() or eng.scheduler.pending()}
+            if work or self._orphans:
+                raise FleetExhausted(max_steps, work, len(self._orphans))
         return {name: list(eng._finished)
                 for name, eng in self.engines.items()}
+
+    def results(self) -> Dict[int, List[int]]:
+        """fid -> generated tokens for every finished request the fleet
+        tracks (routed or absorbed). The basis for the chaos bench's
+        zero-loss / zero-duplication / token-parity assertions: each fid
+        appears at most once because rid mappings move with the request."""
+        out: Dict[int, List[int]] = {}
+        for name, eng in self.engines.items():
+            for req in eng._finished:
+                fid = self._rid_map.get((name, req.rid))
+                if fid is not None:
+                    out[fid] = list(req.out_tokens)
+        return out
 
     # -- versioned plan rollout ----------------------------------------------
     def roll_plans(self, artifact, drive_fn=None, tolerance: float = 1.10,
@@ -326,5 +706,14 @@ class FleetRouter:
             "rejects": dict(sorted(self.rejects.items())),
             "placements": {str(b): dict(sorted(p.items()))
                            for b, p in sorted(self.placements().items())},
+        }
+        out["fleet"] = {
+            "status": dict(sorted(self.status.items())),
+            "recoveries": self.recoveries,
+            "steals": self.steals,
+            "lost": self.lost,
+            "orphans": len(self._orphans),
+            "tokens_discarded": sum(fr.tokens_discarded
+                                    for fr in self._fleet.values()),
         }
         return out

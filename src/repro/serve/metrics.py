@@ -185,9 +185,21 @@ class ServeMetrics:
         self._pool_used_n = 0
 
     # -- request lifecycle ---------------------------------------------------
-    def record_submit(self, rid: int) -> None:
+    def record_submit(self, rid: int, t: Optional[float] = None) -> None:
+        """Record one submit. ``t`` backdates the anchor: a request
+        re-queued after an engine failure keeps its ORIGINAL submit time,
+        so its recovered first token's TTFT covers the whole outage —
+        tail metrics tell the truth across retries."""
         self.submitted += 1
-        self._submit_t[rid] = self.clock()
+        self._submit_t[rid] = self.clock() if t is None else t
+
+    def drop_submit(self, rid: int) -> Optional[float]:
+        """Forget a pending submit anchor (the request was evicted, stolen,
+        or handed off before its first token here). Returns the dropped
+        timestamp so fleet recovery can re-anchor it on the next engine;
+        None (and a no-op) when the request already produced its first
+        token."""
+        return self._submit_t.pop(rid, None)
 
     def record_reject(self, bucket: Optional[object] = None,
                       reason: str = "admission") -> None:

@@ -150,11 +150,17 @@ class PagedKVPool:
         self._need[rid] = self.pages_needed(total_tokens)
         self._allocs[rid] = 0
 
-    def release(self, rid: int) -> int:
+    def release(self, rid: int, missing_ok: bool = False) -> int:
         """Drop every page reference ``rid`` holds; pages whose refcount
         reaches zero return to the free list (generation bumped). Raises
         ``KeyError`` on an unknown/already-released rid — a double release
-        is a lifecycle bug, never silent. Returns pages freed."""
+        is a lifecycle bug, never silent — unless ``missing_ok`` is set:
+        the eviction path (engine fault recovery, request cancel) tears
+        down requests that may sit anywhere in the admission pipeline,
+        including stages that never registered with the pool, and must be
+        idempotent. Returns pages freed."""
+        if missing_ok and rid not in self.tables:
+            return 0
         table = self.tables.pop(rid)
         del self._need[rid], self._allocs[rid]
         freed = 0

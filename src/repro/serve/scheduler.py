@@ -185,6 +185,15 @@ class FifoScheduler:
     def pending(self) -> int:
         return len(self._queue)
 
+    def remove(self, rid: int):
+        """Pop one queued request by rid (cancel / fleet recovery / work
+        stealing); None when not queued here."""
+        for i, req in enumerate(self._queue):
+            if req.rid == rid:
+                del self._queue[i]
+                return req
+        return None
+
     def queued_buckets(self) -> List[int]:
         """Admitted length of every queued request (fleet load estimates)."""
         return [len(r.prompt) for r in self._queue]
@@ -283,6 +292,18 @@ class ShapeBucketScheduler:
 
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
+
+    def remove(self, rid: int):
+        """Pop one queued request by rid (cancel / fleet recovery / work
+        stealing); None when not queued here. The affected bucket's heap is
+        rebuilt — removal is O(queue), fine for a control-path operation."""
+        for bucket, q in self._queues.items():
+            for i, (_key, req) in enumerate(q):
+                if req.rid == rid:
+                    del q[i]
+                    heapq.heapify(q)
+                    return req
+        return None
 
     def queue_depths(self) -> Dict[int, int]:
         return {bucket: len(q) for bucket, q in self._queues.items()}

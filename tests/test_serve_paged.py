@@ -274,6 +274,126 @@ def test_pool_reservation_admission(smoke_model):
 
 
 # ---------------------------------------------------------------------------
+# Teardown on mid-flight eviction / cancel (fleet fault tolerance)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_paged_cancel_mid_prefill_teardown(smoke_model):
+    """Cancelling a request mid-chunked-prefill releases its pages
+    refcount-balanced (no leak, no double-free), is idempotent, and leaves
+    the survivor's greedy tokens untouched."""
+    cfg, params = smoke_model
+    rng = np.random.default_rng(11)
+    long_p = rng.integers(2, cfg.vocab_size, size=40).astype(np.int32)
+    short_p = rng.integers(2, cfg.vocab_size, size=6).astype(np.int32)
+
+    eng = _engine(cfg, params, "chunked", paged=True, budget=8)
+    victim = eng.add_request(long_p, max_new_tokens=NEW_TOKENS)
+    other = eng.add_request(short_p, max_new_tokens=NEW_TOKENS)
+    eng.step()                   # budget 8 << 40: victim is mid-prefill
+    assert any(j.req.rid == victim for j in eng._chunking), \
+        "setup: victim should be partially prefilled"
+    req = eng.cancel(victim)
+    assert req is not None and req.rid == victim
+    assert eng.cancel(victim) is None        # already gone: no double-free
+    for _ in range(200):
+        eng.step()
+        if not eng.in_flight() and not eng.scheduler.pending():
+            break
+    eng.pool.check_balanced()
+    pm = eng.metrics.as_dict()["pool"]
+    assert pm["page_allocs"] == pm["page_frees"]
+    tokens = {r.rid: tuple(r.out_tokens) for r in eng._finished}
+    assert victim not in tokens and other in tokens
+    # The survivor's tokens match a run that never saw the cancelled
+    # request (greedy parity: cancellation must not corrupt shared state).
+    solo = _engine(cfg, params, "chunked", paged=True, budget=8)
+    solo_rid = solo.add_request(short_p, max_new_tokens=NEW_TOKENS)
+    solo.run_until_done(max_steps=200)
+    assert tokens[other] == tuple(
+        next(r for r in solo._finished if r.rid == solo_rid).out_tokens)
+
+
+@pytest.mark.slow
+def test_paged_evict_all_mid_flight_balanced(smoke_model):
+    """evict_all with a full pipeline (decoding + mid-prefill + ready +
+    queued) releases every page, leaves the pool balanced, and the engine
+    stays serviceable: a re-admitted evicted prompt reproduces a fresh
+    engine's tokens (re-prefill from the prompt, not the torn-down
+    cache)."""
+    cfg, params = smoke_model
+    rng = np.random.default_rng(12)
+    mk = lambda n: rng.integers(2, cfg.vocab_size, size=n).astype(np.int32)
+    prompts = [mk(6), mk(40), mk(30), mk(5)]
+    eng = _engine(cfg, params, "chunked", paged=True, budget=8,
+                  prefill_slots=2)
+    for p in prompts:
+        assert eng.add_request(p, max_new_tokens=NEW_TOKENS) is not None
+    eng.step()
+    eng.step()                   # mix of decode slots, partial, queued
+    finished = {r.rid for r in eng._finished}
+    evicted = eng.evict_all()
+    assert {r.rid for r in evicted} == set(range(len(prompts))) - finished
+    assert eng.in_flight() == 0 and eng.scheduler.pending() == 0
+    eng.pool.check_balanced()
+    pm = eng.metrics.as_dict()["pool"]
+    assert pm["page_allocs"] == pm["page_frees"]
+    # Re-admission after teardown: same engine, evicted prompt, same
+    # greedy tokens as a never-disturbed engine.
+    rid = eng.add_request(prompts[1], max_new_tokens=NEW_TOKENS)
+    assert rid is not None
+    eng.run_until_done(max_steps=200)
+    eng.pool.check_balanced()
+    redone = next(r for r in eng._finished if r.rid == rid)
+    fresh = _engine(cfg, params, "chunked", paged=True, budget=8)
+    fresh_rid = fresh.add_request(prompts[1], max_new_tokens=NEW_TOKENS)
+    fresh.run_until_done(max_steps=200)
+    assert tuple(redone.out_tokens) == tuple(
+        next(r for r in fresh._finished if r.rid == fresh_rid).out_tokens)
+
+
+@pytest.mark.slow
+def test_paged_cancel_shared_prefix_donor(smoke_model):
+    """Cancelling a donor whose pages a resident recipient still maps must
+    not pull the shared pages out from under the recipient: refcounts keep
+    them alive, the recipient's tokens match a sharing-disabled run, and
+    the drained pool balances (prefix-registry consistency after the
+    donor's teardown)."""
+    cfg, params = smoke_model
+    assert supports_prefix_sharing(cfg)
+    rng = np.random.default_rng(7)
+    donor = rng.integers(2, cfg.vocab_size, size=10).astype(np.int32)
+    recipient = np.concatenate(
+        [donor, rng.integers(2, cfg.vocab_size, size=5).astype(np.int32)])
+
+    def run(sharing, cancel_donor):
+        eng = ServeEngine(cfg, params, max_len=64, slots=2,
+                          prefill_slots=2, paged=True, page_size=4,
+                          prefix_sharing=sharing)
+        d = eng.add_request(donor, max_new_tokens=8)
+        eng.step()               # donor prefills + registers its pages
+        eng.add_request(recipient, max_new_tokens=8)
+        eng.step()               # recipient admitted, maps donor pages
+        if cancel_donor:
+            assert eng.cancel(d) is not None
+        for _ in range(200):
+            eng.step()
+            if not eng.in_flight() and not eng.scheduler.pending():
+                break
+        eng.pool.check_balanced()
+        return ({r.rid: tuple(r.out_tokens) for r in eng._finished},
+                eng.metrics.as_dict()["pool"])
+
+    cancelled, shared_pool = run(True, True)
+    plain, _ = run(False, False)
+    assert 0 not in cancelled, "cancelled donor must not finish"
+    assert cancelled[1] == plain[1], \
+        "recipient tokens corrupted by cancelling its prefix donor"
+    assert shared_pool["prefix_hits"] >= 1, "prefix reuse never fired"
+    assert shared_pool["page_allocs"] == shared_pool["page_frees"]
+
+
+# ---------------------------------------------------------------------------
 # Bugfix pins: LRU layout cache / same-step re-admission / ring boundary
 # ---------------------------------------------------------------------------
 
