@@ -1,0 +1,546 @@
+"""Autoscaling under a million-request open-loop load, on a virtual clock.
+
+The REAL :class:`~repro.serve.autoscale.AutoscalePolicy` — the same object
+``FleetRouter.step_all`` consults — drives a deterministic queueing
+simulator through a ramp / flash-crowd-spike / decay schedule from
+``benchmarks.traces.open_loop_arrivals`` (Zipf-bucketed lengths,
+seed-pinned, streamed tick by tick so ~10^6 requests never materialize in
+memory at once). Per-request service times come from the repo's own cost
+model: ``compile_entry`` prices prefill at each bucket edge and one decode
+step per hardware model at the FULL architecture dims, so the simulator
+runs in the real cost regime — v5e/v6e prefill costs diverge ~4.5x
+(compute-bound) while decode diverges ~2x (bandwidth-bound), which is
+exactly the asymmetry the policy's mix-weighted candidate pricing exists
+to exploit.
+
+Why a simulator and not real engines: at 10^6 requests the point under
+test is the POLICY (signals -> decisions -> capacity), not the kernels.
+The policy cannot tell the difference — it only sees the adapter protocol
+(``live_instances`` / ``queue_depths`` / ``ttft_window_since`` /
+``traffic_mix`` / ``price_candidate`` / ``scale_join`` / …) that
+:class:`SimFleet` implements identically to ``FleetRouter``; the
+real-router integration is covered by ``tests/test_autoscale.py``.
+
+Arms and assertions (exit 1 on violation; CI runs ``--smoke``):
+
+  static    right-sized fixed fleet — enough v5e instances to absorb the
+            spike rate, computed from the cost model (the capacity
+            baseline the policy must approach);
+  policy    starts at ``min_instances=1`` and autoscales over a
+            heterogeneous {v5e at price 1.0, v6e at price 3.0} pool.
+
+  1. zero lost requests in every arm: completed == submitted at ~10^6
+     scale, every queue fully drained;
+  2. the policy holds pooled p95 TTFT within ``TTFT_P95_FACTOR`` x the
+     static fleet's p95 while spending FEWER instance-steps (elasticity
+     pays for its reaction lag);
+  3. the policy actually scales: >= 1 join and >= 1 drain, and the fleet
+     returns to ``min_instances`` live members by the end of the decay;
+  4. byte-identical traces and identical decision logs across a full
+     re-run (same seed -> same schedule -> same decisions);
+  5. cross-model join divergence: under a compute-heavy mix the first
+     join is the high-FLOPs model (tpu_v6e despite its 3x price), under
+     a memory-heavy mix the high-bandwidth-per-price model (tpu_v5e) —
+     the paper's cross-model result at fleet-capacity granularity.
+
+``--trace-out`` writes the balanced policy run's trace (the re-run lands
+at ``<stem>.rerun<suffix>`` for CI's ``trace_report --diff``);
+``--decisions-out`` writes the decision logs as a JSON artifact. TTFT
+spans are sampled 1-in-``TTFT_SAMPLE_EVERY`` into the trace so
+``trace_report`` reads a meaningful (and bounded) latency summary.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from traces import OPEN_LOOP_MIXES, open_loop_arrivals, zipf_weights
+
+ARCH = "qwen2-1.5b"
+EDGES = (512, 4096, 32768)
+#: Candidate pool: hardware -> relative $/instance-step. v6e is faster on
+#: BOTH axes, so without pricing it would always win; at 3x the price it
+#: wins only where its advantage exceeds 3x — prefill-heavy traffic.
+PRICES = {"tpu_v5e": 1.0, "tpu_v6e": 3.0}
+TICK_S = 0.5                     # virtual seconds per simulator tick
+FULL_REF_LEN = 32768
+TTFT_SAMPLE_EVERY = 997          # 1-in-N trace sampling (prime stride)
+TTFT_P95_FACTOR = 10.0
+MAX_DRAIN_TICKS = 50_000
+
+SMOKE = dict(total=20_000, peak_rate=60.0, mix_total=4_000)
+FULL = dict(total=1_000_000, peak_rate=120.0, mix_total=200_000)
+
+SEED = 11
+
+
+class VirtualClock:
+    """Injectable tracer clock; the driver advances it between ticks."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+# -- cost model --------------------------------------------------------------
+def cost_table(plans_path: Optional[str], print_fn) -> Dict[str, dict]:
+    """hardware -> {"prefill": {edge: s}, "decode_step": s} at the FULL
+    architecture dims (batch 1). A ``--plans`` artifact is consulted
+    first (exact-match cells only — a nearest/cross-hardware donor's
+    score is the donor's, not this cell's); anything it misses is
+    compiled fresh."""
+    from repro import configs
+    from repro.core import HARDWARE_REGISTRY, Autotuner
+    from repro.core.plans import TilePlan, compile_entry
+    from repro.launch.specs import kernel_problems
+
+    plans = None
+    if plans_path and os.path.exists(plans_path):
+        plans = TilePlan.load(plans_path)
+
+    cfg = configs.get_arch(ARCH)
+
+    def score(kernel: str, problem, hw) -> float:
+        if plans is not None:
+            res = plans.resolve(kernel, problem, "float32", hw)
+            if res is not None and getattr(res, "source", None) == "exact":
+                return res.score_s
+        return compile_entry(kernel, problem, "float32", hw,
+                             autotuner=Autotuner()).score_s
+
+    costs: Dict[str, dict] = {}
+    for hw_name in sorted(PRICES):
+        hw = HARDWARE_REGISTRY[hw_name]
+        prefill = {}
+        for edge in EDGES:
+            prob = kernel_problems(cfg, 1, edge, "prefill")["flash_attention"]
+            prefill[edge] = score("flash_attention", prob, hw)
+        dec_prob = kernel_problems(cfg, 1, FULL_REF_LEN,
+                                   "decode")["flash_decode"]
+        costs[hw_name] = {
+            "prefill": prefill,
+            "decode_step": score("flash_decode", dec_prob, hw),
+        }
+        print_fn(f"# {hw_name}: prefill "
+                 + ", ".join(f"@{e}={prefill[e]:.3e}s" for e in EDGES)
+                 + f", decode_step={costs[hw_name]['decode_step']:.3e}s")
+    return costs
+
+
+def service_s(costs: Dict[str, dict], hw: str, bucket: int,
+              new_tokens: int) -> float:
+    c = costs[hw]
+    return c["prefill"][bucket] + new_tokens * c["decode_step"]
+
+
+def expected_service_s(costs: Dict[str, dict], hw: str, mix: str) -> float:
+    """Analytic expected per-request seconds for one generator mix — used
+    to right-size the static arm from the cost model alone."""
+    order, (nt_lo, nt_hi) = OPEN_LOOP_MIXES[mix]
+    edges = sorted(EDGES)
+    ranked = edges if order == "asc" else edges[::-1]
+    w = zipf_weights(len(ranked))
+    avg_nt = (nt_lo + nt_hi) / 2.0
+    return sum(float(wi) * service_s(costs, hw, b, int(round(avg_nt)))
+               for wi, b in zip(w, ranked))
+
+
+# -- the queueing simulator --------------------------------------------------
+class SimInstance:
+    """One simulated server: FIFO queue, ``TICK_S`` seconds of service
+    capacity per tick. A queue item is (submit_t, bucket, prefill_s,
+    total_s); TTFT = time the prefill portion completes - submit."""
+
+    __slots__ = ("name", "hw", "queue", "head_done", "backlog_s")
+
+    def __init__(self, name: str, hw: str):
+        self.name = name
+        self.hw = hw
+        self.queue: deque = deque()
+        self.head_done = 0.0
+        self.backlog_s = 0.0
+
+
+class SimFleet:
+    """The autoscale adapter protocol over SimInstances — duck-typed
+    identically to ``FleetRouter``'s implementation, so the policy under
+    test is byte-for-byte the production one."""
+
+    def __init__(self, costs: Dict[str, dict], clock: VirtualClock,
+                 proc=None):
+        self.costs = costs
+        self.clock = clock
+        self.proc = proc
+        self.instances: Dict[str, SimInstance] = {}
+        self.status: Dict[str, str] = {}
+        self.ttfts: List[float] = []
+        self.submitted = 0
+        self.completed = 0
+        self.instance_steps = 0
+        self.peak_live = 0
+        self._mix: Dict[int, int] = {}
+        self._nt_sum = 0
+        self._nt_n = 0
+
+    def add_instance(self, name: str, hw: str) -> None:
+        self.instances[name] = SimInstance(name, hw)
+        self.status[name] = "live"
+
+    # -- adapter protocol --------------------------------------------------
+    def live_instances(self) -> List[str]:
+        return [n for n in sorted(self.instances)
+                if self.status[n] == "live"]
+
+    def known_instances(self) -> set:
+        return set(self.instances)
+
+    def instance_hardware(self, name: str) -> Optional[str]:
+        inst = self.instances.get(name)
+        return inst.hw if inst is not None else None
+
+    def queue_depths(self) -> Dict[str, int]:
+        return {n: len(inst.queue)
+                for n, inst in sorted(self.instances.items())}
+
+    def ttft_marks(self) -> int:
+        return len(self.ttfts)
+
+    def ttft_window_since(self, mark) -> Tuple[List[float], bool]:
+        return list(self.ttfts[mark or 0:]), False
+
+    def traffic_mix(self) -> Tuple[Dict[int, int], int, int]:
+        return dict(self._mix), self._nt_sum, self._nt_n
+
+    def pool_occupancy(self) -> float:
+        return 0.0
+
+    def orphan_count(self) -> int:
+        return 0
+
+    def _mix_price(self, hw: str, mix, nt: int) -> float:
+        if not mix:
+            mix = {e: 1 for e in EDGES}
+        total_w = sum(mix.values())
+        return sum(w * service_s(self.costs, hw, b, nt)
+                   for b, w in sorted(mix.items())) / max(total_w, 1)
+
+    def price_instance(self, name: str, mix, nt: int) -> float:
+        return self._mix_price(self.instances[name].hw, mix, nt)
+
+    def price_candidate(self, cand, mix, nt: int) -> float:
+        return self._mix_price(cand.hardware, mix, nt)
+
+    def scale_join(self, name: str, engine: SimInstance) -> None:
+        self.instances[name] = engine
+        self.status[name] = "live"
+
+    def scale_drain(self, name: str) -> None:
+        if self.status.get(name) == "live":
+            self.status[name] = "draining"
+
+    def record_autoscale(self, decision) -> None:
+        if self.proc is not None:
+            self.proc.autoscale(decision.action, decision.instance,
+                                decision.hardware, decision.reason,
+                                decision.signals)
+
+    # -- load + service ----------------------------------------------------
+    def submit(self, t: float, length: int, new_tokens: int) -> None:
+        bucket = next(e for e in EDGES if length <= e)
+        self._mix[bucket] = self._mix.get(bucket, 0) + 1
+        self._nt_sum += new_tokens
+        self._nt_n += 1
+        live = self.live_instances()
+        best, best_score = None, None
+        for n in live:
+            inst = self.instances[n]
+            svc = service_s(self.costs, inst.hw, bucket, new_tokens)
+            score = svc * (1.0 + inst.backlog_s / TICK_S)
+            if best_score is None or (score, n) < (best_score, best):
+                best, best_score = n, score
+        inst = self.instances[best]
+        pf = self.costs[inst.hw]["prefill"][bucket]
+        total = service_s(self.costs, inst.hw, bucket, new_tokens)
+        inst.queue.append((t, bucket, pf, total))
+        inst.backlog_s += total
+        self.submitted += 1
+
+    def tick(self, t0: float) -> None:
+        """Serve up to TICK_S seconds of queued work on every powered
+        instance; record TTFTs at the virtual time prefill completes."""
+        for name in sorted(self.instances):
+            st = self.status[name]
+            if st not in ("live", "draining"):
+                continue
+            self.instance_steps += 1
+            inst = self.instances[name]
+            budget = TICK_S
+            while inst.queue and budget > 1e-12:
+                submit_t, bucket, pf, total = inst.queue[0]
+                rem = total - inst.head_done
+                take = min(rem, budget)
+                if inst.head_done < pf <= inst.head_done + take + 1e-12:
+                    ttft = (t0 + (TICK_S - budget)
+                            + (pf - inst.head_done)) - submit_t
+                    self.ttfts.append(ttft)
+                    if (self.proc is not None
+                            and len(self.ttfts) % TTFT_SAMPLE_EVERY == 1):
+                        self.proc.span(
+                            0, "ttft", "lifecycle", submit_t, ttft,
+                            args={"rid": len(self.ttfts), "bucket": bucket})
+                inst.head_done += take
+                budget -= take
+                inst.backlog_s = max(inst.backlog_s - take, 0.0)
+                if take >= rem - 1e-12:
+                    inst.queue.popleft()
+                    inst.head_done = 0.0
+                    self.completed += 1
+            if st == "draining" and not inst.queue:
+                self.status[name] = "drained"
+        self.peak_live = max(self.peak_live, len(self.live_instances()))
+
+    def pending(self) -> int:
+        return sum(len(inst.queue) for inst in self.instances.values())
+
+
+# -- arms --------------------------------------------------------------------
+def make_policy(costs, n_max: int):
+    from repro.serve import AutoscalePolicy, ScaleCandidate
+
+    candidates = tuple(
+        ScaleCandidate(name=hw.split("_")[-1], hardware=hw,
+                       make_engine=lambda name, hw=hw: SimInstance(name, hw),
+                       price=PRICES[hw])
+        for hw in sorted(PRICES))
+    return AutoscalePolicy(
+        candidates, min_instances=1, max_instances=n_max,
+        interval=2, cooldown=1,
+        queue_high=32.0, queue_low=2.0,
+        ttft_high=2.0 * TICK_S, ttft_low=0.5 * TICK_S,
+        low_evals=6, min_ttft_samples=32,
+        instance_prices={"a": PRICES["tpu_v5e"]})
+
+
+def run_arm(costs, *, total: int, peak_rate: float, mix: str,
+            static_n: Optional[int] = None, n_max: int = 8,
+            tracer=None, clock: Optional[VirtualClock] = None):
+    """One full ramp/spike/decay pass. ``static_n`` fixes that many v5e
+    instances with no policy; otherwise the arm starts at one v5e and the
+    AutoscalePolicy decides everything."""
+    proc = (tracer.attach("sim-fleet", kind="router") if tracer is not None
+            else None)
+    fleet = SimFleet(costs, clock or VirtualClock(), proc=proc)
+    policy = None
+    if static_n is not None:
+        for i in range(static_n):
+            fleet.add_instance(f"s{i}", "tpu_v5e")
+    else:
+        fleet.add_instance("a", "tpu_v5e")
+        policy = make_policy(costs, n_max)
+    phase_seen = []
+    last_tick = 0
+    for tick, phase, batch in open_loop_arrivals(
+            SEED, EDGES, total, peak_rate=peak_rate, mix=mix):
+        t0 = tick * TICK_S
+        if clock is not None:
+            clock.t = t0
+        if not phase_seen or phase_seen[-1] != phase:
+            phase_seen.append(phase)
+        for length, nt in batch:
+            fleet.submit(t0, length, nt)
+        fleet.tick(t0)
+        if policy is not None:
+            policy.observe(fleet, tick)
+        last_tick = tick
+    drain_ticks = 0
+    while fleet.pending():
+        last_tick += 1
+        drain_ticks += 1
+        if drain_ticks > MAX_DRAIN_TICKS:
+            break
+        t0 = last_tick * TICK_S
+        if clock is not None:
+            clock.t = t0
+        fleet.tick(t0)
+        if policy is not None:
+            policy.observe(fleet, last_tick)
+    if tracer is not None:
+        tracer.flush()
+    return dict(fleet=fleet, policy=policy, ticks=last_tick + 1,
+                phases=phase_seen)
+
+
+def run(smoke: bool = False, plans_path: Optional[str] = None,
+        trace_out: Optional[str] = None, decisions_out: Optional[str] = None,
+        print_fn=print) -> int:
+    from repro import kernels
+    from repro.obs import Tracer, write_trace
+    from repro.serve.metrics import nearest_rank
+
+    kernels.register_all()
+    p = SMOKE if smoke else FULL
+    costs = cost_table(plans_path, print_fn)
+
+    failures = 0
+
+    def check(cond: bool, msg: str) -> None:
+        nonlocal failures
+        if not cond:
+            failures += 1
+            print_fn(f"FAIL: {msg}")
+
+    # Right-size the static arm from the cost model: enough v5e capacity
+    # to absorb the spike rate with one instance of headroom.
+    svc = expected_service_s(costs, "tpu_v5e", "balanced")
+    static_n = math.ceil(p["peak_rate"] * 3.0 * svc / TICK_S) + 1
+    print_fn(f"# balanced mix: E[service] on tpu_v5e = {svc * 1e3:.2f}ms "
+             f"-> static fleet = {static_n} x tpu_v5e")
+
+    def p95(arm) -> float:
+        return nearest_rank(arm["fleet"].ttfts, 0.95)
+
+    def summarize(label: str, arm) -> None:
+        f = arm["fleet"]
+        n_dec = len(arm["policy"].decisions) if arm["policy"] else 0
+        print_fn(f"{label}: {f.completed}/{f.submitted} requests over "
+                 f"{arm['ticks']} ticks, p95 TTFT={p95(arm) * 1e3:.1f}ms, "
+                 f"instance_steps={f.instance_steps}, "
+                 f"peak_live={f.peak_live}, decisions={n_dec}")
+
+    # -- static right-sized baseline ---------------------------------------
+    static = run_arm(costs, total=p["total"], peak_rate=p["peak_rate"],
+                     mix="balanced", static_n=static_n)
+    summarize("static", static)
+    check(static["fleet"].completed == static["fleet"].submitted
+          and static["fleet"].submitted == p["total"],
+          f"static: lost requests ({static['fleet'].completed}/"
+          f"{static['fleet'].submitted}, expected {p['total']})")
+
+    # -- policy arm (with trace) -------------------------------------------
+    clock = VirtualClock()
+    tracer = Tracer(clock=clock)
+    policy_arm = run_arm(costs, total=p["total"], peak_rate=p["peak_rate"],
+                         mix="balanced", n_max=static_n, tracer=tracer,
+                         clock=clock)
+    summarize("policy", policy_arm)
+    pf, pol = policy_arm["fleet"], policy_arm["policy"]
+    check(policy_arm["phases"] == ["ramp", "spike", "decay"],
+          f"policy: phases out of order: {policy_arm['phases']}")
+    check(pf.completed == pf.submitted and pf.submitted == p["total"],
+          f"policy: lost requests ({pf.completed}/{pf.submitted}, "
+          f"expected {p['total']})")
+    joins = [d for d in pol.decisions if d.action == "join"]
+    drains = [d for d in pol.decisions if d.action == "drain"]
+    check(len(joins) >= 1, "policy: never joined capacity")
+    check(len(drains) >= 1, "policy: never drained capacity")
+    check(pf.peak_live > 1, "policy: fleet never grew past 1 instance")
+    check(len(pf.live_instances()) == pol.min_instances,
+          f"policy: decay did not return the fleet to min_instances "
+          f"(live={pf.live_instances()})")
+    check(p95(policy_arm) <= TTFT_P95_FACTOR * p95(static),
+          f"policy p95 TTFT {p95(policy_arm):.4f}s exceeds "
+          f"{TTFT_P95_FACTOR}x static {p95(static):.4f}s")
+    check(pf.instance_steps < static["fleet"].instance_steps,
+          f"policy used {pf.instance_steps} instance-steps, static only "
+          f"{static['fleet'].instance_steps} — elasticity saved nothing")
+
+    # -- determinism: full re-run, identical decisions + trace bytes -------
+    clock2 = VirtualClock()
+    tracer2 = Tracer(clock=clock2)
+    rerun = run_arm(costs, total=p["total"], peak_rate=p["peak_rate"],
+                    mix="balanced", n_max=static_n, tracer=tracer2,
+                    clock=clock2)
+    log1 = [d.as_dict() for d in pol.decisions]
+    log2 = [d.as_dict() for d in rerun["policy"].decisions]
+    check(log1 == log2, "determinism: re-run decision log differs")
+    check(rerun["fleet"].ttfts == pf.ttfts,
+          "determinism: re-run TTFT stream differs")
+    if trace_out:
+        stem, suffix = os.path.splitext(trace_out)
+        rerun_out = f"{stem}.rerun{suffix or '.json'}"
+        write_trace(tracer, trace_out)
+        write_trace(tracer2, rerun_out)
+        with open(trace_out, "rb") as f:
+            b1 = f.read()
+        with open(rerun_out, "rb") as f:
+            b2 = f.read()
+        check(b1 == b2, "determinism: re-run trace is not byte-identical")
+        print_fn(f"# trace written to {trace_out} ({len(tracer.events)} "
+                 f"events; re-run at {rerun_out} is byte-identical)")
+
+    # -- cross-model join divergence by traffic mix ------------------------
+    first_join = {}
+    for mix in ("compute_heavy", "memory_heavy"):
+        arm = run_arm(costs, total=p["mix_total"],
+                      peak_rate=p["peak_rate"] / 2, mix=mix, n_max=6)
+        summarize(mix, arm)
+        f = arm["fleet"]
+        check(f.completed == f.submitted and f.submitted == p["mix_total"],
+              f"{mix}: lost requests ({f.completed}/{f.submitted})")
+        mix_joins = [d for d in arm["policy"].decisions
+                     if d.action == "join"]
+        check(len(mix_joins) >= 1, f"{mix}: policy never joined")
+        if mix_joins:
+            first_join[mix] = mix_joins[0].hardware
+            print_fn(f"# {mix}: first join = {mix_joins[0].hardware} "
+                     f"(reason={mix_joins[0].reason})")
+    if len(first_join) == 2:
+        check(first_join["compute_heavy"] == "tpu_v6e",
+              f"compute-heavy mix joined {first_join['compute_heavy']}, "
+              f"expected tpu_v6e (prefill advantage 4.5x > 3x price)")
+        check(first_join["memory_heavy"] == "tpu_v5e",
+              f"memory-heavy mix joined {first_join['memory_heavy']}, "
+              f"expected tpu_v5e (decode advantage 2x < 3x price)")
+        check(first_join["compute_heavy"] != first_join["memory_heavy"],
+              "mixes joined the same hardware — no cross-model divergence")
+
+    if decisions_out:
+        payload = {
+            "balanced": pol.as_dict(),
+            "static_n": static_n,
+            "first_join_by_mix": first_join,
+            "p95_ttft_s": {"policy": p95(policy_arm), "static": p95(static)},
+            "instance_steps": {"policy": pf.instance_steps,
+                               "static": static["fleet"].instance_steps},
+        }
+        with open(decisions_out, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print_fn(f"# decision log written to {decisions_out}")
+
+    print_fn("PASS" if not failures else f"{failures} FAILURES")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="2e4-request schedule for CI (seconds, not minutes)")
+    ap.add_argument("--plans", default=None,
+                    help="compiled TilePlan artifact; exact-match cells are "
+                         "reused for the cost table, everything else is "
+                         "compiled fresh")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the balanced policy run's deterministic "
+                         "trace here (re-run lands at <stem>.rerun<suffix>; "
+                         "the bench asserts byte equality and CI diffs the "
+                         "pair with trace_report --diff)")
+    ap.add_argument("--decisions-out", default=None,
+                    help="write the autoscale decision log JSON here "
+                         "(uploaded as a CI artifact)")
+    args = ap.parse_args()
+    sys.exit(1 if run(smoke=args.smoke, plans_path=args.plans,
+                      trace_out=args.trace_out,
+                      decisions_out=args.decisions_out)
+             else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -97,6 +97,88 @@ def make_trace(family: str, seed: int, vocab: int, edges: Sequence[int],
     return prompts(adversarial_lengths(family, edges, n, rng), rng, vocab)
 
 
+# -- scaled open-loop arrivals (autoscale bench) ----------------------------
+# Traffic mixes for the open-loop generator. Each entry is
+# (bucket_order, new_tokens_range): ``bucket_order`` picks whether the
+# Zipf head lands on the SHORTEST edge ("asc" — prefill-light) or the
+# LONGEST ("desc" — prefill-heavy); the range bounds per-request decode
+# tokens. "compute_heavy" = long prefills + few decode steps (FLOPs-bound
+# service); "memory_heavy" = short prefills + many decode steps
+# (bandwidth-bound service). The autoscale bench uses the pair to show
+# the policy joining DIFFERENT hardware models per mix.
+OPEN_LOOP_MIXES: Dict[str, tuple] = {
+    "balanced": ("asc", (8, 64)),
+    "compute_heavy": ("desc", (4, 16)),
+    "memory_heavy": ("asc", (96, 256)),
+}
+
+#: Open-loop load phases, in order: diurnal ramp up, flash-crowd spike,
+#: decay back to trough.
+OPEN_LOOP_PHASES = ("ramp", "spike", "decay")
+
+
+def zipf_weights(n: int, a: float = 1.2) -> np.ndarray:
+    """Normalized Zipf weights ``rank^-a`` over ``n`` ranks."""
+    w = np.arange(1, n + 1, dtype=np.float64) ** (-float(a))
+    return w / w.sum()
+
+
+def open_loop_arrivals(seed: int, edges: Sequence[int], total: int, *,
+                       peak_rate: float = 64.0, ramp_frac: float = 0.35,
+                       spike_frac: float = 0.15, spike_mult: float = 3.0,
+                       zipf_a: float = 1.2, mix: str = "balanced"):
+    """Streaming open-loop arrival schedule at production scale.
+
+    Yields ``(tick, phase, batch)`` per virtual tick, where ``batch`` is a
+    list of ``(prompt_len, new_tokens)`` pairs arriving that tick —
+    requests are generated tick by tick, so a ~10^6-request run never
+    materializes in memory at once. Pure function of the arguments
+    (seed-pinned ``np.random.default_rng``): same inputs, bit-identical
+    schedule on every replay.
+
+    Shape: lengths are Zipf-bucketed over ``edges`` (head bucket per
+    ``mix``, uniform within the chosen bucket); rate follows a diurnal
+    ramp (linear 0.1 -> 1.0 of ``peak_rate`` over the first ``ramp_frac``
+    of requests), a flash-crowd spike (``spike_mult`` x peak for the next
+    ``spike_frac``), then a decay (linear 1.0 -> 0.05) until ``total``
+    requests have been emitted. Per-tick counts are Poisson draws at the
+    phase rate.
+    """
+    if mix not in OPEN_LOOP_MIXES:
+        raise ValueError(
+            f"unknown mix {mix!r} (known: {sorted(OPEN_LOOP_MIXES)})")
+    order, (nt_lo, nt_hi) = OPEN_LOOP_MIXES[mix]
+    edges = sorted(int(e) for e in edges)
+    ranked = edges if order == "asc" else edges[::-1]
+    weights = zipf_weights(len(ranked), zipf_a)
+    lows = {edge: ([1] + [e + 1 for e in edges])[i]
+            for i, edge in enumerate(edges)}
+    rng = np.random.default_rng(seed)
+    emitted, tick = 0, 0
+    while emitted < total:
+        p = emitted / total
+        if p < ramp_frac:
+            phase = "ramp"
+            rate = peak_rate * (0.1 + 0.9 * (p / ramp_frac))
+        elif p < ramp_frac + spike_frac:
+            phase = "spike"
+            rate = peak_rate * spike_mult
+        else:
+            phase = "decay"
+            q = (p - ramp_frac - spike_frac) / max(
+                1.0 - ramp_frac - spike_frac, 1e-9)
+            rate = peak_rate * (1.0 - 0.95 * q)
+        k = min(int(rng.poisson(rate)), total - emitted)
+        batch = []
+        for _ in range(k):
+            edge = ranked[int(rng.choice(len(ranked), p=weights))]
+            length = int(rng.integers(lows[edge], edge + 1))
+            batch.append((length, int(rng.integers(nt_lo, nt_hi + 1))))
+        emitted += k
+        yield tick, phase, batch
+        tick += 1
+
+
 def trace_summary(trace: Sequence[np.ndarray],
                   edges: Sequence[int]) -> Dict[str, int]:
     """Small/long/overflow composition of a trace (for bench logs)."""

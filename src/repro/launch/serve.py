@@ -38,6 +38,14 @@ with ``--no-prefix-sharing``), and prefill admission is gated by pool
 headroom instead of ``--prefill-slots``. Served tokens are identical to
 the contiguous path; pool counters print under ``pool`` in the metrics.
 
+``--autoscale`` (with ``--fleet``) starts from a minimal fleet and lets
+the telemetry-driven :class:`~repro.serve.autoscale.AutoscalePolicy`
+join/drain instances between ``--min-instances`` and ``--max-instances``:
+every listed hardware model is a scale candidate, priced by the live
+traffic mix, so compute-heavy and memory-heavy workloads grow DIFFERENT
+hardware. Decisions land on the fleet trace lane and under ``autoscale``
+in the exit metrics.
+
 ``--refine`` closes the loop from telemetry back to the plan: engines divert
 ``--shadow-fraction`` of their steps to shadow-measuring candidate tiles
 from the artifact's sensitivity curves (served tokens are untouched), the
@@ -138,6 +146,15 @@ def main():
     ap.add_argument("--retry-budget", type=int, default=2,
                     help="fleet: recovery attempts per request before it "
                          "is declared lost")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="fleet: start with ONE instance (the first --fleet "
+                         "model) and let the telemetry-driven policy join/"
+                         "drain instances — every --fleet model is a scale "
+                         "candidate, priced by the live traffic mix")
+    ap.add_argument("--min-instances", type=int, default=1,
+                    help="autoscale: never drain below this many instances")
+    ap.add_argument("--max-instances", type=int, default=4,
+                    help="autoscale: never join above this many instances")
     ap.add_argument("--refine", action="store_true",
                     help="shadow-measure candidate tiles during service and "
                          "emit a refined (re-ranked) plan artifact at exit; "
@@ -159,6 +176,13 @@ def main():
 
     logging.basicConfig(level=logging.INFO,
                         format="%(asctime)s %(name)s %(message)s")
+    # The fleet router's cost model (and autoscale candidate pricing)
+    # scores default tiles straight from the kernel registry; engines only
+    # register lazily on their first plan resolution, which is too late
+    # for the first route() call.
+    from repro import kernels
+
+    kernels.register_all()
     cfg = configs.get_smoke(args.arch)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     plans = TilePlan.load_or_none(args.tile_plans)
@@ -190,7 +214,7 @@ def main():
             allow_overflow=(args.chunk_prefill or args.pack_prefill
                             or args.paged))
 
-    def make_engine(hw_name: str) -> ServeEngine:
+    def make_engine(hw_name: str, instance: str = None) -> ServeEngine:
         return ServeEngine(
             cfg, params, max_len=args.max_len, slots=args.slots,
             plans=plans, hardware=HARDWARE_REGISTRY[hw_name],
@@ -202,17 +226,39 @@ def main():
             paged=args.paged,
             prefix_sharing=not args.no_prefix_sharing,
             shadow_fraction=args.shadow_fraction if args.refine else 0.0,
-            refiner=refiner, tracer=tracer, instance=hw_name)
+            refiner=refiner, tracer=tracer,
+            instance=instance or hw_name)
 
     router = None
     if fleet_names:
         if args.scheduler != "bucket":
             raise SystemExit("--fleet requires --scheduler bucket "
                              "(routing is per shape bucket)")
-        router = FleetRouter({h: make_engine(h) for h in fleet_names}, policy,
+        autoscaler = None
+        seed_names = fleet_names
+        if args.autoscale:
+            from repro.serve import AutoscalePolicy, ScaleCandidate
+
+            # Start minimal; every --fleet model is a candidate the policy
+            # may join (under its own name, suffixed on re-join) when the
+            # mix-priced cost says so.
+            candidates = tuple(
+                ScaleCandidate(name=h, hardware=h,
+                               make_engine=lambda name, hw=h:
+                                   make_engine(hw, instance=name))
+                for h in fleet_names)
+            autoscaler = AutoscalePolicy(
+                candidates, min_instances=args.min_instances,
+                max_instances=args.max_instances)
+            seed_names = fleet_names[:max(1, args.min_instances)]
+        router = FleetRouter({h: make_engine(h) for h in seed_names}, policy,
                              tracer=tracer,
                              watchdog_threshold=args.watchdog_threshold,
-                             retry_budget=args.retry_budget)
+                             retry_budget=args.retry_budget,
+                             autoscaler=autoscaler)
+    elif args.autoscale:
+        raise SystemExit("--autoscale requires --fleet (the candidates come "
+                         "from its hardware list)")
     else:
         engine = make_engine(args.hardware)
 
@@ -243,6 +289,15 @@ def main():
         print("placements:", {str(b): p for b, p in
                               sorted(router.placements().items())})
         metrics = router.metrics()
+        scale = metrics.get("autoscale")
+        if scale is not None:
+            print(f"autoscale: {scale['joins']} join(s), "
+                  f"{scale['drains']} drain(s) over "
+                  f"{scale['evaluations']} evaluation(s); final fleet: "
+                  f"{router.live_instances()}")
+            for entry in scale["log"]:
+                print(f"  step {entry['step']}: {entry['action']} "
+                      f"{entry['instance']} ({entry['reason']})")
     else:
         done = engine.run_until_done()
         for r in done:

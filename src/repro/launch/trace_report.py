@@ -3,7 +3,7 @@
 Usage::
 
     # Summarize one trace: per-request waterfall, plan-source attribution,
-    # pack-occupancy summary.
+    # pack-occupancy summary, autoscale decision log.
     python -m repro.launch.trace_report trace.json
 
     # Regression diff: BASE then CANDIDATE. Exits nonzero when the
@@ -121,6 +121,23 @@ def pack_occupancy(trace: Dict[str, Any]) -> Dict[str, Any]:
     }
 
 
+def autoscale_log(trace: Dict[str, Any]) -> List[Dict[str, Any]]:
+    """Autoscale decisions (the fleet lane's ``autoscale`` instants) in
+    time order, each with its full signal snapshot."""
+    out = []
+    for ev in trace["events"]:
+        if ev.get("name") != "autoscale":
+            continue
+        a = _args(ev)
+        out.append({"ts": ev.get("ts"), "pid": ev["pid"],
+                    "action": a.get("action"), "instance": a.get("instance"),
+                    "hardware": a.get("hardware"), "reason": a.get("reason"),
+                    "signals": a.get("signals") or {}})
+    out.sort(key=lambda d: (d["ts"] if d["ts"] is not None else 0.0,
+                            str(d["instance"])))
+    return out
+
+
 def ttft_values(trace: Dict[str, Any]) -> List[float]:
     """Every request's TTFT (the ``ttft`` span durations), pooled."""
     return [ev.get("dur", 0.0) for ev in trace["events"]
@@ -148,6 +165,7 @@ def summarize(trace: Dict[str, Any]) -> Dict[str, Any]:
         },
         "occupancy": pack_occupancy(trace),
         "rejects": rejects(trace),
+        "autoscale": autoscale_log(trace),
     }
 
 
@@ -196,6 +214,25 @@ def render(trace: Dict[str, Any], max_rows: int = 20) -> str:
             f"  {names.get(row['pid'], row['pid']):<14} "
             f"{str(row['phase']):<8} {str(row['kernel']):<22} "
             f"{str(row['source']):<14} {row['count']:>4}")
+
+    scale = s["autoscale"]
+    if scale:
+        lines.append("")
+        lines.append("autoscale decisions:")
+        lines.append(f"  {'t_s':>10} {'action':<6} {'instance':<14} "
+                     f"{'reason':<16} signals")
+        for d in scale:
+            sig = d["signals"]
+            ttft = sig.get("p95_ttft")
+            brief = (f"q/inst={sig.get('queue_per_instance')} "
+                     f"p95={ttft * 1e3:.1f}ms " if ttft is not None else
+                     f"q/inst={sig.get('queue_per_instance')} p95=- ")
+            brief += (f"orphans={sig.get('orphans')} "
+                      f"fleet={sig.get('instances')}")
+            ts = f"{d['ts']:.3f}" if d["ts"] is not None else "-"
+            lines.append(f"  {ts:>10} {str(d['action']):<6} "
+                         f"{str(d['instance']):<14} {str(d['reason']):<16} "
+                         f"{brief}")
     return "\n".join(lines)
 
 

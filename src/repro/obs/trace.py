@@ -44,6 +44,11 @@ Event vocabulary (names are a stable contract with
   instance's new status, per-request recovery decisions (source, target,
   retries, tokens discarded), graceful drain begin/done, elastic joins,
   and work-stealing moves.
+- ``autoscale`` — one instant per autoscaler decision
+  (``repro.serve.autoscale``) on the fleet lane: the join/drain action,
+  the chosen instance/hardware, the triggering reason, and the full
+  signal snapshot (queue depth, windowed p95 TTFT, pool occupancy,
+  orphan count) the policy evaluated.
 
 Zero-cost when disabled: components hold ``self._trace = None`` unless a
 tracer was injected and guard every site with ``if self._trace is not
@@ -388,6 +393,18 @@ class ProcTrace:
     def steal(self, fid: int, src: str, dst: str) -> None:
         self.instant(LANE_FLEET, "steal", "fleet",
                      args={"fid": int(fid), "src": src, "dst": dst})
+
+    def autoscale(self, action: str, instance: str,
+                  hardware: Optional[str], reason: str,
+                  signals: Dict[str, float]) -> None:
+        """One autoscaler decision (``repro.serve.autoscale``): the
+        join/drain action plus the full telemetry snapshot that triggered
+        it, so a trace alone explains WHY the fleet changed size."""
+        self.instant(LANE_FLEET, "autoscale", "fleet",
+                     args={"action": action, "instance": instance,
+                           "hardware": hardware, "reason": reason,
+                           "signals": {k: signals[k]
+                                       for k in sorted(signals)}})
 
     def refine_cell(self, kernel: str, problem: str, old_tile: Any,
                     new_tile: Any, speedup: float, samples: int) -> None:

@@ -2,6 +2,11 @@
 runtime telemetry, online plan refinement. See ``repro.serve.scheduler``
 for the admission story and ``repro.serve.refine`` for the telemetry ->
 plan feedback loop."""
+from repro.serve.autoscale import (
+    AutoscalePolicy,
+    ScaleCandidate,
+    ScaleDecision,
+)
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.faults import (
     EngineFault,
@@ -26,6 +31,7 @@ from repro.serve.scheduler import (
 )
 
 __all__ = [
+    "AutoscalePolicy", "ScaleCandidate", "ScaleDecision",
     "Request", "ServeEngine", "FleetRouter", "RouteDecision", "RollDecision",
     "FleetExhausted", "EngineFault", "FaultEvent", "FaultInjector",
     "FaultScript",

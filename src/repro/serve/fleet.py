@@ -114,7 +114,8 @@ class FleetRouter:
     def __init__(self, engines: Mapping[str, ServeEngine],
                  policy: BucketPolicy, tracer=None,
                  watchdog_threshold: int = 8, retry_budget: int = 2,
-                 injector: Optional[FaultInjector] = None):
+                 injector: Optional[FaultInjector] = None,
+                 autoscaler=None):
         if not engines:
             raise ValueError("FleetRouter needs at least one engine")
         self.engines: Dict[str, ServeEngine] = dict(engines)
@@ -160,27 +161,62 @@ class FleetRouter:
         self.recoveries = 0
         self.steals = 0
         self.lost = 0
+        # Finished results preserved across join-time engine replacement:
+        # fid -> tokens. A joiner reusing a dead instance's name replaces
+        # the engine object, and with it the old engine's _finished list —
+        # requests that completed BEFORE the failure must stay resolvable
+        # through results() or the zero-loss invariant silently breaks.
+        self._retired_results: Dict[int, List[int]] = {}
+        # instance -> status it held when it failed ("live"/"draining").
+        # A scripted recover restores THIS status, so an instance that
+        # stalled mid-drain resumes draining instead of re-entering
+        # rotation (which would cancel the drain the operator requested).
+        self._pre_fail: Dict[str, str] = {}
+        # -- autoscaling ----------------------------------------------------
+        # AutoscalePolicy (repro.serve.autoscale) or None. Consulted at the
+        # end of every step_all, after recovery/steal/drain bookkeeping.
+        self.autoscaler = autoscaler
+        # Powered instance-steps (live + draining), the capacity-cost
+        # denominator the autoscale bench compares against a static fleet.
+        self.instance_steps = 0
+        # Cumulative routed-traffic mix: bucket -> count, plus the
+        # max_new_tokens running sum — the policy windows these to price
+        # candidates against the CURRENT mix, not a static ranking.
+        self._mix_counts: Dict[int, int] = {}
+        self._mix_new_tokens = 0
+        self._mix_n = 0
+        # Pricing engines for scale candidates (one per candidate, built
+        # lazily, never joined or stepped — they only feed the cost model).
+        self._cand_engines: Dict[str, ServeEngine] = {}
 
     # -- cost model ----------------------------------------------------------
     def _phase_cost(self, name: str, kind: str, length: int) -> float:
+        return self._phase_cost_for(self.engines[name], kind, length, name)
+
+    def _phase_cost_for(self, eng: ServeEngine, kind: str, length: int,
+                        cache_name: str) -> float:
         """Estimated seconds of one prefill (kind="prefill" for monolithic,
         "chunked_prefill" for the chunk-decomposed cell, "packed_prefill"
         for the step-packed cell, all batch 1) or one decode step
-        (kind="decode", the engine's slot batch) on ``name``.
+        (kind="decode", the engine's slot batch) on ``eng``.
+
+        ``eng`` need not be a fleet member: the autoscaler prices *scale
+        candidates* through the same path, each against its own plan
+        artifact and hardware (``cache_name`` keys the cost cache — member
+        names for fleet engines, ``"cand:<name>"`` for candidates).
 
         The packed cell is scored against a fixed round of
         ``PACK_ROUND_SEGS`` segments (that is what makes pack widths
         comparable in the sweep), so its score is divided back to ONE
         request here — keeping every kind's cost in per-request seconds.
         """
-        key = (name, kind, length)
+        key = (cache_name, kind, length)
         hit = self._cell_cost.get(key)
         if hit is not None:
             return hit
         from repro.kernels.flash_attention.ops import PACK_ROUND_SEGS
         from repro.launch.specs import kernel_problems
 
-        eng = self.engines[name]
         batch = eng.slots if kind == "decode" else 1
         dtype = jnp.dtype(eng.dtype).name
         total = 0.0
@@ -214,13 +250,24 @@ class FleetRouter:
         width — so the estimate reflects how each engine will actually run
         the request.
         """
-        eng = self.engines[name]
+        return self.service_score_for(self.engines[name], bucket,
+                                      max_new_tokens, cache_name=name)
+
+    def service_score_for(self, eng: ServeEngine, bucket: int,
+                          max_new_tokens: int,
+                          cache_name: Optional[str] = None) -> float:
+        """:meth:`service_score` for an arbitrary engine — fleet member or
+        not. The autoscaler prices scale *candidates* here, so a joiner's
+        cost comes from its own plan artifact before it ever joins."""
+        if cache_name is None:
+            cache_name = f"id:{id(eng)}"
         prefill_kind = ("packed_prefill" if eng.pack_prefill
                         else "chunked_prefill" if eng.chunk_prefill
                         else "prefill")
-        return (self._phase_cost(name, prefill_kind, bucket)
+        return (self._phase_cost_for(eng, prefill_kind, bucket, cache_name)
                 + max_new_tokens
-                * self._phase_cost(name, "decode", eng.max_len))
+                * self._phase_cost_for(eng, "decode", eng.max_len,
+                                       cache_name))
 
     def _load(self, name: str) -> float:
         """Backlog pressure in slot-equivalents.
@@ -251,23 +298,36 @@ class FleetRouter:
         return (busy + frac) / max(eng.slots, 1)
 
     # -- observability -------------------------------------------------------
+    def _routable(self) -> List[str]:
+        """Instances that can take new work right now (status "live").
+        Dead/drained/stalled members keep their engines around for result
+        resolution but must never be *recommended* — a placement table
+        pointing at a dead instance is an operator trap."""
+        return [n for n in sorted(self.engines) if self.status[n] == "live"]
+
     def placement_table(self, max_new_tokens: int = 16) -> Dict[int, str]:
-        """Pure-cost best instance per bucket edge (no load term) — the
-        paper's per-model-optimum claim at placement granularity."""
+        """Pure-cost best ROUTABLE instance per bucket edge (no load term)
+        — the paper's per-model-optimum claim at placement granularity.
+        Empty when no instance is live."""
+        live = self._routable()
+        if not live:
+            return {}
         table = {}
         for edge in self.policy.edges:
             table[edge] = min(
-                self.engines,
+                live,
                 key=lambda n: (self.service_score(n, edge, max_new_tokens), n))
         return table
 
     def tile_table(self, bucket: int) -> Dict[str, Dict[str, str]]:
-        """instance -> kernel -> resolved prefill tile at this bucket edge
-        (exposes that the same shape wants different tiles per model)."""
+        """routable instance -> kernel -> resolved prefill tile at this
+        bucket edge (exposes that the same shape wants different tiles per
+        model)."""
         from repro.launch.specs import resolve_model_tiles
 
         out: Dict[str, Dict[str, str]] = {}
-        for name, eng in self.engines.items():
+        for name in self._routable():
+            eng = self.engines[name]
             if eng.plans is None:
                 continue
             with warnings.catch_warnings():
@@ -316,6 +376,11 @@ class FleetRouter:
                 continue
             fid = self._register_admit(name, rid, prompt, max_new_tokens,
                                        priority, deadline)
+            # Traffic-mix accounting (admits only, never retries/steals —
+            # a recovered request is the same traffic, not new demand).
+            self._mix_counts[bucket] = self._mix_counts.get(bucket, 0) + 1
+            self._mix_new_tokens += max_new_tokens
+            self._mix_n += 1
             decision = RouteDecision(
                 rid=rid, instance=name, bucket=bucket,
                 score=score, scores=scores, fid=fid)
@@ -377,14 +442,22 @@ class FleetRouter:
                 elif (ev.action == "recover"
                       and self.status.get(ev.instance) == "stalled"):
                     # The wedge cleared; the instance was already evicted,
-                    # so it rejoins empty and can take new work.
-                    self.status[ev.instance] = "live"
+                    # so it rejoins empty. Recovery restores the status it
+                    # held BEFORE the stall: an instance that stalled while
+                    # draining resumes draining (and, being empty, retires
+                    # on this step's _finish_drains) instead of silently
+                    # re-entering rotation and cancelling the drain.
+                    self.status[ev.instance] = self._pre_fail.pop(
+                        ev.instance, "live")
                     self._progress.pop(ev.instance, None)
         total = 0
         for name in sorted(self.engines):
             st = self.status[name]
             if st in ("dead", "drained", "stalled"):
                 continue
+            # Powered instance-step: this member occupies hardware this
+            # step whether it is serving or finishing a drain.
+            self.instance_steps += 1
             inj = self.injector
             if inj is not None and inj.is_killed(name):
                 self._mark_failed(name, "dead", via="liveness")
@@ -406,6 +479,8 @@ class FleetRouter:
         self._requeue_orphans()
         self._steal()
         self._finish_drains()
+        if self.autoscaler is not None:
+            self.autoscaler.observe(self, self._steps)
         return total + len(self._orphans)
 
     def _watch(self, name: str) -> None:
@@ -432,6 +507,7 @@ class FleetRouter:
         request set (queued + in-flight) for recovery on survivors. Pool
         pages are released refcount-balanced by the eviction; recovery
         re-prefills from original prompts, never from the dead caches."""
+        self._pre_fail[name] = self.status[name]
         self.status[name] = status
         self._progress.pop(name, None)
         if self._trace is not None:
@@ -544,13 +620,22 @@ class FleetRouter:
         own hardware — a heterogeneous joiner prices (and runs) every
         bucket with its own tiles, and routing starts sending it work on
         the next ``route``/steal. Reusing the name of a dead or drained
-        instance replaces it."""
+        instance replaces it — but never its history: results that
+        finished on the old engine BEFORE it failed are retired into fleet
+        bookkeeping first, so ``results()`` keeps resolving them."""
         if name in self.engines and self.status.get(name) not in (
                 "dead", "drained"):
             raise ValueError(f"instance {name!r} is already active")
+        old = self.engines.get(name)
+        if old is not None:
+            for req in old._finished:
+                fid = self._rid_map.pop((name, req.rid), None)
+                if fid is not None:
+                    self._retired_results[fid] = list(req.out_tokens)
         self.engines[name] = engine
         self.status[name] = "live"
         self._progress.pop(name, None)
+        self._pre_fail.pop(name, None)
         for key in [k for k in self._cell_cost if k[0] == name]:
             del self._cell_cost[key]
         if self._trace is not None:
@@ -599,6 +684,109 @@ class FleetRouter:
             if self._trace is not None:
                 self._trace.steal(fr.fid, src, dst)
 
+    # -- autoscale adapter protocol ------------------------------------------
+    # The surface repro.serve.autoscale.AutoscalePolicy consumes. Kept
+    # deliberately small and duck-typed so the million-request queueing
+    # simulator in benchmarks/bench_autoscale.py can implement the same
+    # protocol and exercise the REAL policy without real engines.
+    def live_instances(self) -> List[str]:
+        return [n for n in sorted(self.engines) if self.status[n] == "live"]
+
+    def known_instances(self) -> set:
+        return set(self.engines)
+
+    def instance_hardware(self, name: str) -> Optional[str]:
+        eng = self.engines.get(name)
+        return eng.hardware.name if eng is not None else None
+
+    def queue_depths(self) -> Dict[str, int]:
+        """Queued (admitted-but-not-started) requests per instance — the
+        backlog the policy reads as load pressure."""
+        return {name: eng.scheduler.pending()
+                for name, eng in sorted(self.engines.items())}
+
+    def ttft_marks(self) -> Dict[str, Dict[object, int]]:
+        """Opaque cursor for :meth:`ttft_window_since` (per-instance
+        ``ServeMetrics.ttft_counts`` marks)."""
+        return {name: eng.metrics.ttft_counts()
+                for name, eng in self.engines.items()}
+
+    def ttft_window_since(self, marks) -> Tuple[List[float], bool]:
+        """First-token latencies recorded fleet-wide since ``marks``
+        (None = everything), plus a flag when any instance's circular
+        sample buffer outgrew the window (the window silently misses
+        samples — the policy treats its p95 as untrustworthy only insofar
+        as it is surfaced in the decision's signal snapshot)."""
+        samples: List[float] = []
+        clipped = False
+        for name, eng in sorted(self.engines.items()):
+            mark = (marks or {}).get(name)
+            s, c = eng.metrics.ttft_window(mark)
+            samples.extend(s)
+            clipped = clipped or c
+        return samples, clipped
+
+    def traffic_mix(self) -> Tuple[Dict[int, int], int, int]:
+        """Cumulative routed mix: (bucket -> admits, sum of
+        max_new_tokens, admit count). The policy windows successive
+        snapshots to price capacity against CURRENT demand."""
+        return dict(self._mix_counts), self._mix_new_tokens, self._mix_n
+
+    def pool_occupancy(self) -> float:
+        """Max used/total page fraction over live paged instances (0.0
+        when nothing is paged) — KV-pressure trigger for scale-up."""
+        occ = 0.0
+        for name in self.live_instances():
+            pool = self.engines[name].pool
+            if pool is not None and pool.n_pages:
+                occ = max(occ, pool.used_pages / pool.n_pages)
+        return occ
+
+    def orphan_count(self) -> int:
+        return len(self._orphans)
+
+    def price_instance(self, name: str, mix: Mapping[int, int],
+                       avg_new_tokens: int) -> float:
+        """Mix-weighted service seconds per request on a fleet member."""
+        return self._mix_price(self.engines[name], mix, avg_new_tokens, name)
+
+    def price_candidate(self, candidate, mix: Mapping[int, int],
+                        avg_new_tokens: int) -> float:
+        """Mix-weighted service seconds per request on a scale candidate,
+        from the candidate's OWN plan artifact — one pricing engine is
+        built per candidate and cached; it never joins and never steps."""
+        eng = self._cand_engines.get(candidate.name)
+        if eng is None:
+            eng = candidate.make_engine(f"price:{candidate.name}")
+            self._cand_engines[candidate.name] = eng
+        return self._mix_price(eng, mix, avg_new_tokens,
+                               f"cand:{candidate.name}")
+
+    def _mix_price(self, eng: ServeEngine, mix: Mapping[int, int],
+                   avg_new_tokens: int, cache_name: str) -> float:
+        """Expected service seconds over a bucket mix; empty mix (no
+        traffic observed yet) prices a uniform mix over the bucket edges."""
+        if not mix:
+            mix = {edge: 1 for edge in self.policy.edges}
+        total_w = sum(mix.values())
+        return sum(
+            w * self.service_score_for(eng, b, avg_new_tokens, cache_name)
+            for b, w in sorted(mix.items())) / max(total_w, 1)
+
+    def scale_join(self, name: str, engine: ServeEngine) -> None:
+        self.join(name, engine)
+
+    def scale_drain(self, name: str) -> None:
+        self.drain(name)
+
+    def record_autoscale(self, decision) -> None:
+        """Trace hook: every policy decision lands on the fleet lane with
+        the full signal snapshot that triggered it."""
+        if self._trace is not None:
+            self._trace.autoscale(decision.action, decision.instance,
+                                  decision.hardware, decision.reason,
+                                  decision.signals)
+
     def pending(self) -> int:
         return (sum(eng.scheduler.pending() for eng in self.engines.values())
                 + len(self._orphans))
@@ -628,8 +816,9 @@ class FleetRouter:
         """fid -> generated tokens for every finished request the fleet
         tracks (routed or absorbed). The basis for the chaos bench's
         zero-loss / zero-duplication / token-parity assertions: each fid
-        appears at most once because rid mappings move with the request."""
-        out: Dict[int, List[int]] = {}
+        appears at most once because rid mappings move with the request
+        (and results retired at join-time replacement stay resolvable)."""
+        out: Dict[int, List[int]] = dict(self._retired_results)
         for name, eng in self.engines.items():
             for req in eng._finished:
                 fid = self._rid_map.get((name, req.rid))
@@ -715,5 +904,8 @@ class FleetRouter:
             "orphans": len(self._orphans),
             "tokens_discarded": sum(fr.tokens_discarded
                                     for fr in self._fleet.values()),
+            "instance_steps": self.instance_steps,
         }
+        if self.autoscaler is not None:
+            out["autoscale"] = self.autoscaler.as_dict()
         return out

@@ -268,6 +268,27 @@ def test_fleet_tiles_differ_per_hardware(fleet):
     assert diff, "no bucket resolved different tiles across hardware models"
 
 
+def test_fleet_tables_exclude_unroutable(fleet):
+    """Regression: placement_table/tile_table used to rank over ALL
+    engines including dead/drained/stalled ones. A fresh router over the
+    same plan-bearing engines (status is per-router; the shared fixture
+    stays untouched) must drop unroutable members from both tables."""
+    from repro.serve import FleetRouter
+
+    r = FleetRouter(fleet.engines, fleet.policy)
+    names = set(fleet.engines)
+    assert set(r.placement_table(4).values()) <= names
+    assert set(r.tile_table(16)) == names
+    r.status["tpu_v4"] = "dead"
+    assert set(r.placement_table(4).values()) == {"tpu_v5e"}, \
+        "placement table recommends a dead instance"
+    assert set(r.tile_table(16)) == {"tpu_v5e"}, \
+        "tile table reports a dead instance"
+    r.status["tpu_v5e"] = "stalled"
+    assert r.placement_table(4) == {}
+    assert r.tile_table(16) == {}
+
+
 def test_fleet_load_spreads_routing(fleet):
     # Saturate the cheap instance's slots+queue; the loaded score must
     # eventually divert a same-bucket request to the other instance.

@@ -356,3 +356,160 @@ def test_run_until_done_raises_fleet_exhausted(smoke_model):
     counts = exc.value.pending["a"]
     assert counts["in_flight"] + counts["queued"] >= 1
     assert math.isfinite(exc.value.orphans)
+
+
+# ---------------------------------------------------------------------------
+# Fleet-bookkeeping regressions: rejoin history, table filtering,
+# drain-stall-recover, orphan-churn accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_rejoin_dead_name_preserves_finished_results(smoke_model):
+    """Reusing a dead instance's name used to replace its engine AND
+    silently discard every result that finished on it before the failure
+    (the rid map pointed into the new engine, where those rids never
+    existed). Rejoin must retire the old engine's finished work into
+    fleet bookkeeping first: results() keeps resolving the full fid set."""
+    cfg, params = smoke_model
+    router = _fleet(cfg, params, slots=1,
+                    injector=FaultInjector(FaultScript([
+                        FaultEvent(4, "kill", "b")])))
+    for p in _prompts(cfg, 6):
+        assert router.route(p, max_new_tokens=NEW_TOKENS) is not None
+    _drain(router)
+    assert router.status["b"] == "dead"
+    old_b = router.engines["b"]
+    if not old_b._finished:
+        pytest.skip("nothing finished on b before the kill")
+    before = router.results()
+    assert set(before) == set(range(6)) and router.lost == 0
+    policy = router.policy
+    router.join("b", ServeEngine(cfg, params, max_len=max(EDGES) + 16,
+                                 slots=1,
+                                 scheduler=ShapeBucketScheduler(policy),
+                                 instance="b"))
+    assert router.status["b"] == "live"
+    assert router.results() == before, \
+        "rejoin under a dead name discarded the old engine's finished work"
+    # The replacement serves new work under the same name, and both eras'
+    # results coexist.
+    fid = router.route(_prompts(cfg, 1, seed=9)[0],
+                       max_new_tokens=NEW_TOKENS)
+    assert fid is not None
+    _drain(router)
+    assert set(router.results()) == set(range(7))
+
+
+@pytest.mark.slow
+def test_placement_tables_exclude_unroutable(smoke_model):
+    """placement_table used to rank over every engine ever seen —
+    recommending dead, drained, or stalled members. It must cover exactly
+    the routable (live) set. (The tile_table counterpart needs
+    plan-bearing engines; see test_scheduler's
+    ``test_fleet_tables_exclude_unroutable``.)"""
+    cfg, params = smoke_model
+    router = _fleet(cfg, params,
+                    injector=FaultInjector(FaultScript([
+                        FaultEvent(1, "kill", "b")])))
+    table = router.placement_table()
+    assert set(table) == set(EDGES)
+    assert set(table.values()) <= {"a", "b"}
+    router.step_all()                        # the kill lands
+    assert router.status["b"] == "dead"
+    assert "b" in router.engines             # kept for result resolution...
+    table = router.placement_table()
+    assert set(table) == set(EDGES)
+    assert set(table.values()) == {"a"}, \
+        f"placement table recommends a dead instance: {table}"
+    router.drain("a")                        # draining is not routable either
+    assert router.placement_table() == {}
+    assert router.tile_table(min(EDGES)) == {}
+
+
+@pytest.mark.slow
+def test_recover_while_draining_resumes_drain(smoke_model):
+    """An instance that stalls mid-drain and then receives a scripted
+    recover used to flip back to "live" — silently cancelling the drain
+    and re-entering rotation. Recovery must restore the pre-stall status:
+    a draining instance resumes draining (and, evicted-empty, retires)."""
+    cfg, params = smoke_model
+    router = _fleet(cfg, params, slots=1, watchdog=2,
+                    injector=FaultInjector(FaultScript([
+                        FaultEvent(3, "stall", "b"),
+                        FaultEvent(9, "recover", "b")])))
+    for p in _prompts(cfg, 6):
+        assert router.route(p, max_new_tokens=NEW_TOKENS) is not None
+    router.step_all()
+    router.step_all()
+    router.drain("b")
+    assert router.status["b"] == "draining"
+    saw_stalled = False
+    for _ in range(200):
+        progressed = router.step_all()
+        saw_stalled = saw_stalled or router.status["b"] == "stalled"
+        assert router.status["b"] != "live", \
+            "recover flipped a draining instance back into rotation"
+        if not progressed and not router.pending():
+            break
+    if not saw_stalled:
+        pytest.skip("b finished draining before the stall could wedge it")
+    assert router.status["b"] == "drained"
+    assert set(router.results()) == set(range(6)) and router.lost == 0
+
+
+@pytest.mark.slow
+def test_orphan_churn_accounting_consistent(smoke_model):
+    """Repeated kill / rejoin cycles on the same name: every counter stays
+    consistent — a fid evicted twice is lost at most once, lost equals the
+    retry_budget reject count, and discarded-token accounting matches the
+    per-request records."""
+    cfg, params = smoke_model
+    policy_holder = {}
+
+    def mk():
+        return ServeEngine(cfg, params, max_len=max(EDGES) + 16, slots=1,
+                           scheduler=ShapeBucketScheduler(
+                               policy_holder["policy"]),
+                           instance="b")
+
+    router = _fleet(cfg, params, slots=1, budget=1,
+                    injector=FaultInjector(FaultScript([
+                        FaultEvent(2, "kill", "b"),
+                        FaultEvent(6, "recover", "b"),
+                        FaultEvent(6, "join", "b", make_engine=mk),
+                        FaultEvent(9, "kill", "b")])))
+    policy_holder["policy"] = router.policy
+    for p in _prompts(cfg, 8):
+        assert router.route(p, max_new_tokens=NEW_TOKENS) is not None
+    _drain(router)
+    m = router.metrics()["fleet"]
+    lost_fids = {fid for fid, fr in router._fleet.items() if fr.lost}
+    assert len(lost_fids) == router.lost == m["lost"], \
+        "a fid was counted lost more than once across evictions"
+    assert router.rejects.get("retry_budget", 0) == router.lost
+    assert m["tokens_discarded"] == sum(
+        fr.tokens_discarded for fr in router._fleet.values())
+    assert m["recoveries"] == router.recoveries >= 1
+    assert m["orphans"] == 0, "drained fleet still holds orphans"
+    # Every routed request is accounted exactly once: finished XOR lost.
+    assert set(router.results()) == set(range(8)) - lost_fids
+    assert all(fr.retries <= 2 for fr in router._fleet.values()), \
+        "a request was retried past both kill waves"
+
+
+@pytest.mark.slow
+def test_fleet_exhausted_orphans_match_metrics(smoke_model):
+    """FleetExhausted.orphans is the same number metrics() reports —
+    one orphan count, not two drifting ones."""
+    cfg, params = smoke_model
+    router = _fleet(cfg, params,
+                    injector=FaultInjector(FaultScript([
+                        FaultEvent(2, "kill", "a"),
+                        FaultEvent(2, "kill", "b")])))
+    for p in _prompts(cfg, 4):
+        assert router.route(p, max_new_tokens=NEW_TOKENS) is not None
+    with pytest.raises(FleetExhausted) as exc:
+        router.run_until_done(max_steps=8)
+    assert exc.value.orphans > 0
+    assert exc.value.orphans == router.metrics()["fleet"]["orphans"]
+    assert exc.value.orphans == router.orphan_count()
